@@ -1,0 +1,44 @@
+"""Paper Fig. 2b — copy-stencil bandwidth vs number of PEs.
+
+On the FPGA each PE owns one HBM pseudo-channel (12.8 GB/s); saturation at
+~16 PEs.  TPU analogue: the copy kernel's achieved bandwidth as a function
+of parallel grid tiles ("PEs"), from the perf model; wall-clock column is
+the measured jnp copy on this CPU, which also yields the CPU's measured
+memory bandwidth for calibration.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, time_fn
+from repro.core import hierarchy as hw
+from repro.core import perfmodel, tiling
+from repro.kernels.copy_stencil.ref import copy_stencil
+
+
+def run():
+    rng = np.random.default_rng(0)
+    grid = (64, 256, 256)
+    src = jnp.asarray(rng.normal(size=grid).astype(np.float32))
+    t_us = time_fn(jax.jit(copy_stencil), src)
+    nbytes = 2 * src.size * 4
+    cpu_bw = nbytes / (t_us * 1e-6) / 1e9
+    emit("fig2b/copy_cpu", t_us, f"cpu_bw={cpu_bw:.1f}GB/s")
+
+    # PE scaling model: tiles processed in parallel up to HBM saturation —
+    # mirrors the paper's per-channel saturation at 16 PEs.
+    hier = hw.tpu_v5e()
+    total_bytes = 2 * np.prod(grid) * 4
+    channel_bw = hier.hbm.bandwidth_bytes_per_s / 16   # "channel" analogue
+    for pes in (1, 2, 4, 8, 16, 32):
+        bw = min(pes * channel_bw, hier.hbm.bandwidth_bytes_per_s)
+        t = total_bytes / bw
+        emit(f"fig2b/copy_model_pe{pes}", t * 1e6,
+             f"model_bw={bw / 1e9:.0f}GB/s sat={'yes' if bw >= hier.hbm.bandwidth_bytes_per_s else 'no'}")
+
+
+if __name__ == "__main__":
+    run()

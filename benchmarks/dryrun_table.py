@@ -1,0 +1,49 @@
+"""Aggregate the dry-run JSON cache into the roofline table (EXPERIMENTS.md
+§Roofline source of truth)."""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import emit
+
+DIR = os.path.join(os.path.dirname(__file__), "results", "dryrun")
+
+
+def rows(variant="baseline", mesh="single"):
+    out = []
+    for path in sorted(glob.glob(os.path.join(
+            DIR, f"*__{mesh}__{variant}.json"))):
+        with open(path) as f:
+            out.append(json.load(f))
+    return out
+
+
+def run():
+    n_ok = n_skip = n_err = 0
+    for r in rows():
+        tag = f"dryrun/{r['arch']}_{r['shape']}_{r['mesh']}"
+        if r["status"] == "ok":
+            n_ok += 1
+            rf = r["roofline"]
+            emit(tag, rf["step_time_bound_s"] * 1e6,
+                 f"dom={rf['dominant']} "
+                 f"frac={rf['roofline_fraction']:.3f} "
+                 f"useful={rf['useful_flops_ratio']:.2f} "
+                 f"fit={r['memory'].get('fits_16g')}")
+        elif r["status"] == "skipped":
+            n_skip += 1
+            emit(tag, 0.0, f"SKIP: {r['reason']}")
+        else:
+            n_err += 1
+            emit(tag, 0.0, f"ERROR: {r.get('error', '')[:80]}")
+    for r in rows(mesh="multi"):
+        if r["status"] == "ok":
+            n_ok += 1
+    emit("dryrun/summary", 0.0, f"ok={n_ok} skip={n_skip} err={n_err}")
+
+
+if __name__ == "__main__":
+    run()

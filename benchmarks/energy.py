@@ -1,0 +1,39 @@
+"""Paper Fig. 8 — energy efficiency (GFLOPS/Watt) vs PEs.
+
+Model-derived (this container has no power sensors): per-level pJ/byte
+coefficients (hierarchy.py) + static chip power, mirroring the paper's
+observation that every extra HBM channel costs ~1 W and that peak energy
+efficiency occurs below the peak-performance PE count.
+Paper reference points: vadvc 1.61 GFLOPS/W, hdiff 21.01 GFLOPS/W.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit
+from repro.core import hierarchy as hw
+from repro.core import perfmodel, tiling
+from repro.core.autotune import tune
+
+PAPER = {"vadvc": 1.61, "hdiff": 21.01}
+GRID = (64, 256, 256)
+
+
+def run():
+    for op in (tiling.VADVC, tiling.HDIFF):
+        best = None
+        for chips in (1, 2, 4, 8, 16):
+            tuned = tune(op, GRID, "float32", chips=chips)
+            est = perfmodel.estimate(tuned.plan, chips=chips)
+            gpw = est.plan.flops_total / est.time_s / 1e9 / (
+                est.energy_j / est.time_s)
+            best = max(best or 0.0, gpw)
+            emit(f"fig8/{op.name}_chips{chips}", est.time_s * 1e6,
+                 f"gflops_per_watt={gpw:.2f}")
+        emit(f"fig8/{op.name}_summary", 0.0,
+             f"model_best={best:.2f}GF/W paper_fpga={PAPER[op.name]}GF/W")
+
+
+if __name__ == "__main__":
+    run()

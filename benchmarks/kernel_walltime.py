@@ -1,0 +1,74 @@
+"""Measured wall-clock of every framework layer on this CPU: kernels
+(jnp refs + Pallas interpret), dycore step, reduced-config train step and
+decode step — the 'it actually runs' numbers behind the model projections."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, time_fn
+
+
+def run():
+    rng = np.random.default_rng(0)
+
+    # kernels: pallas interpret vs jnp ref (small shapes; interpret is an
+    # emulation, timing recorded for completeness not for speed claims)
+    from repro.kernels.hdiff import ref as href
+    from repro.kernels.hdiff.hdiff import hdiff_pallas
+    src = jnp.asarray(rng.normal(size=(8, 64, 64)).astype(np.float32))
+    emit("wall/hdiff_jnp_8x64x64", time_fn(jax.jit(href.hdiff), src))
+    emit("wall/hdiff_pallas_interp", time_fn(
+        jax.jit(lambda s: hdiff_pallas(s, ty=8, interpret=True)), src))
+
+    from repro.kernels.vadvc import ref as vref
+    us, up, ut, uts = (jnp.asarray(
+        rng.normal(size=(16, 32, 32)).astype(np.float32)) for _ in range(4))
+    wcon = jnp.asarray(rng.uniform(-0.2, 0.2, size=(16, 32, 33))
+                       .astype(np.float32))
+    emit("wall/vadvc_jnp_16x32x32",
+         time_fn(jax.jit(vref.vadvc), us, wcon, up, ut, uts))
+
+    # weather dycore step
+    from repro.weather import dycore, fields
+    st = fields.initial_state(jax.random.PRNGKey(0), (16, 64, 64))
+    emit("wall/dycore_step_16x64x64", time_fn(dycore.dycore_step, st))
+
+    # reduced-config LM train + decode
+    from repro.configs import registry
+    from repro.models import api
+    from repro.train import loop as tloop, optim
+    from repro.launch.mesh import make_mesh
+    cfg = registry.reduced_config(registry.get_config("tinyllama-1.1b"))
+    model = api.build(cfg)
+    mesh = make_mesh((1, 1), ("data", "model"))
+    params = model.init(jax.random.PRNGKey(0))
+    opt_state = optim.init_opt_state(params)
+    _, jit_for, _ = tloop.make_train_step(model, mesh,
+                                          optim.OptConfig(total_steps=10))
+    batch = {"tokens": jnp.asarray(
+        rng.integers(0, cfg.vocab_size, size=(4, 64)).astype(np.int32))}
+    spec = jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype),
+                        batch)
+    step = jit_for(spec)
+    # donated args: rebuild state each call inside the timer would skew —
+    # time with donation disabled variant
+    step_nd, _, _ = tloop.make_train_step(model, mesh,
+                                          optim.OptConfig(total_steps=10),
+                                          donate=False)
+    step_nd_j = jax.jit(step_nd)
+    emit("wall/train_step_smoke", time_fn(step_nd_j, params, opt_state,
+                                          batch))
+
+    logits, cache = model.prefill(params, {"tokens": batch["tokens"]},
+                                  max_len=96)
+    dec = jax.jit(lambda p, c, t, i: model.decode_step(p, c, t, i))
+    tok = batch["tokens"][:, :1]
+    emit("wall/decode_step_smoke", time_fn(dec, params, cache, tok,
+                                           jnp.int32(64)))
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,92 @@
+"""Render EXPERIMENTS.md tables from the dry-run JSON cache.
+
+Usage: PYTHONPATH=src python -m benchmarks.make_tables [variant]
+Prints markdown: §Dry-run fit table, §Roofline term table, §Perf variant
+comparisons (baseline vs every non-baseline variant present per cell).
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+import sys
+
+DIR = os.path.join(os.path.dirname(__file__), "results", "dryrun")
+
+
+def load(mesh=None, variant="baseline"):
+    out = {}
+    for p in sorted(glob.glob(os.path.join(DIR, "*.json"))):
+        d = json.load(open(p))
+        if d.get("variant") != variant:
+            continue
+        if mesh and d["mesh"] != mesh:
+            continue
+        out[(d["arch"], d["shape"], d["mesh"])] = d
+    return out
+
+
+def fmt_bytes(b):
+    return f"{b / 2**30:.2f}"
+
+
+def roofline_table(mesh="single"):
+    rows = load(mesh=mesh)
+    print(f"\n### Roofline — {mesh} pod "
+          f"({'256' if mesh == 'single' else '512'} chips), baseline\n")
+    print("| arch | shape | mb | compute s | memory s | collective s | "
+          "dominant | useful | roofline % | GB/dev | fit |")
+    print("|---|---|---|---|---|---|---|---|---|---|---|")
+    for (arch, shape, _), d in sorted(rows.items()):
+        if d["status"] == "skipped":
+            print(f"| {arch} | {shape} | — | — | — | — | *skipped:"
+                  f" {d['reason']}* | — | — | — | — |")
+            continue
+        if d["status"] != "ok":
+            print(f"| {arch} | {shape} | — | ERROR | | | | | | | |")
+            continue
+        r = d["roofline"]
+        mem = d["memory"]["analytic"]["total"]
+        print(f"| {arch} | {shape} | {d.get('microbatches', 1)} "
+              f"| {r['compute_s']:.3f} | {r['memory_s']:.3f} "
+              f"| {r['collective_s']:.3f} | **{r['dominant']}** "
+              f"| {r['useful_flops_ratio']:.2f} "
+              f"| {100 * r['roofline_fraction']:.2f} "
+              f"| {fmt_bytes(mem)} | {d['memory']['fits_16g']} |")
+
+
+def variant_table():
+    allv = {}
+    for p in sorted(glob.glob(os.path.join(DIR, "*.json"))):
+        d = json.load(open(p))
+        if d["status"] != "ok":
+            continue
+        key = (d["arch"], d["shape"], d["mesh"])
+        allv.setdefault(key, {})[d["variant"]] = d
+    print("\n### §Perf variants (hillclimbed cells)\n")
+    print("| cell | variant | compute s | memory s | collective s | "
+          "dominant | bound s | roofline % |")
+    print("|---|---|---|---|---|---|---|---|")
+    for key, vs in sorted(allv.items()):
+        if len(vs) < 2:
+            continue
+        order = ["baseline"] + sorted(v for v in vs if v != "baseline")
+        for v in order:
+            d = vs[v]
+            r = d["roofline"]
+            cell = f"{key[0]} {key[1]} {key[2]}" if v == "baseline" else ""
+            print(f"| {cell} | {v} | {r['compute_s']:.3f} "
+                  f"| {r['memory_s']:.3f} | {r['collective_s']:.3f} "
+                  f"| {r['dominant']} | {r['step_time_bound_s']:.3f} "
+                  f"| {100 * r['roofline_fraction']:.2f} |")
+
+
+def main():
+    roofline_table("single")
+    roofline_table("multi")
+    variant_table()
+
+
+if __name__ == "__main__":
+    main()

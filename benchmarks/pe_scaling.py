@@ -1,0 +1,58 @@
+"""Paper Fig. 7 — performance scaling with PEs, and domain-size linearity.
+
+(1) Chip/PE scaling of vadvc+hdiff throughput from the perf model with the
+    halo-exchange collective term included (the distributed dycore's real
+    communication), reproducing the paper's linear-scaling claim for
+    channel-per-PE designs.
+(2) Measured runtime vs domain size on this CPU (paper §4.3: "runtime
+    scales linearly and overall GFLOP/s remains constant").
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, time_fn
+from repro.core import hierarchy as hw
+from repro.core import perfmodel, tiling
+from repro.core.autotune import tune
+from repro.kernels.hdiff import ref as href
+from repro.kernels.vadvc import ref as vref
+
+
+def run():
+    # -- (1) PE/chip scaling with halo collectives --------------------------
+    grid = (64, 1024, 1024)
+    for op in (tiling.VADVC, tiling.HDIFF):
+        t1 = None
+        for chips in (1, 4, 16, 64, 256):
+            tuned = tune(op, grid, "float32", chips=chips)
+            # halo bytes: 2-deep ring on the local slab boundary per chip
+            ny_loc = grid[1] / max(int(np.sqrt(chips)), 1)
+            halo_bytes = 2 * 2 * (ny_loc + ny_loc) * grid[0] * 4 * (
+                op.fields_in)
+            est = perfmodel.estimate(tuned.plan, chips=chips,
+                                     collective_bytes=halo_bytes * chips)
+            t1 = t1 or est.time_s
+            emit(f"fig7/{op.name}_chips{chips}", est.time_s * 1e6,
+                 f"gflops={est.gflops:.0f} speedup={t1 / est.time_s:.1f}x "
+                 f"eff={t1 / est.time_s / chips * 100:.0f}%")
+
+    # -- (2) measured domain-size linearity ---------------------------------
+    rng = np.random.default_rng(0)
+    base = None
+    for n in (64, 128, 256):
+        shape = (16, n, n)
+        src = jnp.asarray(rng.normal(size=shape).astype(np.float32))
+        t = time_fn(jax.jit(href.hdiff), src)
+        pts = float(np.prod(shape))
+        base = base or t / pts
+        emit(f"fig7/hdiff_domain_{n}", t,
+             f"us_per_point={t / pts:.5f} linear_dev="
+             f"{(t / pts) / base:.2f}x")
+
+
+if __name__ == "__main__":
+    run()

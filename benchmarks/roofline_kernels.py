@@ -1,0 +1,59 @@
+"""Paper Fig. 1 — roofline placement of vadvc / hdiff / copy.
+
+Computes each kernel's arithmetic intensity and its position under the
+POWER9 roofline (the paper's measured baseline points) and the TPU v5e
+roofline (our target platform), from the analytic op specs; the wall-clock
+column is the measured jnp reference on this CPU (labeled 'cpu-jnp').
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, time_fn
+from repro.core import hierarchy as hw
+from repro.core import perfmodel, tiling
+from repro.core.autotune import tune
+from repro.kernels.hdiff import ref as href
+from repro.kernels.vadvc import ref as vref
+
+GRID = (64, 256, 256)    # the paper's 256x256x64 domain
+
+# Paper Fig. 1 measured POWER9 numbers (GFLOP/s, 64 threads)
+PAPER_POWER9 = {"vadvc": 29.1, "hdiff": 58.5}
+
+
+def run():
+    rng = np.random.default_rng(0)
+    nz, ny, nx = GRID
+    src = jnp.asarray(rng.normal(size=GRID).astype(np.float32))
+    us, up, ut, uts = (jnp.asarray(rng.normal(size=GRID).astype(np.float32))
+                       for _ in range(4))
+    wcon = jnp.asarray(
+        rng.uniform(-0.2, 0.2, size=(nz, ny, nx + 1)).astype(np.float32))
+
+    hd_t = time_fn(jax.jit(href.hdiff), src)
+    va_t = time_fn(jax.jit(vref.vadvc), us, wcon, up, ut, uts)
+
+    for name, op, t_us in (("hdiff", tiling.HDIFF, hd_t),
+                           ("vadvc", tiling.VADVC, va_t)):
+        ai32 = op.arithmetic_intensity("float32")
+        tuned = tune(op, GRID, "float32")
+        est = tuned.est
+        frac = perfmodel.roofline_fraction(est)
+        p9_roof = min(hw.POWER9_PEAK_FLOPS,
+                      ai32 * hw.POWER9_DRAM_BW) / 1e9
+        v5e_roof = min(hw.PEAK_FP32_FLOPS, ai32 * hw.HBM_BW) / 1e9
+        emit(f"fig1/{name}", t_us,
+             f"AI={ai32:.2f}flop/B p9_roof={p9_roof:.0f}GF "
+             f"paper_p9={PAPER_POWER9[name]}GF v5e_roof={v5e_roof:.0f}GF "
+             f"model_v5e={est.gflops:.0f}GF frac={frac:.2f}")
+    emit("fig1/machine_balance", 0.0,
+         f"v5e_bf16={hw.tpu_v5e().machine_balance(jnp.bfloat16):.0f}flop/B "
+         f"p9={hw.POWER9_PEAK_FLOPS / hw.POWER9_DRAM_BW:.1f}flop/B")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,28 @@
+"""Benchmark entry point — one section per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV (model-derived values labeled in
+the derived column; this container is CPU-only so TPU numbers are
+dry-run/model projections, wall-clock numbers are real)."""
+
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def main() -> None:
+    from benchmarks import (copy_stencil, dryrun_table, energy,
+                            kernel_walltime, pe_scaling, roofline_kernels,
+                            table3, tile_autotune)
+    print("name,us_per_call,derived")
+    for mod in (roofline_kernels, copy_stencil, tile_autotune, pe_scaling,
+                energy, table3, kernel_walltime, dryrun_table):
+        try:
+            mod.run()
+        except Exception as e:     # keep the suite going; record failure
+            print(f"{mod.__name__},0.0,ERROR:{type(e).__name__}:{e}")
+            traceback.print_exc(file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,41 @@
+"""Paper Table 3 — cross-work hdiff throughput comparison.
+
+Paper entries are hard-coded from Table 3; our row is the model-projected
+TPU v5e hdiff throughput (single chip, auto-tuned tiles) plus the measured
+CPU reference for scale."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, time_fn
+from repro.core import perfmodel, tiling
+from repro.core.autotune import tune
+from repro.kernels.hdiff import ref as href
+
+TABLE3 = [
+    ("NARMADA[129]/XCVU3P", 129.9),
+    ("StencilFlow[43]/Stratix10", 145.0),
+    ("NERO[ours-paper]/XCVU37P", 608.4),
+]
+
+
+def run():
+    grid = (64, 256, 256)
+    tuned = tune(tiling.HDIFF, grid, "float32")
+    est = perfmodel.estimate(tuned.plan)
+    emit("table3/nero_tpu_v5e_model", est.time_s * 1e6,
+         f"gflops={est.gflops:.0f}")
+    rng = np.random.default_rng(0)
+    src = jnp.asarray(rng.normal(size=grid).astype(np.float32))
+    t = time_fn(jax.jit(href.hdiff), src)
+    gf = tiling.HDIFF.flops_per_point * src.size / (t * 1e-6) / 1e9
+    emit("table3/this_cpu_jnp", t, f"gflops={gf:.1f}")
+    for name, gflops in TABLE3:
+        emit(f"table3/{name}", 0.0, f"gflops={gflops}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,61 @@
+"""End-to-end weather driver: ensemble dycore simulation with the paper's
+compound kernels, optionally domain-decomposed over a device mesh.
+
+Run:  PYTHONPATH=src python examples/weather_simulation.py --steps 10
+      XLA_FLAGS=--xla_force_host_platform_device_count=4 \
+        PYTHONPATH=src python examples/weather_simulation.py --mesh 2,2
+"""
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.weather import domain, dycore, fields
+from repro.launch.mesh import make_mesh
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--grid", default="16,64,64")
+    ap.add_argument("--steps", type=int, default=10)
+    ap.add_argument("--ensemble", type=int, default=2)
+    ap.add_argument("--mesh", default="",
+                    help="e.g. 2,2 -> ('data','model') decomposition")
+    args = ap.parse_args()
+
+    grid = tuple(int(x) for x in args.grid.split(","))
+    st = fields.initial_state(jax.random.PRNGKey(0), grid,
+                              ensemble=args.ensemble)
+    print(f"grid={grid} ensemble={args.ensemble} steps={args.steps}")
+
+    if args.mesh:
+        shape = tuple(int(x) for x in args.mesh.split(","))
+        mesh = make_mesh(shape, ("data", "model"))
+        step, spec = domain.make_distributed_step(mesh)
+        st = domain.shard_state(st, mesh, spec)
+        print(f"domain-decomposed over mesh {dict(mesh.shape)}")
+    else:
+        step = dycore.dycore_step
+
+    t0 = time.perf_counter()
+    energy0 = float(sum(jnp.sum(jnp.square(f))
+                        for f in st.fields.values()))
+    for i in range(args.steps):
+        st = step(st)
+    jax.block_until_ready(st.fields["t"])
+    dt = time.perf_counter() - t0
+    energy1 = float(sum(jnp.sum(jnp.square(f)) for f in st.fields.values()))
+    pts = args.ensemble * np.prod(grid) * args.steps
+    print(f"{args.steps} steps in {dt:.2f}s "
+          f"({pts / dt / 1e6:.1f}M point-updates/s)")
+    print(f"field energy {energy0:.1f} -> {energy1:.1f} "
+          f"(diffusion dissipates: {energy1 < energy0})")
+    assert np.isfinite(energy1)
+    print("weather simulation OK")
+
+
+if __name__ == "__main__":
+    main()

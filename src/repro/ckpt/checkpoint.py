@@ -1,0 +1,180 @@
+"""Checkpointing: atomic, keep-N, async save; elastic restore.
+
+Layout: <dir>/step_<n>/arrays.npz + meta.json, written to a tmp dir and
+renamed (atomic on POSIX).  Arrays are saved *unsharded-logical* (gathered),
+so a checkpoint written on one mesh restores onto any other mesh — the
+elastic-scaling path: restore() applies the *current* mesh's shardings.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import ml_dtypes
+import numpy as np
+
+_SEP = "/"
+
+# numpy-native dtype names; everything else (bfloat16, fp8s) is stored as a
+# same-width unsigned-int view + its name in meta.json (np.load would
+# otherwise hand back void dtypes like |V2).
+_NATIVE = frozenset(
+    "bool int8 int16 int32 int64 uint8 uint16 uint32 uint64 "
+    "float16 float32 float64 complex64 complex128".split())
+
+
+def _pack(arrays: dict) -> Tuple[dict, dict]:
+    packed, dtypes = {}, {}
+    for k, v in arrays.items():
+        name = v.dtype.name
+        if name in _NATIVE:
+            packed[k] = v
+        else:
+            packed[k] = v.view(np.dtype(f"u{v.dtype.itemsize}"))
+            dtypes[k] = name
+    return packed, dtypes
+
+
+def _unpack(arr: np.ndarray, name: Optional[str]) -> np.ndarray:
+    if not name:
+        return arr
+    return arr.view(np.dtype(getattr(ml_dtypes, name)))
+
+
+def _flatten(tree) -> dict:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = _SEP.join(str(getattr(k, "key", getattr(k, "idx", k)))
+                        for k in path)
+        flat[key] = np.asarray(jax.device_get(leaf))
+    return flat
+
+
+def _unflatten(template, flat: dict):
+    def one(path, leaf):
+        key = _SEP.join(str(getattr(k, "key", getattr(k, "idx", k)))
+                        for k in path)
+        arr = flat[key]
+        return jnp.asarray(arr, dtype=leaf.dtype if hasattr(leaf, "dtype")
+                           else None)
+    return jax.tree_util.tree_map_with_path(one, template)
+
+
+def save(ckpt_dir: str, step: int, params, opt_state, keep: int = 3):
+    os.makedirs(ckpt_dir, exist_ok=True)
+    final = os.path.join(ckpt_dir, f"step_{step:08d}")
+    tmp = final + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+    arrays = {f"params/{k}": v for k, v in _flatten(params).items()}
+    arrays.update({f"opt/{k}": v for k, v in _flatten(opt_state).items()})
+    packed, dtypes = _pack(arrays)
+    np.savez(os.path.join(tmp, "arrays.npz"), **packed)
+    with open(os.path.join(tmp, "meta.json"), "w") as f:
+        json.dump({"step": step, "n_arrays": len(arrays),
+                   "dtypes": dtypes}, f)
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)
+    _gc(ckpt_dir, keep)
+
+
+def _gc(ckpt_dir: str, keep: int):
+    steps = sorted(all_steps(ckpt_dir))
+    for s in steps[:-keep] if keep else []:
+        shutil.rmtree(os.path.join(ckpt_dir, f"step_{s:08d}"),
+                      ignore_errors=True)
+
+
+def all_steps(ckpt_dir: str):
+    if not os.path.isdir(ckpt_dir):
+        return []
+    out = []
+    for name in os.listdir(ckpt_dir):
+        if name.startswith("step_") and not name.endswith(".tmp"):
+            meta = os.path.join(ckpt_dir, name, "meta.json")
+            if os.path.exists(meta):       # complete checkpoints only
+                out.append(int(name[5:]))
+    return out
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    steps = all_steps(ckpt_dir)
+    return max(steps) if steps else None
+
+
+def restore(ckpt_dir: str, step: int, mesh, p_shard, o_shard
+            ) -> Tuple[Any, Any, int]:
+    """Elastic restore: shardings come from the *current* mesh."""
+    base = os.path.join(ckpt_dir, f"step_{step:08d}")
+    with open(os.path.join(base, "meta.json")) as f:
+        dtypes = json.load(f).get("dtypes", {})
+    with np.load(os.path.join(base, "arrays.npz")) as z:
+        flat = {k: _unpack(z[k], dtypes.get(k)) for k in z.files}
+    p_flat = {k[len("params/"):]: v for k, v in flat.items()
+              if k.startswith("params/")}
+    o_flat = {k[len("opt/"):]: v for k, v in flat.items()
+              if k.startswith("opt/")}
+    params = _unflatten_from_shard_tree(p_shard, p_flat)
+    opt = _unflatten_from_shard_tree(o_shard, o_flat)
+    params = jax.tree.map(jax.device_put, params, p_shard)
+    opt = jax.tree.map(jax.device_put, opt, o_shard)
+    return params, opt, step
+
+
+def _unflatten_from_shard_tree(shard_tree, flat: dict):
+    def one(path, _):
+        key = _SEP.join(str(getattr(k, "key", getattr(k, "idx", k)))
+                        for k in path)
+        return jnp.asarray(flat[key])
+    return jax.tree_util.tree_map_with_path(one, shard_tree)
+
+
+class AsyncSaver:
+    """Overlap checkpoint writes with the next training steps."""
+
+    def __init__(self, ckpt_dir: str, keep: int = 3):
+        self.ckpt_dir = ckpt_dir
+        self.keep = keep
+        self._thread: Optional[threading.Thread] = None
+
+    def save(self, step: int, params, opt_state):
+        self.wait()
+        # device_get on the main thread (jax is not thread-safe for transfers
+        # racing with compute), file I/O on the worker thread.
+        p = _flatten(params)
+        o = _flatten(opt_state)
+
+        def work():
+            final = os.path.join(self.ckpt_dir, f"step_{step:08d}")
+            tmp = final + ".tmp"
+            if os.path.exists(tmp):
+                shutil.rmtree(tmp)
+            os.makedirs(tmp, exist_ok=True)
+            arrays = {f"params/{k}": v for k, v in p.items()}
+            arrays.update({f"opt/{k}": v for k, v in o.items()})
+            packed, dtypes = _pack(arrays)
+            np.savez(os.path.join(tmp, "arrays.npz"), **packed)
+            with open(os.path.join(tmp, "meta.json"), "w") as f:
+                json.dump({"step": step, "n_arrays": len(arrays),
+                           "dtypes": dtypes}, f)
+            if os.path.exists(final):
+                shutil.rmtree(final)
+            os.rename(tmp, final)
+            _gc(self.ckpt_dir, self.keep)
+
+        os.makedirs(self.ckpt_dir, exist_ok=True)
+        self._thread = threading.Thread(target=work, daemon=True)
+        self._thread.start()
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None

@@ -1,0 +1,1 @@
+"""NERO core: near-memory tiling engine, autotuner, perf model, roofline."""

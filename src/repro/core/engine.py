@@ -1,0 +1,117 @@
+"""NeroEngine — the paper's execution model as a first-class API.
+
+    engine = NeroEngine()
+    plan = engine.plan("hdiff", grid_shape=(64, 256, 256), dtype=jnp.float32)
+    out  = engine.run(plan, src)
+
+`plan` runs the multi-objective tile autotuner (the paper's OpenTuner
+stage) once per (op, grid, dtype) and caches the chosen `TilePlan`;
+`run` dispatches to the Pallas TPU kernel with the plan's window as its
+BlockSpec tiling, or to the pure-jnp oracle on hosts without TPU kernels
+(CPU tests, differentiable paths).  Every memory-bound operator the
+framework owns routes through this planner, so the autotuner and the
+roofline report share one cost model — the paper's Fig. 1 → Fig. 6 loop.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import autotune, hierarchy as hw, perfmodel
+from repro.core.tiling import COPY, HDIFF, LRU_SCAN, VADVC, OpSpec, TilePlan
+
+OPS: Dict[str, OpSpec] = {
+    "hdiff": HDIFF,
+    "vadvc": VADVC,
+    "copy": COPY,
+    "lru_scan": LRU_SCAN,
+}
+
+
+def _has_tpu() -> bool:
+    try:
+        return jax.devices()[0].platform == "tpu"
+    except Exception:                              # pragma: no cover
+        return False
+
+
+@dataclasses.dataclass
+class NeroEngine:
+    """Plan + dispatch for the framework's memory-bound operators."""
+
+    hier: Optional[hw.Hierarchy] = None
+    interpret: Optional[bool] = None    # None -> interpret iff no real TPU
+    chips: int = 1
+
+    def __post_init__(self):
+        self.hier = self.hier or hw.tpu_v5e()
+        if self.interpret is None:
+            self.interpret = not _has_tpu()
+        self._plans: Dict[Tuple[str, Tuple[int, ...], str],
+                          autotune.TunedResult] = {}
+
+    # -- planning ------------------------------------------------------------
+
+    def plan(self, op_name: str, grid_shape: Tuple[int, ...], dtype,
+             measure: Optional[Callable[[TilePlan], float]] = None
+             ) -> autotune.TunedResult:
+        key = (op_name, tuple(grid_shape), str(jnp.dtype(dtype)))
+        if key not in self._plans or measure is not None:
+            self._plans[key] = autotune.tune(
+                OPS[op_name], grid_shape, dtype, self.hier,
+                chips=self.chips, measure=measure)
+        return self._plans[key]
+
+    def estimate(self, op_name: str, grid_shape: Tuple[int, ...], dtype
+                 ) -> perfmodel.PerfEstimate:
+        return self.plan(op_name, grid_shape, dtype).est
+
+    # -- dispatch ------------------------------------------------------------
+
+    def run(self, tuned: autotune.TunedResult, *fields):
+        plan = tuned.plan
+        name = plan.op.name
+        if name == "hdiff":
+            return self._run_hdiff(plan, *fields)
+        if name == "vadvc":
+            return self._run_vadvc(plan, *fields)
+        if name == "copy":
+            return self._run_copy(plan, *fields)
+        raise NotImplementedError(name)
+
+    def _run_hdiff(self, plan: TilePlan, src, coeff: float | None = None):
+        from repro.kernels.hdiff import ref
+        from repro.kernels.hdiff.hdiff import hdiff_pallas
+        coeff = ref.DEFAULT_COEFF if coeff is None else coeff
+        ny = src.shape[1]
+        ty = max(2, plan.tile[1])
+        if self.interpret and src.size > 2**22:
+            # interpret-mode Pallas is Python-speed; oracle is exact
+            return ref.hdiff(src, coeff=coeff)
+        while ny % ty:
+            ty -= 1
+        return hdiff_pallas(src, coeff=coeff, ty=ty,
+                            interpret=self.interpret)
+
+    def _run_vadvc(self, plan: TilePlan, u_stage, wcon, u_pos, utens,
+                   utens_stage):
+        from repro.kernels.vadvc import ref
+        from repro.kernels.vadvc.vadvc import vadvc_pallas
+        if self.interpret and u_stage.size > 2**20:
+            return ref.vadvc(u_stage, wcon, u_pos, utens, utens_stage)
+        _, ny, nx = u_stage.shape
+        tj, ti = max(1, plan.tile[1]), max(1, plan.tile[2])
+        while ny % tj:
+            tj -= 1
+        while nx % ti:
+            ti -= 1
+        return vadvc_pallas(u_stage, wcon, u_pos, utens, utens_stage,
+                            tj=tj, ti=ti, interpret=self.interpret)
+
+    def _run_copy(self, plan: TilePlan, src):
+        from repro.kernels.copy_stencil.copy_stencil import copy_pallas
+        return copy_pallas(src, interpret=self.interpret)

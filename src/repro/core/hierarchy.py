@@ -1,0 +1,114 @@
+"""TPU memory-hierarchy model — the FPGA URAM/BRAM/HBM analogue.
+
+NERO (the paper) builds an application-specific scratchpad hierarchy out of the
+FPGA's heterogeneous memories (HBM -> URAM -> BRAM -> FF).  On TPU the same
+levels exist but are fixed silicon: HBM -> VMEM (software-managed scratchpad)
+-> VREG.  This module is the single source of truth for capacities,
+bandwidths, and energy-per-byte used by the tile planner, the perf model, the
+autotuner, and the roofline analysis.
+
+All numbers are per-chip TPU v5e (the assignment's hardware constants), with
+energy coefficients from public literature (Horowitz ISSCC'14 scaled to 7nm,
+JEDEC HBM2 specs); they are *model* constants, labeled as such in benchmarks.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+import jax.numpy as jnp
+
+# ---------------------------------------------------------------------------
+# Per-chip hardware constants (TPU v5e — assignment-provided where given).
+# ---------------------------------------------------------------------------
+
+PEAK_BF16_FLOPS = 197e12        # FLOP/s per chip (assignment constant)
+PEAK_FP32_FLOPS = PEAK_BF16_FLOPS / 4.0   # MXU fp32 passthrough estimate
+HBM_BYTES = 16 * 2**30          # 16 GiB HBM per chip
+HBM_BW = 819e9                  # B/s per chip (assignment constant)
+ICI_BW_PER_LINK = 50e9          # B/s per ICI link (assignment constant)
+ICI_LINKS = 4                   # v5e 2D torus: 4 links/chip
+VMEM_BYTES = 128 * 2**20        # 128 MiB VMEM per core
+VMEM_USABLE = 64 * 2**20        # budget we let the planner claim (pipeline
+                                # double-buffering + compiler headroom)
+VMEM_BW = 8 * HBM_BW            # VMEM is ~an order of magnitude faster; model 8x
+VREG_BYTES = 512 * 1024         # vector registers (order of magnitude)
+MXU_TILE = (128, 128)           # systolic array native tile
+VPU_LANES = (8, 128)            # sublane x lane layout granularity
+
+# Energy model (pJ/byte moved, pJ/flop) — used by benchmarks/energy.py.
+# HBM2 ~3.9 pJ/bit ≈ 31 pJ/B; on-chip SRAM ~0.1-0.2 pJ/bit; ICI ~10 pJ/B.
+ENERGY_PJ_PER_BYTE: Dict[str, float] = {
+    "hbm": 31.0,
+    "vmem": 1.5,
+    "vreg": 0.08,
+    "ici": 10.0,
+    "host": 62.0,   # PCIe/host DMA, the OCAPI analogue
+}
+ENERGY_PJ_PER_FLOP_BF16 = 0.15
+CHIP_IDLE_WATTS = 60.0
+CHIP_PEAK_WATTS = 170.0
+
+
+def dtype_bytes(dtype) -> int:
+    return jnp.dtype(dtype).itemsize
+
+
+@dataclasses.dataclass(frozen=True)
+class MemoryLevel:
+    """One level of the near-memory hierarchy."""
+
+    name: str
+    capacity_bytes: int
+    bandwidth_bytes_per_s: float
+    energy_pj_per_byte: float
+
+    def seconds_for(self, nbytes: int) -> float:
+        return nbytes / self.bandwidth_bytes_per_s
+
+    def energy_joules_for(self, nbytes: int) -> float:
+        return nbytes * self.energy_pj_per_byte * 1e-12
+
+
+@dataclasses.dataclass(frozen=True)
+class Hierarchy:
+    """The full per-chip hierarchy, NERO-style: far memory feeds near memory
+    feeds registers; the planner places tiles at the deepest level that fits."""
+
+    hbm: MemoryLevel
+    vmem: MemoryLevel
+    vreg: MemoryLevel
+    peak_flops_bf16: float = PEAK_BF16_FLOPS
+    peak_flops_fp32: float = PEAK_FP32_FLOPS
+    ici_bw: float = ICI_BW_PER_LINK
+
+    def level_for(self, nbytes: int) -> MemoryLevel:
+        """Deepest (fastest) level whose capacity holds `nbytes` (the paper's
+        greedy placement: URAM/BRAM if it fits, else HBM)."""
+        if nbytes <= self.vreg.capacity_bytes:
+            return self.vreg
+        if nbytes <= self.vmem.capacity_bytes:
+            return self.vmem
+        return self.hbm
+
+    def machine_balance(self, dtype=jnp.bfloat16) -> float:
+        """FLOP:byte ratio at which compute and HBM time are equal — the
+        roofline ridge point (paper Fig. 1)."""
+        peak = (self.peak_flops_bf16
+                if jnp.dtype(dtype).itemsize <= 2 else self.peak_flops_fp32)
+        return peak / self.hbm.bandwidth_bytes_per_s
+
+
+def tpu_v5e() -> Hierarchy:
+    return Hierarchy(
+        hbm=MemoryLevel("hbm", HBM_BYTES, HBM_BW, ENERGY_PJ_PER_BYTE["hbm"]),
+        vmem=MemoryLevel("vmem", VMEM_USABLE, VMEM_BW, ENERGY_PJ_PER_BYTE["vmem"]),
+        vreg=MemoryLevel("vreg", VREG_BYTES, 16 * VMEM_BW, ENERGY_PJ_PER_BYTE["vreg"]),
+    )
+
+
+# The paper's POWER9 baseline, for the reproduction of Fig. 1 in
+# benchmarks/roofline_kernels.py (peak numbers from the paper's roofline plot).
+POWER9_PEAK_FLOPS = 1.0e12       # ~1 TFLOP/s fp32, 16 cores
+POWER9_DRAM_BW = 110e9           # ~110 GB/s host DRAM (measured in paper's Fig 1)

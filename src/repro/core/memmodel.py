@@ -1,0 +1,96 @@
+"""Analytic per-device memory model for dry-run fit checking.
+
+XLA:CPU's memory_analysis() is the only executable-derived number available
+in this container, but the CPU backend fuses far less than TPU, so its
+temp_size overestimates TPU liveness several-fold (measured ~6-8x on our
+cells).  This model provides the TPU-side estimate the fit check uses; both
+numbers are recorded in the dry-run JSON.
+
+Accounting (per device):
+  train:   param shards (bf16) + opt state (3x f32 shards) + grad shards
+           (f32, co-live 1x) + layer-carry residuals (remat=full saves the
+           per-layer carry) / microbatches + bwd working set (~2 layers of
+           internals) + xent chunk buffers.
+  prefill: param shards + KV-cache shards + ~2 layers of activations +
+           flash chunk working set.
+  decode:  param shards + KV-cache shards + O(B·d) vectors.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Dict
+
+import jax
+import numpy as np
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.parallel import sharding as shd
+
+
+def _shard_bytes(shapes_tree, shard_tree) -> int:
+    """Sum per-device bytes of a pytree given its NamedShardings."""
+    total = 0
+    for leaf, sh in zip(jax.tree.leaves(shapes_tree),
+                        jax.tree.leaves(shard_tree, is_leaf=lambda x: hasattr(
+                            x, "spec"))):
+        shape = leaf.shape
+        spec = sh.spec
+        mesh = sh.mesh
+        n = 1
+        for i, s in enumerate(shape):
+            ax = spec[i] if i < len(spec) else None
+            if ax is None:
+                continue
+            axes = ax if isinstance(ax, tuple) else (ax,)
+            div = math.prod(mesh.shape[a] for a in axes)
+            s = -(-s // div)
+            n *= s / shape[i]
+        total += int(n * math.prod(shape)) * np.dtype(leaf.dtype).itemsize
+    return total
+
+
+def estimate(cfg: ModelConfig, shape: ShapeConfig, mesh, p_shapes, p_shard,
+             cache_shapes=None, cache_shard=None, *, microbatches: int = 1,
+             xent_chunk: int = 512) -> Dict[str, int]:
+    model_par = mesh.shape.get("model", 1)
+    b_axes = shd.batch_sharding(mesh, shape.global_batch)
+    dp = 1
+    if b_axes:
+        axes = b_axes if isinstance(b_axes, tuple) else (b_axes,)
+        dp = math.prod(mesh.shape[a] for a in axes)
+    b_loc = -(-shape.global_batch // dp)
+    t = shape.seq_len
+    d = cfg.d_model
+    vocab_loc = -(-cfg.padded_vocab // model_par)
+
+    params_b = _shard_bytes(p_shapes, p_shard)
+    out = {"params": params_b}
+
+    if shape.kind == "train":
+        out["opt_state"] = params_b * 2 * 3        # 3x f32 vs bf16 shards
+        out["grads"] = params_b * 2                # f32 grad shards
+        # remat=full checkpoints at scan-carry (superblock) boundaries:
+        # one (B, T, D) residual per scan step + remainder blocks, NOT one
+        # per layer (intra-period blocks are rematerialized).
+        n_carries = cfg.n_repeats + cfg.n_remainder
+        carry = n_carries * b_loc * (t // microbatches) * d * 2
+        out["remat_carries"] = carry
+        ff_loc = max(cfg.d_ff // model_par, d // model_par, 1)
+        working = 6 * b_loc * (t // microbatches) * (d + ff_loc) * 4
+        out["bwd_working_set"] = working
+        out["xent"] = 2 * b_loc * min(xent_chunk, t) * vocab_loc * 4 * 2
+    else:
+        if cache_shapes is not None and cache_shard is not None:
+            out["cache"] = _shard_bytes(cache_shapes, cache_shard)
+        if shape.kind == "prefill":
+            ff_loc = max(cfg.d_ff // model_par, d // model_par, 1)
+            out["activations"] = 4 * b_loc * t * (d + ff_loc) * 2
+            out["logits_tail"] = b_loc * vocab_loc * 4
+        else:
+            out["activations"] = 8 * b_loc * d * 4
+            out["logits"] = b_loc * vocab_loc * 4
+
+    out["total"] = sum(out.values())
+    out["fits_16g"] = bool(out["total"] <= 16 * 2**30)
+    return out

@@ -1,0 +1,99 @@
+"""Analytic per-plan performance/energy model (shared by autotuner & roofline).
+
+Mirrors the role of the paper's performance estimates during OpenTuner search:
+for a TilePlan we derive the three roofline terms (compute / memory /
+collective), predicted time = max of the overlappable terms (dataflow
+pipelining overlaps load & compute, the paper's §3 design), and energy from
+per-level pJ/byte coefficients.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional
+
+import jax.numpy as jnp
+
+from repro.core import hierarchy as hw
+from repro.core.tiling import TilePlan
+
+
+@dataclasses.dataclass(frozen=True)
+class PerfEstimate:
+    plan: TilePlan
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    vmem_s: float
+    time_s: float            # pipelined: max(terms) + fill latency
+    gflops: float            # useful GFLOP/s at predicted time
+    energy_j: float
+    bottleneck: str
+
+    @property
+    def gflops_per_watt(self) -> float:
+        if self.time_s == 0:
+            return 0.0
+        watts = self.energy_j / self.time_s
+        return self.gflops / max(watts, 1e-9)
+
+
+def estimate(plan: TilePlan,
+             hier: Optional[hw.Hierarchy] = None,
+             chips: int = 1,
+             collective_bytes: float = 0.0,
+             utilization: float = 0.85) -> PerfEstimate:
+    """Roofline-style time: terms overlap under the dataflow pipeline, so the
+    pipeline throughput is set by the slowest stage; `utilization` derates
+    peak numbers (HBM controllers, pipeline bubbles)."""
+    hier = hier or hw.tpu_v5e()
+    b = hw.dtype_bytes(plan.dtype)
+    peak = hier.peak_flops_bf16 if b <= 2 else hier.peak_flops_fp32
+
+    flops = plan.flops_total
+    hbm_bytes = plan.hbm_bytes_total
+    vmem_bytes = hbm_bytes * 2.0   # staged in + consumed out of VMEM
+
+    compute_s = flops / (chips * peak * utilization)
+    memory_s = hbm_bytes / (chips * hier.hbm.bandwidth_bytes_per_s * utilization)
+    vmem_s = vmem_bytes / (chips * hier.vmem.bandwidth_bytes_per_s)
+    coll_s = collective_bytes / (chips * hier.ici_bw) if collective_bytes else 0.0
+
+    # Pipeline fill: one tile's worth of latency before steady state.
+    fill_s = (plan.hbm_bytes_per_tile /
+              (hier.hbm.bandwidth_bytes_per_s * utilization))
+    time_s = max(compute_s, memory_s, vmem_s, coll_s) + fill_s
+
+    terms = {"compute": compute_s, "memory": memory_s,
+             "vmem": vmem_s, "collective": coll_s}
+    bottleneck = max(terms, key=terms.get)
+
+    energy = (hbm_bytes * hier.hbm.energy_pj_per_byte
+              + vmem_bytes * hier.vmem.energy_pj_per_byte
+              + collective_bytes * hw.ENERGY_PJ_PER_BYTE["ici"]
+              + flops * hw.ENERGY_PJ_PER_FLOP_BF16) * 1e-12
+    energy += hw.CHIP_IDLE_WATTS * time_s * chips   # static power floor
+
+    gflops = flops / time_s / 1e9 if time_s > 0 else 0.0
+    return PerfEstimate(plan=plan, compute_s=compute_s, memory_s=memory_s,
+                        collective_s=coll_s, vmem_s=vmem_s, time_s=time_s,
+                        gflops=gflops, energy_j=energy, bottleneck=bottleneck)
+
+
+def roofline_fraction(est: PerfEstimate,
+                      hier: Optional[hw.Hierarchy] = None,
+                      chips: int = 1) -> float:
+    """Achieved fraction of the roofline bound for this op's arithmetic
+    intensity (1.0 = sitting on the roof)."""
+    hier = hier or hw.tpu_v5e()
+    b = hw.dtype_bytes(est.plan.dtype)
+    peak = hier.peak_flops_bf16 if b <= 2 else hier.peak_flops_fp32
+    ai = est.plan.op.arithmetic_intensity(est.plan.dtype)
+    roof = min(peak, ai * hier.hbm.bandwidth_bytes_per_s) * chips
+    if est.plan.op.flops_per_point == 0.0:
+        # bandwidth kernels (copy): fraction of peak HBM bandwidth instead.
+        achieved_bw = est.plan.hbm_bytes_total / est.time_s
+        return achieved_bw / (hier.hbm.bandwidth_bytes_per_s * chips)
+    achieved = est.plan.flops_total / est.time_s
+    return achieved / roof

@@ -1,0 +1,137 @@
+"""Roofline-term extraction from compiled SPMD artifacts.
+
+The dry-run lowers+compiles each (arch x shape x mesh) cell; this module
+turns the compiled artifact into the three roofline terms:
+
+  compute term    = HLO_FLOPs_per_device / peak_FLOP/s
+  memory term     = HLO_bytes_per_device / HBM_bw
+  collective term = collective_wire_bytes_per_device / link_bw
+
+cost_analysis() is per-device (post-SPMD-partitioning).  Collective bytes
+are NOT in cost_analysis: we parse the compiled HLO text and sum result
+shapes of all-reduce / all-gather / reduce-scatter / all-to-all /
+collective-permute ops, with ring-algorithm wire factors.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+import re
+from typing import Dict, Optional, Tuple
+
+from repro.core import hierarchy as hw
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+_COLL_RE = re.compile(
+    r"=\s*(?P<result>[^=]*?)\s*"
+    r"(?P<op>all-reduce-start|all-reduce|all-gather-start|all-gather|"
+    r"reduce-scatter|all-to-all|collective-permute-start|collective-permute)"
+    r"\(")
+_SHAPE_RE = re.compile(r"(?P<dt>[a-z]+\d*)\[(?P<dims>[\d,]*)\]")
+
+# Ring-algorithm wire-bytes factor per result byte (n = group size; we use
+# the n->inf limit as the conservative constant).
+_WIRE_FACTOR = {
+    "all-reduce": 2.0,          # reduce-scatter + all-gather
+    "all-gather": 1.0,
+    "reduce-scatter": 1.0,
+    "all-to-all": 1.0,
+    "collective-permute": 1.0,
+}
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(text):
+        dt = m.group("dt")
+        if dt not in _DTYPE_BYTES:
+            continue
+        dims = m.group("dims")
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Per-op-type result bytes (per device) from compiled HLO text."""
+    out: Dict[str, int] = {}
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        op = m.group("op").replace("-start", "")
+        out[op] = out.get(op, 0) + _shape_bytes(m.group("result"))
+    return out
+
+
+def wire_bytes(coll: Dict[str, int]) -> float:
+    return sum(_WIRE_FACTOR.get(op, 1.0) * b for op, b in coll.items())
+
+
+@dataclasses.dataclass(frozen=True)
+class RooflineTerms:
+    flops_per_device: float
+    bytes_per_device: float
+    collective_bytes_per_device: float
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    dominant: str
+    model_flops_total: float
+    useful_flops_ratio: float       # MODEL_FLOPS / (HLO flops x chips)
+    chips: int
+
+    @property
+    def step_time_s(self) -> float:
+        """Perfect-overlap lower bound: max of the three terms."""
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Useful model FLOP/s achieved at the bound, vs chip peak."""
+        if self.step_time_s == 0:
+            return 0.0
+        achieved = self.model_flops_total / self.step_time_s
+        return achieved / (self.chips * hw.PEAK_BF16_FLOPS)
+
+
+def analyze(cost: Dict[str, float], coll: Dict[str, int], chips: int,
+            model_flops_total: float, dtype_bytes: int = 2
+            ) -> RooflineTerms:
+    """Memory term prefers the TPU-fusion-emulated byte count
+    ("bytes fused", core/hlo_cost.py) when present; the raw operand+output
+    count ("bytes accessed") reflects XLA:CPU's much finer fusion
+    granularity and over-states TPU HBM traffic several-fold."""
+    flops = float(cost.get("flops", 0.0))
+    byts = float(cost.get("bytes fused") or cost.get("bytes accessed", 0.0))
+    wire = wire_bytes(coll)
+    peak = (hw.PEAK_BF16_FLOPS if dtype_bytes <= 2 else hw.PEAK_FP32_FLOPS)
+    compute_s = flops / peak
+    memory_s = byts / hw.HBM_BW
+    collective_s = wire / hw.ICI_BW_PER_LINK
+    terms = {"compute": compute_s, "memory": memory_s,
+             "collective": collective_s}
+    dominant = max(terms, key=terms.get)
+    ratio = (model_flops_total / (flops * chips)) if flops else 0.0
+    return RooflineTerms(
+        flops_per_device=flops, bytes_per_device=byts,
+        collective_bytes_per_device=wire, compute_s=compute_s,
+        memory_s=memory_s, collective_s=collective_s, dominant=dominant,
+        model_flops_total=model_flops_total, useful_flops_ratio=ratio,
+        chips=chips)
+
+
+def model_flops(param_count: int, active_param_count: int, tokens: int,
+                kind: str) -> float:
+    """MODEL_FLOPS = 6·N·D (train) / 2·N·D (inference fwd), N = active."""
+    n = active_param_count
+    return (6.0 if kind == "train" else 2.0) * n * tokens

@@ -1,0 +1,190 @@
+"""3-D window (tile) planner — NERO's "precision-optimized tiling".
+
+The paper streams a 3-D window of the grid per PE through the on-chip
+hierarchy.  Here a `TilePlan` describes exactly that: the window (block)
+shape per field, its halo, the VMEM footprint including the double-buffered
+pipeline stage, and which hierarchy level it lands in.  The autotuner
+(`core/autotune.py`) searches over TilePlans; the Pallas kernels consume the
+chosen plan as their BlockSpec shapes.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Iterable, List, Sequence, Tuple
+
+import jax.numpy as jnp
+
+from repro.core import hierarchy as hw
+
+
+@dataclasses.dataclass(frozen=True)
+class OpSpec:
+    """Abstract description of a memory-bound operator for planning purposes.
+
+    `fields_in` / `fields_out`: number of same-shaped 3-D input/output fields
+    the op streams (vadvc: 7 in / 1 out; hdiff: 1 in / 1 out).
+    `halo`: per-axis one-sided halo the stencil needs (hdiff: (0,2,2)).
+    `seq_axes`: axes that must stay whole inside a tile because the op is
+    sequential along them (vadvc: z; lru_scan: t).
+    `flops_per_point`: useful FLOPs per output grid point.
+    `scratch_fields`: number of tile-shaped temporaries (vadvc: ccol,dcol).
+    """
+
+    name: str
+    fields_in: int
+    fields_out: int
+    halo: Tuple[int, int, int]
+    seq_axes: Tuple[int, ...]
+    flops_per_point: float
+    scratch_fields: int = 0
+    parallel_axes: Tuple[int, ...] = ()
+
+    @property
+    def bytes_moved_per_point(self) -> float:
+        """Ideal HBM traffic per point per dtype-byte (reads + writes)."""
+        return float(self.fields_in + self.fields_out)
+
+    def arithmetic_intensity(self, dtype) -> float:
+        return self.flops_per_point / (
+            self.bytes_moved_per_point * hw.dtype_bytes(dtype))
+
+
+# Canonical op specs for the paper's kernels -------------------------------
+
+# hdiff: per output point the compound stencil does ~21 flops (4 laplacians
+# reused across neighbors amortize; we count the gridtools fused-op count).
+HDIFF = OpSpec(
+    name="hdiff", fields_in=1, fields_out=1, halo=(0, 2, 2),
+    seq_axes=(), parallel_axes=(0, 1, 2), flops_per_point=21.0)
+
+# vadvc: 7 input fields (ccol,dcol,wcon,ustage,upos,utens,utensstage),
+# 1 output; forward+backward sweep ~ 38 flops/point; sequential in z (axis 0
+# in our (z, y, x) layout); scratch ccol/dcol tiles.
+VADVC = OpSpec(
+    name="vadvc", fields_in=7, fields_out=1, halo=(0, 0, 1),
+    seq_axes=(0,), parallel_axes=(1, 2), flops_per_point=38.0,
+    scratch_fields=3)
+
+COPY = OpSpec(
+    name="copy", fields_in=1, fields_out=1, halo=(0, 0, 0),
+    seq_axes=(), parallel_axes=(0, 1, 2), flops_per_point=0.0)
+
+# lru_scan (RG-LRU / SSM sweep): layout (channels, time) folded to 3-D as
+# (time, batch*channels, 1); sequential in time; 9 flops/point (gates+fma).
+LRU_SCAN = OpSpec(
+    name="lru_scan", fields_in=3, fields_out=1, halo=(0, 0, 0),
+    seq_axes=(0,), parallel_axes=(1,), flops_per_point=9.0,
+    scratch_fields=1)
+
+
+@dataclasses.dataclass(frozen=True)
+class TilePlan:
+    """A concrete 3-D window choice for an OpSpec on a grid."""
+
+    op: OpSpec
+    grid_shape: Tuple[int, int, int]     # full (z, y, x) domain
+    tile: Tuple[int, int, int]           # window shape (z, y, x)
+    dtype: str
+    pipeline_depth: int = 2              # double buffering (dataflow overlap)
+
+    # -- geometry ----------------------------------------------------------
+    @property
+    def tile_points(self) -> int:
+        return int(self.tile[0] * self.tile[1] * self.tile[2])
+
+    @property
+    def padded_tile(self) -> Tuple[int, int, int]:
+        """Window + halos actually staged into VMEM."""
+        return tuple(t + 2 * h for t, h in zip(self.tile, self.op.halo))
+
+    @property
+    def num_tiles(self) -> int:
+        return int(math.prod(
+            math.ceil(g / t) for g, t in zip(self.grid_shape, self.tile)))
+
+    # -- resources ----------------------------------------------------------
+    @property
+    def vmem_bytes(self) -> int:
+        """NERO's "resource utilization" axis: bytes of near-memory the plan
+        claims, with pipeline double-buffering on the streamed fields."""
+        b = hw.dtype_bytes(self.dtype)
+        pt = math.prod(self.padded_tile)
+        streamed = (self.op.fields_in + self.op.fields_out) * pt * b
+        scratch = self.op.scratch_fields * self.tile_points * max(b, 4)
+        return int(streamed * self.pipeline_depth + scratch)
+
+    def fits(self, hier: hw.Hierarchy) -> bool:
+        return self.vmem_bytes <= hier.vmem.capacity_bytes
+
+    # -- alignment ----------------------------------------------------------
+    @property
+    def lane_aligned(self) -> bool:
+        """Minor-most dim multiple of 128 lanes, next of 8 sublanes — the MXU
+        /VPU alignment the paper's BRAM-width matching corresponds to."""
+        z, y, x = self.padded_tile
+        return (x % hw.VPU_LANES[1] == 0) and (y % hw.VPU_LANES[0] == 0)
+
+    # -- traffic ------------------------------------------------------------
+    @property
+    def hbm_bytes_per_tile(self) -> int:
+        b = hw.dtype_bytes(self.dtype)
+        pt = math.prod(self.padded_tile)
+        return int((self.op.fields_in * pt + self.op.fields_out *
+                    self.tile_points) * b)
+
+    @property
+    def hbm_bytes_total(self) -> int:
+        return self.hbm_bytes_per_tile * self.num_tiles
+
+    @property
+    def halo_overhead(self) -> float:
+        """Fraction of HBM traffic that is redundant halo re-reads."""
+        ideal = (self.op.bytes_moved_per_point *
+                 hw.dtype_bytes(self.dtype) * math.prod(self.grid_shape))
+        return self.hbm_bytes_total / max(ideal, 1.0) - 1.0
+
+    @property
+    def flops_total(self) -> float:
+        return self.op.flops_per_point * math.prod(self.grid_shape)
+
+
+def candidate_tiles(op: OpSpec,
+                    grid_shape: Sequence[int],
+                    dtype,
+                    hier: hw.Hierarchy | None = None,
+                    max_candidates: int = 512) -> List[TilePlan]:
+    """Enumerate the legal tile space (the autotuner's search domain).
+
+    Sequential axes are never split (vadvc needs the whole z column in VMEM —
+    exactly the paper's design, which tiles x/y only for vadvc).  Other axes
+    take power-of-two sizes, lane-aligned on the minor axis where possible.
+    """
+    hier = hier or hw.tpu_v5e()
+    grid_shape = tuple(int(g) for g in grid_shape)
+
+    def axis_options(ax: int) -> List[int]:
+        g = grid_shape[ax]
+        if ax in op.seq_axes:
+            return [g]
+        opts = []
+        s = 1
+        while s <= g:
+            opts.append(s)
+            s *= 2
+        if g not in opts:
+            opts.append(g)
+        return opts
+
+    plans: List[TilePlan] = []
+    for tz in axis_options(0):
+        for ty in axis_options(1):
+            for tx in axis_options(2):
+                plan = TilePlan(op=op, grid_shape=grid_shape,
+                                tile=(tz, ty, tx), dtype=str(jnp.dtype(dtype)))
+                if plan.fits(hier):
+                    plans.append(plan)
+    # Prefer bigger, aligned tiles first so truncation keeps the useful region.
+    plans.sort(key=lambda p: (-int(p.lane_aligned), -p.tile_points))
+    return plans[:max_candidates]

@@ -1,0 +1,78 @@
+"""Deterministic synthetic data pipeline.
+
+Batches are a pure function of (seed, step) so checkpoint-resume replays the
+exact stream from any step — the data-iterator state *is* the step counter
+(stored in the optimizer state), which makes restarts bit-reproducible.
+Sharded host->device placement via the batch sharding rules; a one-deep
+prefetch overlaps host generation with device compute.
+"""
+
+from __future__ import annotations
+
+import threading
+import queue
+from typing import Dict, Iterator, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+
+
+def lm_batch(cfg: ModelConfig, seed: int, step: int, batch: int, seq: int,
+             kind: str = "arith") -> Dict[str, np.ndarray]:
+    """kind="arith": learnable modular arithmetic sequences (per-sequence
+    random start/stride) so train-loss visibly decreases; "uniform": i.i.d.
+    tokens (bandwidth/throughput benchmarks, nothing learnable)."""
+    rng = np.random.default_rng(np.random.SeedSequence([seed, step]))
+    if kind == "uniform":
+        tokens = rng.integers(0, cfg.vocab_size, size=(batch, seq),
+                              dtype=np.int32)
+    else:
+        start = rng.integers(0, cfg.vocab_size, size=(batch, 1))
+        stride = rng.integers(1, 9, size=(batch, 1))
+        idx = np.arange(seq)[None, :]
+        tokens = ((start + stride * idx) % cfg.vocab_size).astype(np.int32)
+    out = {"tokens": tokens}
+    if cfg.encdec:
+        out["frames"] = rng.normal(
+            0, 1, size=(batch, cfg.encdec.encoder_len, cfg.d_model)
+        ).astype(np.float32)
+    return out
+
+
+def iterator(cfg: ModelConfig, batch: int, seq: int, seed: int = 0,
+             start_step: int = 0, shardings=None,
+             prefetch: int = 1, kind: str = "arith"
+             ) -> Iterator[Dict[str, jnp.ndarray]]:
+    """Infinite deterministic iterator with background prefetch."""
+    def gen(step):
+        b = lm_batch(cfg, seed, step, batch, seq, kind=kind)
+        if shardings is not None:
+            b = jax.tree.map(jax.device_put, b, shardings)
+        return b
+
+    if prefetch <= 0:
+        step = start_step
+        while True:
+            yield gen(step)
+            step += 1
+        return
+
+    q: "queue.Queue" = queue.Queue(maxsize=prefetch)
+    stop = threading.Event()
+
+    def worker():
+        step = start_step
+        while not stop.is_set():
+            q.put(gen(step))
+            step += 1
+
+    t = threading.Thread(target=worker, daemon=True)
+    t.start()
+    try:
+        while True:
+            yield q.get()
+    finally:
+        stop.set()

@@ -1,0 +1,1 @@
+"""NERO kernel package: copy_stencil."""

@@ -1,0 +1,19 @@
+"""Jitted public entry point for the copy stencil."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.copy_stencil import ref as _ref
+from repro.kernels.copy_stencil.copy_stencil import copy_pallas
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas", "tr", "interpret"))
+def copy_stencil(src, use_pallas: bool = False, tr: int = 256,
+                 interpret: bool = True):
+    if use_pallas:
+        return copy_pallas(src, tr=tr, interpret=interpret)
+    return _ref.copy_stencil(src)

@@ -1,0 +1,12 @@
+"""Oracle for the COSMO copy stencil (paper Fig. 2b): element-wise identity.
+
+The simplest COSMO stencil; it characterizes achievable memory bandwidth of
+the platform (the paper uses it to find the PE-saturation point of HBM)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def copy_stencil(src: jnp.ndarray) -> jnp.ndarray:
+    return src + jnp.zeros_like(src)   # forces a real read+write pair

@@ -1,0 +1,7 @@
+from repro.kernels.flash_attention.flash import flash_mha_pallas
+from repro.kernels.flash_attention.ops import (auto_blocks, flash_mha,
+                                               flash_traffic_bytes)
+from repro.kernels.flash_attention import ref
+
+__all__ = ["flash_mha_pallas", "flash_mha", "auto_blocks",
+           "flash_traffic_bytes", "ref"]

@@ -1,0 +1,64 @@
+"""Jitted wrapper + block-size selection for the flash-attention kernel.
+
+`auto_blocks` applies the paper's precision-aware tiling rule (core/
+autotune.py discipline) to attention: pick the largest (block_q, block_k)
+whose VMEM working set — q, k, v blocks + fp32 scores + accumulator, double
+buffered by the Pallas pipeline — fits the per-core budget, preferring
+MXU-aligned multiples of 128.
+
+`flash_traffic_bytes` is the kernel's analytic HBM traffic (what the
+roofline pass adds back for a zero-byte-scoped region): q and o stream
+once; k and v stream once per q block.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.flash import flash_mha_pallas
+
+VMEM_BUDGET = 96 * 2**20      # bytes usable for kernel working set (v5e)
+
+
+def auto_blocks(t: int, s: int, hd: int, dtype_bytes: int = 2,
+                budget: int = VMEM_BUDGET) -> Tuple[int, int]:
+    """Largest MXU-aligned (block_q, block_k) fitting the VMEM budget."""
+    def fits(bq, bk):
+        work = (bq * hd * dtype_bytes          # q block
+                + 2 * bk * hd * dtype_bytes    # k, v blocks
+                + bq * bk * 4                  # fp32 scores
+                + bq * (hd + 2) * 4)           # fp32 acc + m + l
+        return 2 * work <= budget              # double buffering
+
+    for bq in (512, 256, 128):
+        for bk in (1024, 512, 256, 128):
+            if t % min(bq, t) == 0 and s % min(bk, s) == 0 and fits(bq, bk):
+                return min(bq, t), min(bk, s)
+    return min(128, t), min(128, s)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "softcap",
+                                             "interpret"))
+def flash_mha(q, k, v, *, causal: bool = True, window: int = 0,
+              softcap: float = 0.0, interpret: bool = False):
+    """Auto-tiled flash attention.  q: (B,T,H,hd); k, v: (B,S,KH,hd)."""
+    bq, bk = auto_blocks(q.shape[1], k.shape[1], q.shape[3],
+                         jnp.dtype(q.dtype).itemsize)
+    return flash_mha_pallas(q, k, v, causal=causal, window=window,
+                            softcap=softcap, block_q=bq, block_k=bk,
+                            interpret=interpret)
+
+
+def flash_traffic_bytes(b: int, t: int, s: int, h: int, kh: int, hd: int,
+                        dtype_bytes: int = 2, block_q: int = 0) -> float:
+    """Analytic HBM bytes of the kernel: q+o once, k/v re-streamed per
+    q-block (the roofline credit for the kernelized scope)."""
+    bq = block_q or auto_blocks(t, s, hd, dtype_bytes)[0]
+    nq = max(t // bq, 1)
+    q_o = 2 * b * t * h * hd * dtype_bytes
+    kv = 2 * b * s * kh * hd * dtype_bytes * nq
+    return float(q_o + kv)

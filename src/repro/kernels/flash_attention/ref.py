@@ -1,0 +1,41 @@
+"""Pure-jnp oracle for the flash-attention Pallas kernel.
+
+Plain materialized-softmax GQA attention with the same masking semantics
+(causal / sliding window / logit softcap) — the correctness reference the
+kernel is swept against in tests/test_kernels_flash.py.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def mha(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+        causal: bool = True, window: int = 0,
+        softcap: float = 0.0) -> jnp.ndarray:
+    """q: (B, T, H, hd); k, v: (B, S, KH, hd); H % KH == 0.
+
+    Returns (B, T, H, hd).  window > 0 keeps keys with 0 <= qpos-kpos <
+    window (sliding-window attention); causal masks kpos > qpos.
+    """
+    b, t, h, hd = q.shape
+    s, kh = k.shape[1], k.shape[2]
+    g = h // kh
+    qs = (q.astype(jnp.float32) * (hd ** -0.5)).reshape(b, t, kh, g, hd)
+    scores = jnp.einsum("btkgh,bskh->bkgts", qs, k.astype(jnp.float32))
+    if softcap:
+        scores = jnp.tanh(scores / softcap) * softcap
+    qpos = jnp.arange(t)[:, None]
+    kpos = jnp.arange(s)[None, :]
+    mask = jnp.ones((t, s), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window:
+        mask &= (qpos - kpos) < window
+    scores = jnp.where(mask, scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgts,bskh->btkgh", p, v.astype(jnp.float32))
+    return out.reshape(b, t, h, hd).astype(q.dtype)

@@ -1,0 +1,1 @@
+"""NERO kernel package: hdiff."""

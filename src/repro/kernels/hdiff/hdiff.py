@@ -1,0 +1,105 @@
+"""Pallas TPU kernel for the COSMO horizontal diffusion compound stencil.
+
+NERO's hdiff PE streams a 3-D window from a dedicated HBM channel through
+BRAM/URAM line buffers and computes laplace -> limited flux -> output as a
+dataflow pipeline.  The TPU formulation:
+
+  * grid = (nz, ny/ty): z is fully parallel (paper: "hdiff can be fully
+    parallelized in the vertical dimension"); y is tiled into windows.
+  * The y-halo (2 points) is realized with three aliased input refs
+    (prev / cur / next window) — the Pallas idiom for overlapping windows;
+    HBM->VMEM block transfers are double-buffered by the Pallas pipeline,
+    which is exactly the paper's load/compute/store dataflow overlap.
+  * x stays whole inside a window (the paper's windows also keep one axis
+    whole per PE); lane dimension = x for VPU alignment.
+
+Compute is fp32 internally; bf16 in/out supported (paper's half-precision
+mode).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.hdiff.ref import DEFAULT_COEFF
+
+
+def _hdiff_kernel(prev_ref, cur_ref, next_ref, out_ref, *, coeff: float,
+                  ny: int, ty: int):
+    j = pl.program_id(1)
+    nx = cur_ref.shape[2]
+
+    prev = prev_ref[0].astype(jnp.float32)     # (ty, nx)
+    cur = cur_ref[0].astype(jnp.float32)
+    nxt = next_ref[0].astype(jnp.float32)
+    # Assemble the VMEM working window with a 2-row halo on each side.
+    work = jnp.concatenate([prev[-2:], cur, nxt[:2]], axis=0)  # (ty+4, nx)
+
+    def s(dj: int, di: int) -> jnp.ndarray:
+        """Window shifted by (dj, di), cropped to the x-interior (halo 2)."""
+        return work[2 + dj: 2 + dj + ty, 2 + di: nx - 2 + di]
+
+    def lap(dj: int, di: int) -> jnp.ndarray:
+        # true-Laplacian sign (see ref.py): Σ neighbors - 4·center
+        return ((s(dj, di - 1) + s(dj, di + 1)
+                 + s(dj - 1, di) + s(dj + 1, di))
+                - 4.0 * s(dj, di))
+
+    lap_c, lap_xp, lap_xm = lap(0, 0), lap(0, 1), lap(0, -1)
+    lap_yp, lap_ym = lap(1, 0), lap(-1, 0)
+
+    flx = lap_xp - lap_c
+    flx_m = lap_c - lap_xm
+    fly = lap_yp - lap_c
+    fly_m = lap_c - lap_ym
+    # COSMO flux limiter.
+    flx = jnp.where(flx * (s(0, 1) - s(0, 0)) > 0.0, 0.0, flx)
+    flx_m = jnp.where(flx_m * (s(0, 0) - s(0, -1)) > 0.0, 0.0, flx_m)
+    fly = jnp.where(fly * (s(1, 0) - s(0, 0)) > 0.0, 0.0, fly)
+    fly_m = jnp.where(fly_m * (s(0, 0) - s(-1, 0)) > 0.0, 0.0, fly_m)
+
+    interior = s(0, 0) - coeff * ((flx - flx_m) + (fly - fly_m))
+
+    # Rows outside [2, ny-2) pass through (global-boundary ring).
+    row_ids = j * ty + jax.lax.broadcasted_iota(jnp.int32, (ty, 1), 0)
+    valid = (row_ids >= 2) & (row_ids < ny - 2)
+    center = work[2: 2 + ty, :]
+    res = center.at[:, 2: nx - 2].set(
+        jnp.where(valid, interior, center[:, 2: nx - 2]))
+    out_ref[0] = res.astype(out_ref.dtype)
+
+
+def hdiff_pallas(src: jnp.ndarray, coeff: float = DEFAULT_COEFF,
+                 ty: int = 8, interpret: bool = False) -> jnp.ndarray:
+    """Tiled compound hdiff.  src: (nz, ny, nx), ny % ty == 0, ty >= 2."""
+    nz, ny, nx = src.shape
+    if ny % ty or ty < 2:
+        raise ValueError(f"ny={ny} must be divisible by ty={ty} >= 2")
+    nyb = ny // ty
+
+    spec = functools.partial(pl.BlockSpec, (1, ty, nx))
+    in_specs = [
+        spec(lambda k, j: (k, jnp.maximum(j - 1, 0), 0)),          # prev
+        spec(lambda k, j: (k, j, 0)),                              # cur
+        spec(lambda k, j: (k, jnp.minimum(j + 1, nyb - 1), 0)),    # next
+    ]
+    out_spec = spec(lambda k, j: (k, j, 0))
+
+    kernel = functools.partial(_hdiff_kernel, coeff=coeff, ny=ny, ty=ty)
+    fn = pl.pallas_call(
+        kernel,
+        grid=(nz, nyb),
+        in_specs=in_specs,
+        out_specs=out_spec,
+        out_shape=jax.ShapeDtypeStruct(src.shape, src.dtype),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+        name="nero_hdiff",
+    )
+    return fn(src, src, src)

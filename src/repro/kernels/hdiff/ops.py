@@ -1,0 +1,41 @@
+"""Jitted public entry points for hdiff (planner-aware dispatch).
+
+`hdiff(...)` picks the implementation: the Pallas kernel on TPU (or when
+`interpret=True` is forced for validation), else the pure-jnp oracle — the
+differentiable path used by the weather dycore during training.
+Tile sizes come from the NERO autotuner unless overridden.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import autotune, tiling
+from repro.kernels.hdiff import ref as _ref
+from repro.kernels.hdiff.hdiff import hdiff_pallas
+
+
+def plan_tile(grid_shape, dtype) -> int:
+    """Auto-tuned y-window for the Pallas kernel (paper Fig. 6 stage)."""
+    tuned = autotune.tune(tiling.HDIFF, grid_shape, dtype)
+    ty = tuned.plan.tile[1]
+    ny = grid_shape[1]
+    while ny % ty or ty < 2:      # snap to a legal divisor
+        ty = ty // 2 if ty > 2 else ny
+        if ty == ny:
+            break
+    return max(2, ty)
+
+
+@functools.partial(jax.jit, static_argnames=("coeff", "use_pallas", "ty",
+                                             "interpret"))
+def hdiff(src: jnp.ndarray, coeff: float = _ref.DEFAULT_COEFF,
+          use_pallas: bool = False, ty: int = 0,
+          interpret: bool = True) -> jnp.ndarray:
+    if use_pallas:
+        ty = ty or plan_tile(src.shape, src.dtype)
+        return hdiff_pallas(src, coeff=coeff, ty=ty, interpret=interpret)
+    return _ref.hdiff(src, coeff=coeff)

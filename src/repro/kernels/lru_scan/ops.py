@@ -1,0 +1,19 @@
+"""Jitted entry point for the LRU sweep kernel."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.lru_scan import ref as _ref
+from repro.kernels.lru_scan.lru_scan import lru_scan_pallas
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas", "tt", "tc",
+                                             "interpret"))
+def lru_scan(a, b, use_pallas: bool = False, tt: int = 32, tc: int = 128,
+             interpret: bool = True):
+    if use_pallas:
+        return lru_scan_pallas(a, b, tt=tt, tc=tc, interpret=interpret)
+    return _ref.lru_scan_ref(a, b)

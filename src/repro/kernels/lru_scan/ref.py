@@ -1,0 +1,22 @@
+"""Oracle for the linear-recurrence sweep h_t = a_t h_{t-1} + b_t.
+
+This is the temporal analogue of vadvc's Thomas forward sweep — the kernel
+NERO's design maps onto RG-LRU (recurrentgemma) and SSM state updates.
+Layout: (T, C) — time major, channels minor (lane dim)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def lru_scan_ref(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """a, b: (T, C) -> h: (T, C), h_0 = b_0 (zero initial state)."""
+
+    def combine(lhs, rhs):
+        a_l, b_l = lhs
+        a_r, b_r = rhs
+        return a_l * a_r, b_l * a_r + b_r
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=0)
+    return h

@@ -1,0 +1,39 @@
+"""Jitted public entry points for vadvc (planner-aware dispatch)."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import autotune, tiling
+from repro.kernels.vadvc import ref as _ref
+from repro.kernels.vadvc.vadvc import vadvc_pallas
+
+
+def plan_tile(grid_shape, dtype):
+    """Auto-tuned (tj, ti) horizontal window (paper's 64x2 fp32 analogue)."""
+    tuned = autotune.tune(tiling.VADVC, grid_shape, dtype)
+    _, tj, ti = tuned.plan.tile
+    nz, ny, nx = grid_shape
+
+    def snap(t, n):
+        while n % t:
+            t //= 2
+        return max(1, t)
+
+    return snap(tj, ny), snap(ti, nx)
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas", "tj", "ti",
+                                             "interpret"))
+def vadvc(u_stage, wcon, u_pos, utens, utens_stage,
+          use_pallas: bool = False, tj: int = 0, ti: int = 0,
+          interpret: bool = True):
+    if use_pallas:
+        if not (tj and ti):
+            tj, ti = plan_tile(u_stage.shape, u_stage.dtype)
+        return vadvc_pallas(u_stage, wcon, u_pos, utens, utens_stage,
+                            tj=tj, ti=ti, interpret=interpret)
+    return _ref.vadvc(u_stage, wcon, u_pos, utens, utens_stage)

@@ -1,0 +1,5 @@
+from repro.kernels.xent.xent import xent_pallas
+from repro.kernels.xent.ops import fused_xent_mean
+from repro.kernels.xent import ref
+
+__all__ = ["xent_pallas", "fused_xent_mean", "ref"]

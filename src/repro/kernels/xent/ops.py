@@ -1,0 +1,36 @@
+"""Jitted wrapper for the fused cross-entropy kernel: padding + mean."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.xent.xent import xent_pallas
+
+
+@functools.partial(jax.jit, static_argnames=("vocab", "softcap",
+                                             "interpret"))
+def fused_xent_mean(hidden, head, targets, *, vocab: int = 0,
+                    softcap: float = 0.0, interpret: bool = False):
+    """Mean next-token NLL over (B, T) without materializing logits.
+
+    hidden: (B, T, D); head: (D, Vp); targets: (B, T).  Pads rows to the
+    block multiple with valid=0 (padding rows contribute nothing)."""
+    b, t, d = hidden.shape
+    n = b * t
+    h = hidden.reshape(n, d)
+    tg = targets.reshape(n)
+    valid = jnp.ones((n,), jnp.float32)
+    bn = min(128, n) if n % 128 else 128
+    pad = (-n) % max(bn, 1)
+    if pad:
+        h = jnp.pad(h, ((0, pad), (0, 0)))
+        tg = jnp.pad(tg, (0, pad))
+        valid = jnp.pad(valid, (0, pad))
+    nll = xent_pallas(h, head, tg, valid, vocab=vocab, softcap=softcap,
+                      block_n=min(128, h.shape[0]),
+                      block_v=min(512, head.shape[1]),
+                      interpret=interpret)
+    return nll.sum() / n

@@ -1,0 +1,35 @@
+"""Pure-jnp oracle for the fused cross-entropy kernel.
+
+Materializes the full (N, V) logits — the thing the kernel exists to
+avoid — so it is the correctness reference only.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def xent(hidden: jnp.ndarray, head: jnp.ndarray, targets: jnp.ndarray,
+         valid: jnp.ndarray | None = None, vocab: int = 0,
+         softcap: float = 0.0) -> jnp.ndarray:
+    """Sum of next-token NLL.
+
+    hidden: (N, D); head: (D, Vp); targets: (N,) int32 < vocab;
+    valid: (N,) bool mask (None -> all valid); vocab: logical vocab size
+    (masks physical padding columns of Vp).  Returns scalar f32 sum.
+    """
+    n, d = hidden.shape
+    vp = head.shape[1]
+    lg = (hidden.astype(jnp.float32) @ head.astype(jnp.float32))
+    if softcap:
+        lg = jnp.tanh(lg / softcap) * softcap
+    if vocab and vocab < vp:
+        lg = jnp.where(jnp.arange(vp) < vocab, lg, -1e30)
+    logz = jax.nn.logsumexp(lg, axis=-1)
+    gold = jnp.take_along_axis(lg, targets[:, None].astype(jnp.int32),
+                               axis=-1)[:, 0]
+    nll = logz - gold
+    if valid is not None:
+        nll = nll * valid.astype(jnp.float32)
+    return nll.sum()

@@ -1,0 +1,436 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", ""))
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this builds the real train/prefill/decode step with production
+shardings, lowers it against ShapeDtypeStruct inputs (no allocation),
+compiles the SPMD executable, and records:
+  * memory_analysis()  — proves the cell fits per-device HBM,
+  * cost_analysis()    — per-device FLOPs / bytes for the roofline,
+  * collective op bytes parsed from the compiled HLO,
+  * the derived roofline terms (core/roofline.py).
+
+Results are cached as JSON under benchmarks/results/dryrun/.
+
+Usage:
+  python -m repro.launch.dryrun --arch yi-34b --shape train_4k --mesh single
+  python -m repro.launch.dryrun --all --mesh both
+"""
+
+import argparse
+import dataclasses
+import json
+import math
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import registry
+from repro.configs.base import SHAPES
+from repro.core import hlo_cost, memmodel
+from repro.core import roofline as rl
+from repro.models import api
+from repro.parallel import policy
+from repro.parallel import sharding as shd
+from repro.train import loop as train_loop
+from repro.train import optim as opt_lib
+from repro.launch.mesh import make_production_mesh
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                           "benchmarks", "results", "dryrun")
+RESULTS_DIR = os.path.abspath(RESULTS_DIR)
+
+
+def _spec_tree(tree):
+    return jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), tree)
+
+
+def input_specs(model: api.Model, shape):
+    """ShapeDtypeStruct stand-ins for every model input of this cell."""
+    cfg = model.cfg
+    if shape.kind == "train":
+        return model.batch_spec(shape.global_batch, shape.seq_len)
+    if shape.kind == "prefill":
+        return model.batch_spec(shape.global_batch, shape.seq_len)
+    # decode
+    spec = {"token": jax.ShapeDtypeStruct((shape.global_batch, 1),
+                                          jnp.int32),
+            "pos": jax.ShapeDtypeStruct((), jnp.int32)}
+    if cfg.encdec:
+        spec["frames"] = jax.ShapeDtypeStruct(
+            (shape.global_batch, cfg.encdec.encoder_len, cfg.d_model),
+            jnp.dtype(cfg.dtype))
+    return spec
+
+
+def build_cell(arch: str, shape_name: str, mesh, *, remat: str = "full",
+               microbatches: int = 1, serve_param_kind: str = "serve",
+               scan_unroll: bool = False, moe_impl: str = "",
+               moe_chunk: int = 0, grad_dtype: str = "float32",
+               kv_dtype: str = ""):
+    """Returns (fn, example_args, in_shardings, out_shardings, meta).
+
+    scan_unroll=False: cells compile in scan form (layer scan body appears
+    once — mandatory for 60-80-layer archs on one build host) and the
+    roofline pass recovers exact totals with core/hlo_cost.py, which
+    multiplies each while body by the trip count XLA records in
+    backend_config known_trip_count."""
+    cfg = registry.get_config(arch)
+    if kv_dtype:
+        cfg = dataclasses.replace(cfg, kv_dtype=kv_dtype)
+    if cfg.moe and (moe_impl or moe_chunk):
+        kw = {}
+        if moe_impl:
+            kw["impl"] = moe_impl
+        if moe_chunk:
+            kw["router_chunk"] = moe_chunk
+        cfg = dataclasses.replace(
+            cfg, moe=dataclasses.replace(cfg.moe, **kw))
+    shape = SHAPES[shape_name]
+    model = api.build(cfg)
+    chips = mesh.devices.size
+
+    p_shapes = model.param_shapes()
+
+    if shape.kind == "train":
+        opt_cfg = opt_lib.OptConfig()
+        step_fn, _, (p_shard, o_shard) = train_loop.make_train_step(
+            model, mesh, opt_cfg, microbatches=microbatches, remat=remat,
+            scan_unroll=scan_unroll, grad_dtype=grad_dtype)
+        o_shapes = jax.eval_shape(opt_lib.init_opt_state, p_shapes)
+        batch = model.batch_spec(shape.global_batch, shape.seq_len)
+        b_shard = jax.tree.map(
+            lambda s: NamedSharding(
+                mesh, shd.data_spec(mesh, s.shape[0], len(s.shape))), batch)
+        rep = NamedSharding(mesh, P())
+        m_shard = {"grad_norm": rep, "lr": rep, "loss": rep}
+        in_sh = (p_shard, o_shard, b_shard)
+        out_sh = (p_shard, o_shard, m_shard)
+        args = (p_shapes, o_shapes, batch)
+        tokens = shape.global_batch * shape.seq_len
+        return step_fn, args, in_sh, out_sh, dict(
+            model=model, tokens=tokens, kind="train", chips=chips,
+            p_shapes=p_shapes, p_shard=p_shard)
+
+    p_shard = shd.params_sharding(p_shapes, mesh, serve_param_kind)
+
+    if shape.kind == "prefill":
+        def prefill_fn(params, batch):
+            logits, cache = model.prefill(params, batch,
+                                          max_len=shape.seq_len,
+                                          scan_unroll=scan_unroll)
+            return logits[:, -1:], cache
+
+        batch = model.batch_spec(shape.global_batch, shape.seq_len)
+        b_shard = jax.tree.map(
+            lambda s: NamedSharding(
+                mesh, shd.data_spec(mesh, s.shape[0], len(s.shape))), batch)
+        cache_shapes = jax.eval_shape(
+            lambda: model.init_cache(shape.global_batch, shape.seq_len))
+        c_shard = shd.cache_sharding(cache_shapes, mesh, shape.global_batch)
+        in_sh = (p_shard, b_shard)
+        out_sh = (None, c_shard)
+        args = (p_shapes, batch)
+        tokens = shape.global_batch * shape.seq_len
+        return prefill_fn, args, in_sh, out_sh, dict(
+            model=model, tokens=tokens, kind="prefill", chips=chips,
+            p_shapes=p_shapes, p_shard=p_shard, cache_shapes=cache_shapes,
+            cache_shard=c_shard)
+
+    # decode: one new token against a seq_len-deep cache
+    cache_shapes = jax.eval_shape(
+        lambda: model.init_cache(shape.global_batch, shape.seq_len))
+    c_shard = shd.cache_sharding(cache_shapes, mesh, shape.global_batch)
+
+    def decode_fn(params, cache, token, pos):
+        logits, new_cache = model.decode_step(params, cache, token, pos,
+                                              scan_unroll=scan_unroll)
+        return logits, new_cache
+
+    tok = jax.ShapeDtypeStruct((shape.global_batch, 1), jnp.int32)
+    pos = jax.ShapeDtypeStruct((), jnp.int32)
+    tok_shard = NamedSharding(mesh, shd.data_spec(mesh, shape.global_batch,
+                                                  2))
+    rep = NamedSharding(mesh, P())
+    in_sh = (p_shard, c_shard, tok_shard, rep)
+    out_sh = (None, c_shard)
+    args = (p_shapes, cache_shapes, tok, pos)
+    tokens = shape.global_batch * 1
+    return decode_fn, args, in_sh, out_sh, dict(
+        model=model, tokens=tokens, kind="decode", chips=chips,
+        p_shapes=p_shapes, p_shard=p_shard, cache_shapes=cache_shapes,
+        cache_shard=c_shard)
+
+
+def choose_microbatches(cfg, shape, mesh) -> int:
+    """Smallest gradient-accumulation depth whose analytic per-device
+    estimate fits HBM (the production launcher's knob; recorded in the
+    dry-run JSON).  Non-train shapes always use 1."""
+    if shape.kind != "train":
+        return 1
+    model = api.build(cfg)
+    p_shapes = model.param_shapes()
+    p_shard = shd.params_sharding(p_shapes, mesh, "train")
+    b_axes = shd.batch_sharding(mesh, shape.global_batch)
+    dp = 1
+    if b_axes:
+        axes = b_axes if isinstance(b_axes, tuple) else (b_axes,)
+        dp = math.prod(mesh.shape[a] for a in axes)
+    cap = max(shape.global_batch // dp, 1)
+    mb = 1
+    while mb < cap:
+        est = memmodel.estimate(cfg, shape, mesh, p_shapes, p_shard,
+                                microbatches=mb)
+        if est["fits_16g"]:
+            break
+        mb *= 2
+    return min(mb, cap)
+
+
+def attn_kernel_addback(cfg, shape, mesh) -> float:
+    """Analytic per-device HBM bytes of the Pallas flash kernel (KV blocks
+    re-streamed once per q block; q/o boundary traffic is already charged
+    at the out-of-scope projection dots).  The kernelized-variant roofline
+    = HLO bytes with the flash_mha scope zeroed + this add-back."""
+    from repro.kernels.flash_attention.ops import auto_blocks
+    if shape.kind == "decode":
+        return 0.0                       # decode path is not the flash scope
+    b_axes = shd.batch_sharding(mesh, shape.global_batch)
+    dp = 1
+    if b_axes:
+        axes = b_axes if isinstance(b_axes, tuple) else (b_axes,)
+        dp = math.prod(mesh.shape[a] for a in axes)
+    b_loc = max(shape.global_batch // dp, 1)
+    dtype_b = 2
+    passes = 3.0 if shape.kind == "train" else 1.0   # fwd + remat + bwd
+
+    def one(n_calls: int, t: int, s: int) -> float:
+        """KV re-stream bytes for n_calls attentions of query len t over
+        kv len s: (nq - 1) extra passes over the K+V tensors."""
+        if n_calls == 0 or t <= 0 or s <= 0:
+            return 0.0
+        bq, _ = auto_blocks(t, s, cfg.hd, dtype_b)
+        nq = max(t // bq, 1)
+        kv = 2 * b_loc * s * cfg.n_kv_heads * cfg.hd * dtype_b
+        return float(n_calls * (nq - 1) * kv * passes)
+
+    t = shape.seq_len
+    if cfg.encdec:
+        # enc self-attn over encoder_len; dec self-attn over t; cross-attn
+        # streams the 1500-frame encoder KV, NOT the decoder sequence.
+        f = cfg.encdec.encoder_len
+        return (one(cfg.encdec.encoder_layers, f, f)
+                + one(cfg.n_layers, t, t)
+                + one(cfg.n_layers, t, f))
+    n_attn = sum(1 for i in range(cfg.n_layers)
+                 if cfg.pattern[i % len(cfg.pattern)] in
+                 ("attn", "local", "global"))
+    return one(n_attn, t, t)
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str, *,
+             remat: str = "full", microbatches: int = 0,
+             variant: str = "baseline", force: bool = False,
+             donate: bool = True, attn_kernel: bool = False,
+             moe_impl: str = "", moe_chunk: int = 0,
+             fsdp_gather: bool = False, seq_shard: bool = False,
+             grad_dtype: str = "float32", kv_dtype: str = "") -> dict:
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    out_path = os.path.join(
+        RESULTS_DIR, f"{arch}__{shape_name}__{mesh_kind}__{variant}.json")
+    if os.path.exists(out_path) and not force:
+        with open(out_path) as f:
+            return json.load(f)
+
+    cfg = registry.get_config(arch)
+    why_skip = registry.skips(cfg, shape_name)
+    result = {"arch": arch, "shape": shape_name, "mesh": mesh_kind,
+              "variant": variant, "remat": remat,
+              "microbatches": microbatches}
+    if why_skip:
+        result.update(status="skipped", reason=why_skip)
+        with open(out_path, "w") as f:
+            json.dump(result, f, indent=2)
+        return result
+
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    chips = mesh.devices.size
+    shape = SHAPES[shape_name]
+    if not microbatches:
+        microbatches = choose_microbatches(cfg, shape, mesh)
+        result["microbatches"] = microbatches
+    try:
+        t0 = time.time()
+        fn, args, in_sh, out_sh, meta = build_cell(
+            arch, shape_name, mesh, remat=remat, microbatches=microbatches,
+            moe_impl=moe_impl, moe_chunk=moe_chunk, grad_dtype=grad_dtype,
+            kv_dtype=kv_dtype)
+        donate_argnums = ()
+        if donate and meta["kind"] == "train":
+            donate_argnums = (0, 1)
+        elif donate and meta["kind"] == "decode":
+            donate_argnums = (1,)
+        batch_axes = shd.batch_sharding(mesh, shape.global_batch)
+        with mesh, policy.activation_rules(
+                batch_axes, fsdp_gather=fsdp_gather, seq_shard=seq_shard,
+                model_par=mesh.shape.get("model", 1)):
+            jitted = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh,
+                             donate_argnums=donate_argnums)
+            lowered = jitted.lower(*args)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+
+        ma = compiled.memory_analysis()
+        mem = {}
+        if ma is not None:
+            for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                      "temp_size_in_bytes", "alias_size_in_bytes",
+                      "generated_code_size_in_bytes"):
+                mem[k] = int(getattr(ma, k, 0))
+            live = (mem["argument_size_in_bytes"]
+                    + mem["temp_size_in_bytes"]
+                    + mem["output_size_in_bytes"]
+                    - mem["alias_size_in_bytes"])
+            # XLA:CPU fuses far less than TPU -> temp_size overestimates
+            # TPU liveness; recorded as a labeled proxy.  The analytic model
+            # below is the fit criterion (see EXPERIMENTS.md §Dry-run).
+            mem["xla_cpu_live_bytes_per_device"] = int(live)
+        analytic = memmodel.estimate(
+            cfg, shape, mesh, meta["p_shapes"], meta["p_shard"],
+            meta.get("cache_shapes"), meta.get("cache_shard"),
+            microbatches=microbatches)
+        mem["analytic"] = {k: int(v) if not isinstance(v, bool) else v
+                           for k, v in analytic.items()}
+        mem["fits_16g"] = analytic["fits_16g"]
+
+        xla_cost = compiled.cost_analysis() or {}
+        xla_small = {k: float(v) for k, v in xla_cost.items()
+                     if k in ("flops", "bytes accessed", "transcendentals")}
+        # Loop-aware totals from the compiled HLO (core/hlo_cost.py):
+        # while bodies x known_trip_count — exact where XLA's own
+        # cost_analysis counts loop bodies once.
+        scopes = ("flash_mha",) if attn_kernel else ()
+        lc = hlo_cost.analyze_text(compiled.as_text(),
+                                   zero_byte_scopes=scopes)
+        addback = (attn_kernel_addback(cfg, shape, mesh)
+                   if attn_kernel else 0.0)
+        cost_small = {
+            "flops": lc.flops,
+            "bytes accessed": lc.bytes_accessed + addback,
+            "bytes fused": lc.bytes_fused + addback,
+            "transcendentals": lc.transcendentals,
+            "xla_flops_loops_once": xla_small.get("flops", 0.0),
+            "xla_bytes_loops_once": xla_small.get("bytes accessed", 0.0),
+        }
+        if attn_kernel:
+            cost_small["attn_kernel_addback_bytes"] = addback
+        coll = {k: int(v) for k, v in lc.collective_bytes.items()}
+        mf = rl.model_flops(cfg.param_count(), cfg.active_param_count(),
+                            meta["tokens"], meta["kind"])
+        terms = rl.analyze(cost_small, coll, chips, mf)
+        result.update(
+            status="ok",
+            chips=chips,
+            lower_s=round(t_lower, 2), compile_s=round(t_compile, 2),
+            memory=mem, cost=cost_small,
+            collectives=coll,
+            tokens=meta["tokens"],
+            model_flops=mf,
+            param_count=cfg.param_count(),
+            active_param_count=cfg.active_param_count(),
+            roofline=dict(
+                compute_s=terms.compute_s, memory_s=terms.memory_s,
+                collective_s=terms.collective_s, dominant=terms.dominant,
+                step_time_bound_s=terms.step_time_s,
+                useful_flops_ratio=terms.useful_flops_ratio,
+                roofline_fraction=terms.roofline_fraction),
+        )
+    except Exception as e:      # noqa: BLE001 — record the failure
+        result.update(status="error", error=f"{type(e).__name__}: {e}",
+                      traceback=traceback.format_exc()[-4000:])
+    with open(out_path, "w") as f:
+        json.dump(result, f, indent=2)
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=registry.ARCH_IDS)
+    ap.add_argument("--shape", choices=tuple(SHAPES))
+    ap.add_argument("--mesh", choices=("single", "multi", "both"),
+                    default="single")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--remat", default="full",
+                    choices=("full", "dots", "none"))
+    ap.add_argument("--microbatches", type=int, default=0,
+                    help="0 = auto (smallest depth that fits HBM)")
+    ap.add_argument("--variant", default="baseline")
+    ap.add_argument("--attn-kernel", action="store_true",
+                    help="kernelized-attention roofline: zero-byte the "
+                         "flash_mha scope + analytic kernel traffic")
+    ap.add_argument("--moe-impl", default="",
+                    choices=("", "onehot", "gather"),
+                    help="override MoE dispatch implementation")
+    ap.add_argument("--moe-chunk", type=int, default=0,
+                    help="override MoE router chunk (tokens)")
+    ap.add_argument("--fsdp-gather", action="store_true",
+                    help="pin block weights to gathered layout at use")
+    ap.add_argument("--grad-bf16", action="store_true",
+                    help="bf16 microbatch grad accumulation/reduction")
+    ap.add_argument("--kv-int8", action="store_true",
+                    help="int8 KV cache with per-(pos,head) scales")
+    ap.add_argument("--seq-shard", action="store_true",
+                    help="sequence-parallel inter-block activations")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    cells = []
+    if args.all:
+        for arch in registry.ARCH_IDS:
+            for shape in SHAPES:
+                cells.append((arch, shape))
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        cells.append((args.arch, args.shape))
+
+    for mesh_kind in meshes:
+        for arch, shape in cells:
+            r = run_cell(arch, shape, mesh_kind, remat=args.remat,
+                         microbatches=args.microbatches,
+                         variant=args.variant, force=args.force,
+                         attn_kernel=args.attn_kernel,
+                         moe_impl=args.moe_impl, moe_chunk=args.moe_chunk,
+                         fsdp_gather=args.fsdp_gather,
+                         seq_shard=args.seq_shard,
+                         grad_dtype="bfloat16" if args.grad_bf16
+                         else "float32",
+                         kv_dtype="int8" if args.kv_int8 else "")
+            line = {k: r.get(k) for k in ("arch", "shape", "mesh", "status")}
+            if r.get("status") == "ok":
+                line["dominant"] = r["roofline"]["dominant"]
+                line["fit"] = r["memory"].get("fits_16g")
+                line["compile_s"] = r.get("compile_s")
+                line["GB/dev"] = round(
+                    r["memory"].get("analytic", {}).get("total", 0)
+                    / 2**30, 2)
+                line["GB/dev_xla_cpu"] = round(
+                    r["memory"].get("xla_cpu_live_bytes_per_device", 0)
+                    / 2**30, 2)
+            elif r.get("status") == "error":
+                line["error"] = r.get("error", "")[:140]
+            else:
+                line["reason"] = r.get("reason")
+            print(json.dumps(line))
+
+
+if __name__ == "__main__":
+    main()

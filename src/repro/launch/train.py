@@ -1,0 +1,55 @@
+"""Training launcher: --arch <id> [--smoke] with checkpoint/resume.
+
+On this CPU container use --smoke (reduced config, tiny mesh).  On a real
+pod the same entry point builds the production mesh and full config."""
+
+from __future__ import annotations
+
+import argparse
+
+import jax
+
+from repro.configs import registry
+from repro.data import synthetic
+from repro.models import api
+from repro.train import loop, optim
+from repro.launch.mesh import make_mesh, make_production_mesh
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=registry.ARCH_IDS)
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced config on the local device(s)")
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--multi-pod", action="store_true")
+    args = ap.parse_args()
+
+    cfg = registry.get_config(args.arch)
+    if args.smoke:
+        cfg = registry.reduced_config(cfg)
+        n = len(jax.devices())
+        mesh = make_mesh((1, n), ("data", "model"))
+    else:
+        mesh = make_production_mesh(multi_pod=args.multi_pod)
+
+    model = api.build(cfg)
+    opt_cfg = optim.OptConfig(lr=args.lr, warmup_steps=5,
+                              total_steps=args.steps)
+    data = synthetic.iterator(cfg, args.batch, args.seq)
+    params, opt_state, hist = loop.fit(
+        model, mesh, data, steps=args.steps, opt_cfg=opt_cfg,
+        microbatches=args.microbatches, ckpt_dir=args.ckpt_dir,
+        ckpt_every=args.ckpt_every)
+    print(f"[train] done: loss {hist[0]['loss']:.4f} -> "
+          f"{hist[-1]['loss']:.4f} over {len(hist)} steps")
+
+
+if __name__ == "__main__":
+    main()

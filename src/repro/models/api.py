@@ -1,0 +1,99 @@
+"""Unified model API: one `Model` facade per architecture family.
+
+    model = build(cfg)
+    params = model.init(key)                      # materialized
+    shapes = model.param_shapes()                 # ShapeDtypeStructs (dry-run)
+    loss   = model.loss(params, batch)
+    logits, cache = model.prefill(params, tokens_or_batch)
+    logits, cache = model.decode_step(params, cache, token, pos)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import encdec, lm
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+
+    @property
+    def family(self) -> str:
+        return "encdec" if self.cfg.encdec else "lm"
+
+    # ---- params -----------------------------------------------------------
+    def init(self, key):
+        if self.family == "encdec":
+            return encdec.init_params(self.cfg, key)
+        return lm.init_params(self.cfg, key)
+
+    def param_shapes(self):
+        return jax.eval_shape(lambda: self.init(jax.random.PRNGKey(0)))
+
+    # ---- training ---------------------------------------------------------
+    def loss(self, params, batch: Dict[str, jnp.ndarray],
+             remat: str = "full", scan_unroll: bool = False):
+        if self.family == "encdec":
+            return encdec.loss_fn(self.cfg, params, batch, remat=remat,
+                                  scan_unroll=scan_unroll)
+        return lm.loss_fn(self.cfg, params, batch, remat=remat,
+                          scan_unroll=scan_unroll)
+
+    def batch_spec(self, batch: int, seq: int) -> Dict[str, Any]:
+        """ShapeDtypeStructs for one training batch (dry-run input_specs)."""
+        spec = {"tokens": jax.ShapeDtypeStruct((batch, seq), jnp.int32)}
+        if self.family == "encdec":
+            spec["frames"] = jax.ShapeDtypeStruct(
+                (batch, self.cfg.encdec.encoder_len, self.cfg.d_model),
+                jnp.dtype(self.cfg.dtype))
+        return spec
+
+    # ---- serving ----------------------------------------------------------
+    def init_cache(self, batch: int, max_len: int):
+        if self.family == "encdec":
+            cache = encdec.init_cache(self.cfg, batch, max_len)
+            cache["enc"] = jnp.zeros(
+                (batch, self.cfg.encdec.encoder_len, self.cfg.d_model),
+                jnp.dtype(self.cfg.dtype))
+            return cache
+        return lm.init_cache(self.cfg, batch, max_len)
+
+    def prefill(self, params, batch: Dict[str, jnp.ndarray],
+                max_len: Optional[int] = None, scan_unroll: bool = False):
+        tokens = batch["tokens"]
+        if self.family == "encdec":
+            enc = encdec.encode(self.cfg, params, batch["frames"],
+                                scan_unroll=scan_unroll)
+            cache = encdec.init_cache(self.cfg, tokens.shape[0],
+                                      max_len or tokens.shape[1])
+            logits, cache = encdec.decode(self.cfg, params, tokens, enc,
+                                          mode="prefill", cache=cache,
+                                          scan_unroll=scan_unroll)
+            return logits, {"dec": cache["dec"], "enc": enc}
+        return lm.prefill(self.cfg, params, tokens, max_len,
+                          scan_unroll=scan_unroll)
+
+    def decode_step(self, params, cache, token, pos,
+                    frames_enc: Optional[jnp.ndarray] = None,
+                    scan_unroll: bool = False):
+        if self.family == "encdec":
+            enc = cache["enc"] if frames_enc is None else frames_enc
+            logits, new = encdec.decode(self.cfg, params, token, enc,
+                                        mode="decode",
+                                        cache={"dec": cache["dec"]}, pos=pos,
+                                        scan_unroll=scan_unroll)
+            return logits, {"dec": new["dec"], "enc": enc}
+        return lm.decode_step(self.cfg, params, cache, token, pos,
+                              scan_unroll=scan_unroll)
+
+
+def build(cfg: ModelConfig) -> Model:
+    return Model(cfg)

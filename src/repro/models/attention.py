@@ -1,0 +1,169 @@
+"""GQA attention: dense, chunked-flash (memory-efficient), and decode paths.
+
+The chunked-flash path is the NERO idea applied to sequence dimension: the
+KV stream is tiled into VMEM-sized windows, consumed with an online-softmax
+dataflow, never materializing the (T, S) score matrix in HBM.  It is pure
+JAX (differentiable, GSPMD-shardable); the Pallas twin for the TPU serving
+path lives in kernels/flash_attention.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.parallel import policy
+
+NEG_INF = -1e30
+
+
+def _mask(qpos, kpos, causal: bool, window: int):
+    """(..., Tq, Tk) boolean validity mask from global positions."""
+    m = jnp.ones(qpos.shape[:-1] + (qpos.shape[-1], kpos.shape[-1]),
+                 dtype=bool)
+    d = qpos[..., :, None] - kpos[..., None, :]
+    if causal:
+        m &= d >= 0
+    if window:
+        m &= d < window
+    return m
+
+
+def dense_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    q_offset: int = 0, softcap: float = 0.0):
+    """q: (B, T, H, hd); k, v: (B, S, K, hd).  Materializes scores — use for
+    short T·S only (decode, smoke tests)."""
+    b, t, h, hd = q.shape
+    s, kh = k.shape[1], k.shape[2]
+    g = h // kh
+    qs = (q * (hd ** -0.5)).reshape(b, t, kh, g, hd)
+    scores = jnp.einsum("btkgh,bskh->bkgts", qs.astype(jnp.float32),
+                        k.astype(jnp.float32))
+    if softcap:
+        scores = jnp.tanh(scores / softcap) * softcap
+    qpos = q_offset + jnp.arange(t)
+    kpos = jnp.arange(s)
+    m = _mask(qpos, kpos, causal, window)
+    scores = jnp.where(m, scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgts,bskh->btkgh", p, v.astype(jnp.float32))
+    return out.reshape(b, t, h, hd).astype(q.dtype)
+
+
+def _divisor_chunk(t: int, chunk: int) -> int:
+    """Largest chunk size <= `chunk` that divides t (whisper's encoder
+    length 1500 is not a power-of-two multiple)."""
+    c = min(chunk, t)
+    while t % c:
+        c -= 1
+    return c
+
+
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    q_chunk: int = 1024, kv_chunk: int = 1024,
+                    softcap: float = 0.0):
+    """Two-level chunked online-softmax attention (no (T,S) materialization).
+
+    Baseline computes every (q_chunk, kv_chunk) block with masking; the
+    block-skip optimization for causal/windowed patterns is a §Perf item.
+    """
+    with jax.named_scope("flash_mha"):
+        return _flash_attention(q, k, v, causal=causal, window=window,
+                                q_chunk=q_chunk, kv_chunk=kv_chunk,
+                                softcap=softcap)
+
+
+def _flash_attention(q, k, v, *, causal, window, q_chunk, kv_chunk, softcap):
+    """Body of flash_attention.  The named scope tags every op (incl. the
+    q/kv scan bodies) in HLO metadata: kernels/flash_attention is the Pallas
+    twin whose VMEM-resident blocks the roofline's kernelized variant
+    credits via hlo_cost zero_byte_scopes — this pure-JAX form is what
+    compiles on the CPU dry-run host and stays differentiable/shardable."""
+    b, t, h, hd = q.shape
+    s, kh = k.shape[1], k.shape[2]
+    g = h // kh
+    q_chunk = _divisor_chunk(t, q_chunk)
+    kv_chunk = _divisor_chunk(s, kv_chunk)
+    nq, nk = t // q_chunk, s // kv_chunk
+
+    qs = (q * (hd ** -0.5)).reshape(b, nq, q_chunk, kh, g, hd)
+    ks = k.reshape(b, nk, kv_chunk, kh, hd)
+    vs = v.reshape(b, nk, kv_chunk, kh, hd)
+    # Pin batch + kv-head sharding so the scan accumulators (created fresh
+    # inside the loop) don't end up replicated by sharding propagation.
+    qs = policy.batch_model_at(qs, 3)
+    ks = policy.batch_model_at(ks, 3)
+    vs = policy.batch_model_at(vs, 3)
+
+    def q_body(_, qi_blk):
+        qi, q_blk = qi_blk                      # q_blk: (b, qc, kh, g, hd)
+        qpos = qi * q_chunk + jnp.arange(q_chunk)
+
+        def kv_body(carry, ki_blk):
+            m_run, l_run, acc = carry
+            ki, k_blk, v_blk = ki_blk
+            scores = jnp.einsum("bqkgh,bskh->bkgqs",
+                                q_blk.astype(jnp.float32),
+                                k_blk.astype(jnp.float32))
+            if softcap:
+                scores = jnp.tanh(scores / softcap) * softcap
+            kpos = ki * kv_chunk + jnp.arange(kv_chunk)
+            msk = _mask(qpos, kpos, causal, window)
+            scores = jnp.where(msk, scores, NEG_INF)
+            m_new = jnp.maximum(m_run, scores.max(axis=-1))
+            p = jnp.exp(scores - m_new[..., None])
+            corr = jnp.exp(m_run - m_new)
+            l_new = l_run * corr + p.sum(axis=-1)
+            pv = jnp.einsum("bkgqs,bskh->bqkgh", p, v_blk.astype(jnp.float32))
+            acc_new = acc * corr.transpose(0, 3, 1, 2)[..., None] + pv
+            return (m_new, l_new, acc_new), None
+
+        m0 = policy.batch_model_at(
+            jnp.full((b, kh, g, q_chunk), NEG_INF, jnp.float32), 1)
+        l0 = policy.batch_model_at(
+            jnp.zeros((b, kh, g, q_chunk), jnp.float32), 1)
+        a0 = policy.batch_model_at(
+            jnp.zeros((b, q_chunk, kh, g, hd), jnp.float32), 2)
+        (m_f, l_f, acc), _ = jax.lax.scan(
+            kv_body, (m0, l0, a0),
+            (jnp.arange(nk), ks.swapaxes(0, 1), vs.swapaxes(0, 1)))
+        l_t = l_f.transpose(0, 3, 1, 2)[..., None]
+        out_blk = acc / jnp.maximum(l_t, 1e-37)
+        return None, out_blk
+
+    _, out = jax.lax.scan(q_body, None,
+                          (jnp.arange(nq), qs.swapaxes(0, 1)))
+    out = out.swapaxes(0, 1).reshape(b, t, h, hd)
+    return out.astype(q.dtype)
+
+
+def decode_attention(q, k_cache, v_cache, pos, *, window: int = 0,
+                     softcap: float = 0.0):
+    """One-token attention over a cache.
+
+    q: (B, 1, H, hd); caches (B, S, K, hd).  `pos` is the index of the token
+    being generated (its K/V already written at `pos` — or `pos % S` for
+    ring-buffer local caches).  Validity: written slots only.
+    """
+    b, _, h, hd = q.shape
+    s, kh = k_cache.shape[1], k_cache.shape[2]
+    g = h // kh
+    qs = (q * (hd ** -0.5)).reshape(b, kh, g, hd)
+    scores = jnp.einsum("bkgh,bskh->bkgs", qs.astype(jnp.float32),
+                        k_cache.astype(jnp.float32))
+    if softcap:
+        scores = jnp.tanh(scores / softcap) * softcap
+    slot = jnp.arange(s)
+    if window:
+        # ring buffer of size s == window: slots written iff slot <= pos
+        # (before wrap) or always (after wrap).
+        valid = jnp.where(pos >= s, True, slot <= pos)
+    else:
+        valid = slot <= pos
+    scores = jnp.where(valid[None, None, None, :], scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgs,bskh->bkgh", p, v_cache.astype(jnp.float32))
+    return out.reshape(b, 1, h, hd).astype(q.dtype)

@@ -1,0 +1,209 @@
+"""Decoder block assembly: one init/apply pair per block kind.
+
+Kinds: "attn"/"global" (full causal attention + FFN), "local" (sliding
+window + FFN), "rec" (RG-LRU + FFN), "ssd" (Mamba2 mixer, no FFN).
+All applies share the signature
+    apply(cfg, params, x, *, positions, mode, cache, pos) -> (x, cache', aux)
+where mode ∈ {"train", "prefill", "decode"}; caches are pytrees (None when
+kind needs none in that mode).
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn_lib
+from repro.models.common import (dense_init, norm_apply, norm_init,
+                                 qk_norm_apply, rope_apply)
+from repro.models.mlp import mlp_apply, mlp_init
+from repro.models.moe import moe_apply, moe_init
+from repro.models.rglru import rglru_block_apply, rglru_init, rglru_init_state
+from repro.models.ssd import ssd_apply, ssd_init, ssd_init_state
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def attn_init(key, cfg: ModelConfig, dtype):
+    d, hd = cfg.d_model, cfg.hd
+    nq, nkv = cfg.n_heads * hd, cfg.n_kv_heads * hd
+    ks = jax.random.split(key, 4)
+    p = {"wq": dense_init(ks[0], d, nq, dtype),
+         "wk": dense_init(ks[1], d, nkv, dtype),
+         "wv": dense_init(ks[2], d, nkv, dtype),
+         "wo": dense_init(ks[3], nq, d, dtype)}
+    if cfg.qk_norm:
+        p["q_scale"] = jnp.ones((hd,), jnp.float32)
+        p["k_scale"] = jnp.ones((hd,), jnp.float32)
+    return p
+
+
+def block_init(kind: str, key, cfg: ModelConfig, dtype):
+    ks = jax.random.split(key, 4)
+    p = {"norm1": norm_init(cfg, cfg.d_model)}
+    if kind in ("attn", "global", "local"):
+        p["attn"] = attn_init(ks[0], cfg, dtype)
+    elif kind == "rec":
+        p["rec"] = rglru_init(ks[0], cfg, dtype)
+    elif kind == "ssd":
+        p["ssd"] = ssd_init(ks[0], cfg, dtype)
+    else:
+        raise ValueError(kind)
+    if kind != "ssd":
+        p["norm2"] = norm_init(cfg, cfg.d_model)
+        p["ffn"] = (moe_init(ks[1], cfg, dtype) if cfg.moe
+                    else mlp_init(ks[1], cfg, dtype))
+    if cfg.sandwich_norm:
+        p["post1"] = norm_init(cfg, cfg.d_model)
+        if kind != "ssd":
+            p["post2"] = norm_init(cfg, cfg.d_model)
+    return p
+
+
+def init_block_cache(kind: str, cfg: ModelConfig, batch: int, max_len: int,
+                     dtype):
+    if kind in ("attn", "global"):
+        s = max_len
+    elif kind == "local":
+        s = min(cfg.window, max_len)
+    elif kind == "rec":
+        return rglru_init_state(cfg, batch, dtype)
+    elif kind == "ssd":
+        return ssd_init_state(cfg, batch, dtype)
+    else:
+        raise ValueError(kind)
+    shape = (batch, s, cfg.n_kv_heads, cfg.hd)
+    if cfg.kv_dtype == "int8":
+        sshape = (batch, s, cfg.n_kv_heads)
+        return {"k": jnp.zeros(shape, jnp.int8),
+                "v": jnp.zeros(shape, jnp.int8),
+                "k_scale": jnp.zeros(sshape, jnp.float32),
+                "v_scale": jnp.zeros(sshape, jnp.float32)}
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def _kv_quant(x):
+    """(B, T, K, hd) -> int8 values + per-(pos, head) absmax scale."""
+    scale = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1) / 127.0
+    scale = jnp.maximum(scale, 1e-10)
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale[..., None]),
+                 -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def _kv_dequant(q, scale, dtype):
+    return (q.astype(jnp.float32) * scale[..., None].astype(
+        jnp.float32)).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# apply
+# ---------------------------------------------------------------------------
+
+def _attention_mixer(kind, cfg: ModelConfig, params, h, *, positions, mode,
+                     cache, pos, causal: bool = True):
+    b, t, d = h.shape
+    hd = cfg.hd
+    q = (h @ params["wq"]).reshape(b, t, cfg.n_heads, hd)
+    k = (h @ params["wk"]).reshape(b, t, cfg.n_kv_heads, hd)
+    v = (h @ params["wv"]).reshape(b, t, cfg.n_kv_heads, hd)
+    if cfg.qk_norm:
+        q = qk_norm_apply(q, params["q_scale"])
+        k = qk_norm_apply(k, params["k_scale"])
+    theta = cfg.rope_theta
+    if kind == "local" and cfg.rope_theta_local:
+        theta = cfg.rope_theta_local
+    if theta:                      # theta == 0 -> no rope (whisper backbone)
+        q = rope_apply(q, positions, theta, cfg.mrope_sections)
+        k = rope_apply(k, positions, theta, cfg.mrope_sections)
+    window = cfg.window if kind == "local" else 0
+
+    quant = cfg.kv_dtype == "int8"
+    if mode == "decode":
+        s = cache["k"].shape[1]
+        slot = pos % s if kind == "local" else pos
+        if quant:
+            kq, ks = _kv_quant(k)
+            vq, vs = _kv_quant(v)
+            new_cache = {
+                "k": jax.lax.dynamic_update_slice_in_dim(
+                    cache["k"], kq, slot, axis=1),
+                "v": jax.lax.dynamic_update_slice_in_dim(
+                    cache["v"], vq, slot, axis=1),
+                "k_scale": jax.lax.dynamic_update_slice_in_dim(
+                    cache["k_scale"], ks, slot, axis=1),
+                "v_scale": jax.lax.dynamic_update_slice_in_dim(
+                    cache["v_scale"], vs, slot, axis=1),
+            }
+            ck = _kv_dequant(new_cache["k"], new_cache["k_scale"], k.dtype)
+            cv = _kv_dequant(new_cache["v"], new_cache["v_scale"], v.dtype)
+        else:
+            ck = jax.lax.dynamic_update_slice_in_dim(cache["k"], k, slot,
+                                                     axis=1)
+            cv = jax.lax.dynamic_update_slice_in_dim(cache["v"], v, slot,
+                                                     axis=1)
+            new_cache = {"k": ck, "v": cv}
+        out = attn_lib.decode_attention(
+            q, ck, cv, pos, window=(s if kind == "local" else 0))
+    else:
+        out = attn_lib.flash_attention(q, k, v, causal=causal, window=window)
+        if mode == "prefill":
+            s = cache["k"].shape[1]
+            if kind == "local" and t > s:
+                # keep the last `window` keys, ring-aligned so that global
+                # position p sits at slot p % s.
+                start = t - s
+                rot = start % s
+                kk = jnp.roll(k[:, start:], shift=rot, axis=1)
+                vv = jnp.roll(v[:, start:], shift=rot, axis=1)
+            else:
+                pad = [(0, 0), (0, s - t), (0, 0), (0, 0)]
+                kk, vv = jnp.pad(k, pad), jnp.pad(v, pad)
+            if quant:
+                kq, ks = _kv_quant(kk)
+                vq, vs = _kv_quant(vv)
+                new_cache = {"k": kq, "v": vq, "k_scale": ks, "v_scale": vs}
+            else:
+                new_cache = {"k": kk, "v": vv}
+        else:
+            new_cache = cache
+    return out.reshape(b, t, cfg.n_heads * hd) @ params["wo"], new_cache
+
+
+def block_apply(kind: str, cfg: ModelConfig, params, x, *, positions, mode,
+                cache=None, pos=None, causal: bool = True):
+    aux = jnp.zeros((), jnp.float32)
+    h = norm_apply(cfg, params["norm1"], x)
+    if kind in ("attn", "global", "local"):
+        mix, new_cache = _attention_mixer(kind, cfg, params["attn"], h,
+                                          positions=positions, mode=mode,
+                                          cache=cache, pos=pos, causal=causal)
+    elif kind == "rec":
+        state = cache if mode == "decode" else None
+        mix, new_state = rglru_block_apply(cfg, params["rec"], h, state)
+        new_cache = new_state if mode != "train" else cache
+    elif kind == "ssd":
+        state = cache if mode == "decode" else None
+        mix, new_state = ssd_apply(cfg, params["ssd"], h, state)
+        new_cache = new_state if mode != "train" else cache
+    else:
+        raise ValueError(kind)
+    if cfg.sandwich_norm:
+        mix = norm_apply(cfg, params["post1"], mix)
+    x = x + mix
+
+    if kind != "ssd":
+        h = norm_apply(cfg, params["norm2"], x)
+        if cfg.moe:
+            ff, aux = moe_apply(cfg, params["ffn"], h)
+        else:
+            ff = mlp_apply(cfg, params["ffn"], h)
+        if cfg.sandwich_norm:
+            ff = norm_apply(cfg, params["post2"], ff)
+        x = x + ff
+    return x, new_cache, aux

@@ -1,0 +1,98 @@
+"""Shared model primitives: norms, RoPE (incl. M-RoPE), init helpers."""
+
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def norm_init(cfg: ModelConfig, d: int):
+    if cfg.norm == "rms":
+        return {"scale": jnp.ones((d,), jnp.float32)}
+    if cfg.norm == "ln":
+        return {"scale": jnp.ones((d,), jnp.float32),
+                "bias": jnp.zeros((d,), jnp.float32)}
+    if cfg.norm == "ln_nonparam":      # OLMo: non-parametric LayerNorm
+        return {}
+    raise ValueError(cfg.norm)
+
+
+def norm_apply(cfg: ModelConfig, params, x: jnp.ndarray,
+               eps: float = 1e-6) -> jnp.ndarray:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    if cfg.norm == "rms":
+        x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+        x = x * params["scale"]
+    else:
+        mu = jnp.mean(x, axis=-1, keepdims=True)
+        var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+        x = (x - mu) * jax.lax.rsqrt(var + eps)
+        if cfg.norm == "ln":
+            x = x * params["scale"] + params["bias"]
+    return x.astype(dt)
+
+
+def qk_norm_apply(q: jnp.ndarray, scale: jnp.ndarray,
+                  eps: float = 1e-6) -> jnp.ndarray:
+    """Per-head RMS norm on q/k (gemma3)."""
+    dt = q.dtype
+    q = q.astype(jnp.float32)
+    q = q * jax.lax.rsqrt(jnp.mean(q * q, axis=-1, keepdims=True) + eps)
+    return (q * scale).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# RoPE / M-RoPE
+# ---------------------------------------------------------------------------
+
+def rope_apply(x: jnp.ndarray, positions: jnp.ndarray, theta: float,
+               mrope_sections: Optional[Tuple[int, int, int]] = None
+               ) -> jnp.ndarray:
+    """x: (B, T, H, hd); positions: (B, T) int or (B, T, 3) for M-RoPE.
+
+    Half-split (llama-style) rotation.  With `mrope_sections` (a, b, c) —
+    a + b + c == hd/2 — frequency i uses position component 0/1/2 by section
+    (Qwen2-VL M-RoPE; for text inputs the three components coincide)."""
+    b, t, h, hd = x.shape
+    half = hd // 2
+    inv_freq = 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+    if positions.ndim == 2:
+        pos = positions[..., None].astype(jnp.float32)     # (B,T,1)
+        angles = pos * inv_freq                             # (B,T,half)
+    else:
+        assert mrope_sections is not None
+        sel = jnp.concatenate([
+            jnp.full((s,), i, jnp.int32)
+            for i, s in enumerate(mrope_sections)])         # (half,)
+        pos = positions.astype(jnp.float32)                 # (B,T,3)
+        pos_per_freq = jnp.take(pos, sel, axis=-1)          # (B,T,half)
+        angles = pos_per_freq * inv_freq
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = x[..., :half].astype(jnp.float32), x[..., half:].astype(jnp.float32)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Init helpers
+# ---------------------------------------------------------------------------
+
+def dense_init(key, d_in: int, d_out: int, dtype) -> jnp.ndarray:
+    scale = 1.0 / math.sqrt(d_in)
+    return (jax.random.normal(key, (d_in, d_out), jnp.float32)
+            * scale).astype(dtype)
+
+
+def embed_init(key, vocab: int, d: int, dtype) -> jnp.ndarray:
+    return (jax.random.normal(key, (vocab, d), jnp.float32) * 0.02).astype(dtype)

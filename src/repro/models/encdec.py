@@ -1,0 +1,152 @@
+"""Whisper-style encoder-decoder backbone (conv audio frontend is a stub:
+inputs are precomputed frame embeddings, per the assignment).
+
+Encoder: bidirectional attention blocks over frames (+ sinusoidal pos).
+Decoder: causal self-attention + cross-attention + FFN, scan-stacked.
+Positional scheme: sinusoidal absolute embeddings (whisper); rope is
+disabled via rope_theta=0 in the whisper config.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn_lib
+from repro.models import blocks as B
+from repro.models.common import embed_init, norm_apply, norm_init
+from repro.parallel import policy
+
+
+def sinusoid_at(positions: jnp.ndarray, d: int) -> jnp.ndarray:
+    """positions: (B, T) -> (B, T, d) sinusoidal embedding (traced-safe)."""
+    pos = positions.astype(jnp.float32)[..., None]
+    i = jnp.arange(d // 2).astype(jnp.float32)
+    ang = pos / (10000.0 ** (2 * i / d))
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+def init_params(cfg: ModelConfig, key):
+    dtype = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 8)
+    ed = cfg.encdec
+
+    def enc_block(k):
+        return B.block_init("attn", k, cfg, dtype)
+
+    def dec_block(k):
+        kk = jax.random.split(k, 2)
+        p = B.block_init("attn", kk[0], cfg, dtype)
+        p["xattn"] = B.attn_init(kk[1], cfg, dtype)
+        p["norm_x"] = norm_init(cfg, cfg.d_model)
+        return p
+
+    return {
+        "embed": embed_init(ks[0], cfg.padded_vocab, cfg.d_model, dtype),
+        "enc_blocks": jax.vmap(enc_block)(
+            jax.random.split(ks[1], ed.encoder_layers)),
+        "enc_norm": norm_init(cfg, cfg.d_model),
+        "dec_blocks": jax.vmap(dec_block)(
+            jax.random.split(ks[2], cfg.n_layers)),
+        "final_norm": norm_init(cfg, cfg.d_model),
+        "head": embed_init(ks[3], cfg.padded_vocab, cfg.d_model, dtype).T,
+    }
+
+
+def encode(cfg: ModelConfig, params, frames: jnp.ndarray,
+           scan_unroll: bool = False) -> jnp.ndarray:
+    """frames: (B, F, D) stub conv-frontend output -> encoder states."""
+    b, f, d = frames.shape
+    positions = jnp.broadcast_to(jnp.arange(f), (b, f))
+    x = (frames.astype(jnp.dtype(cfg.dtype))
+         + sinusoid_at(positions, d).astype(cfg.dtype))
+
+    def body(xc, p):
+        xc = policy.batch_only(xc)
+        xc, _, _ = B.block_apply("attn", cfg, p, xc, positions=positions,
+                                 mode="train", causal=False)
+        return xc, None
+
+    x, _ = jax.lax.scan(body, x, params["enc_blocks"],
+                        unroll=cfg.encdec.encoder_layers if scan_unroll
+                        else 1)
+    return norm_apply(cfg, params["enc_norm"], x)
+
+
+def _cross_attend(cfg: ModelConfig, p_blk, x, enc):
+    b, t, d = x.shape
+    f = enc.shape[1]
+    hd = cfg.hd
+    h = norm_apply(cfg, p_blk["norm_x"], x)
+    q = (h @ p_blk["xattn"]["wq"]).reshape(b, t, cfg.n_heads, hd)
+    k = (enc @ p_blk["xattn"]["wk"]).reshape(b, f, cfg.n_kv_heads, hd)
+    v = (enc @ p_blk["xattn"]["wv"]).reshape(b, f, cfg.n_kv_heads, hd)
+    out = attn_lib.dense_attention(q, k, v, causal=False)
+    return x + out.reshape(b, t, cfg.n_heads * hd) @ p_blk["xattn"]["wo"]
+
+
+def decode(cfg: ModelConfig, params, tokens, enc, *, mode="train",
+           cache=None, pos=0, scan_unroll: bool = False,
+           return_hidden: bool = False):
+    """Decoder forward.  tokens (B, T); enc (B, F, D).
+    Returns (logits, new_cache)."""
+    b, t = tokens.shape
+    d = cfg.d_model
+    offset = pos if mode == "decode" else 0
+    positions = jnp.broadcast_to(offset + jnp.arange(t), (b, t))
+    x = (params["embed"][tokens].astype(jnp.dtype(cfg.dtype))
+         + sinusoid_at(positions, d).astype(cfg.dtype))
+
+    if cache is not None:
+        xs_cache = cache["dec"]
+    else:
+        xs_cache = jax.tree.map(
+            lambda _: jnp.zeros((cfg.n_layers,), jnp.float32), {"self": 0.0})
+
+    def body(xc, xs):
+        xc = policy.batch_only(xc)
+        p_blk, c_blk = xs
+        c_self = c_blk["self"] if cache is not None else None
+        xc, nc, _ = B.block_apply("attn", cfg, p_blk, xc,
+                                  positions=positions, mode=mode,
+                                  cache=c_self, pos=pos)
+        xc = _cross_attend(cfg, p_blk, xc, enc)
+        out_c = ({"self": nc} if cache is not None
+                 else {"self": jnp.zeros((), jnp.float32)})
+        return xc, out_c
+
+    x, new_dec_cache = jax.lax.scan(body, x, (params["dec_blocks"], xs_cache),
+                                    unroll=cfg.n_layers if scan_unroll else 1)
+    x = norm_apply(cfg, params["final_norm"], x)
+    new_cache = {"dec": new_dec_cache} if cache is not None else None
+    if return_hidden:
+        return x, new_cache
+    from repro.models.lm import mask_padded_vocab
+    logits = mask_padded_vocab(x @ params["head"].astype(x.dtype),
+                               cfg.vocab_size)
+    return logits, new_cache
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int):
+    dtype = jnp.dtype(cfg.dtype)
+
+    def one(_):
+        return {"self": B.init_block_cache("attn", cfg, batch, max_len,
+                                           dtype)}
+
+    return {"dec": jax.vmap(one)(jnp.arange(cfg.n_layers))}
+
+
+def loss_fn(cfg: ModelConfig, params, batch, remat: str = "full",
+            scan_unroll: bool = False, xent_chunk: int = 512):
+    """batch: {"tokens": (B, T), "frames": (B, F, D)}."""
+    from repro.models.lm import chunked_xent
+    enc = encode(cfg, params, batch["frames"], scan_unroll=scan_unroll)
+    hidden, _ = decode(cfg, params, batch["tokens"], enc, mode="train",
+                       scan_unroll=scan_unroll, return_hidden=True)
+    return chunked_xent(hidden[:, :-1], params["head"],
+                        batch["tokens"][:, 1:], chunk=xent_chunk,
+                        unroll=scan_unroll, vocab=cfg.vocab_size)

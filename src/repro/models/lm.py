@@ -1,0 +1,239 @@
+"""Decoder-only LM assembled from blocks, with scan-over-superblocks.
+
+Layer heterogeneity (gemma3 5:1 local:global, recurrentgemma 2:1) is handled
+by scanning one *pattern period* (super-block) per step over stacked params —
+keeps HLO size O(pattern), mandatory at 512 devices — plus an explicit
+remainder.  Caches are stacked the same way and threaded through the scan.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import blocks as B
+from repro.models.common import embed_init, norm_apply, norm_init
+from repro.parallel import policy
+
+
+# ---------------------------------------------------------------------------
+# params
+# ---------------------------------------------------------------------------
+
+def init_params(cfg: ModelConfig, key):
+    dtype = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 4 + cfg.n_remainder)
+
+    def superblock(k):
+        kk = jax.random.split(k, len(cfg.pattern))
+        return {f"b{i}": B.block_init(kind, kk[i], cfg, dtype)
+                for i, kind in enumerate(cfg.pattern)}
+
+    stacked = jax.vmap(superblock)(
+        jax.random.split(ks[0], cfg.n_repeats))
+    params = {
+        "embed": embed_init(ks[1], cfg.padded_vocab, cfg.d_model, dtype),
+        "superblocks": stacked,
+        "final_norm": norm_init(cfg, cfg.d_model),
+    }
+    for r in range(cfg.n_remainder):
+        kind = cfg.pattern[r]
+        params[f"rem{r}"] = B.block_init(kind, ks[4 + r], cfg, dtype)
+    if not cfg.tie_embeddings:
+        params["head"] = embed_init(ks[2], cfg.padded_vocab, cfg.d_model,
+                                    dtype).T
+    return params
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int):
+    dtype = jnp.dtype(cfg.dtype)
+
+    def superblock_cache(_):
+        return {f"b{i}": B.init_block_cache(kind, cfg, batch, max_len, dtype)
+                for i, kind in enumerate(cfg.pattern)}
+
+    stacked = jax.vmap(superblock_cache)(jnp.arange(cfg.n_repeats))
+    cache = {"superblocks": stacked}
+    for r in range(cfg.n_remainder):
+        cache[f"rem{r}"] = B.init_block_cache(cfg.pattern[r], cfg, batch,
+                                              max_len, dtype)
+    return cache
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+
+def _positions(cfg: ModelConfig, b: int, t: int, offset) -> jnp.ndarray:
+    pos = offset + jnp.arange(t)
+    pos = jnp.broadcast_to(pos, (b, t))
+    if cfg.mrope_sections:
+        pos = jnp.broadcast_to(pos[..., None], (b, t, 3))
+    return pos
+
+
+def apply(cfg: ModelConfig, params, tokens=None, *, mode: str = "train",
+          cache=None, pos=0, embeddings=None, remat: str = "full",
+          scan_unroll: bool = False, return_hidden: bool = False):
+    """Forward pass.
+
+    tokens: (B, T) int32, or `embeddings`: (B, T, D) (modality stubs).
+    mode "train": logits only.  "prefill": logits + filled cache.
+    "decode": T == 1, reads/writes cache at `pos`.
+    `scan_unroll` unrolls the layer scan (dry-run cost-analysis accuracy:
+    XLA while-loop bodies are cost-counted once, so the roofline pass
+    compiles unrolled).  `return_hidden` skips the LM head (the chunked
+    cross-entropy computes it windowed — never materializing (B,T,V)).
+    Returns (logits_or_hidden, new_cache, aux_loss).
+    """
+    if embeddings is None:
+        x = params["embed"][tokens].astype(jnp.dtype(cfg.dtype))
+    else:
+        x = embeddings.astype(jnp.dtype(cfg.dtype))
+    x = policy.batch_only(x)
+    b, t = x.shape[:2]
+    positions = _positions(cfg, b, t, pos if mode == "decode" else 0)
+
+    def superblock_body(carry, xs):
+        xcur, aux = carry
+        p_sb, c_sb = xs
+        xcur = policy.carry(xcur)
+        p_sb = policy.gather_block_weights(p_sb)
+        new_c = {}
+        for i, kind in enumerate(cfg.pattern):
+            c_i = None if c_sb is None else c_sb[f"b{i}"]
+            xcur, nc, a = B.block_apply(kind, cfg, p_sb[f"b{i}"], xcur,
+                                        positions=positions, mode=mode,
+                                        cache=c_i, pos=pos)
+            new_c[f"b{i}"] = nc if nc is not None else jnp.zeros((), x.dtype)
+            aux = aux + a
+        return (xcur, aux), new_c
+
+    body = superblock_body
+    if mode == "train" and remat != "none":
+        ckpt_policy = (
+            jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+            if remat == "dots" else None)
+        body = jax.checkpoint(superblock_body, policy=ckpt_policy,
+                              prevent_cse=False)
+
+    sb_cache = cache["superblocks"] if cache is not None else None
+    if sb_cache is None:
+        # dummy per-repeat cache so scan xs have a leading axis
+        sb_cache = jax.tree.map(
+            lambda _: jnp.zeros((cfg.n_repeats,), jnp.float32),
+            {f"b{i}": 0.0 for i in range(len(cfg.pattern))})
+    (x, aux), new_sb_cache = jax.lax.scan(
+        body, (x, jnp.zeros((), jnp.float32)),
+        (params["superblocks"], sb_cache),
+        unroll=cfg.n_repeats if scan_unroll else 1)
+
+    new_cache = {"superblocks": new_sb_cache} if cache is not None else None
+    for r in range(cfg.n_remainder):
+        kind = cfg.pattern[r]
+        c_r = cache.get(f"rem{r}") if cache is not None else None
+        x = policy.carry(x)
+        x, nc, a = B.block_apply(kind, cfg,
+                                 policy.gather_block_weights(
+                                     params[f"rem{r}"]), x,
+                                 positions=positions, mode=mode,
+                                 cache=c_r, pos=pos)
+        aux = aux + a
+        if cache is not None:
+            new_cache[f"rem{r}"] = nc
+
+    x = norm_apply(cfg, params["final_norm"], x)
+    if return_hidden:
+        return x, new_cache, aux
+    head = params["embed"].T if cfg.tie_embeddings else params["head"]
+    logits = x @ head.astype(x.dtype)
+    if cfg.logit_softcap:
+        logits = jnp.tanh(logits / cfg.logit_softcap) * cfg.logit_softcap
+    logits = mask_padded_vocab(logits, cfg.vocab_size)
+    return logits, new_cache, aux
+
+
+def mask_padded_vocab(logits: jnp.ndarray, vocab: int) -> jnp.ndarray:
+    """-inf out the physical padding columns (padded_vocab > vocab_size) so
+    sampling / logsumexp never see them."""
+    pv = logits.shape[-1]
+    if pv == vocab:
+        return logits
+    valid = jnp.arange(pv) < vocab
+    return jnp.where(valid, logits, jnp.asarray(-1e30, logits.dtype))
+
+
+def chunked_xent(hidden, head, targets, chunk: int = 512,
+                 softcap: float = 0.0, unroll: bool = False,
+                 vocab: int = 0):
+    """Next-token NLL without materializing (B, T, V): scan over sequence
+    windows of the hidden states (the NERO tiling discipline applied to the
+    LM head).  hidden: (B, T, D); targets: (B, T) aligned with hidden.
+    `vocab`: logical vocab size (masks physical padding columns)."""
+    b, t, d = hidden.shape
+    chunk = min(chunk, t)
+    pad = (-t) % chunk
+    if pad:
+        hidden = jnp.pad(hidden, ((0, 0), (0, pad), (0, 0)))
+        targets = jnp.pad(targets, ((0, 0), (0, pad)))
+    nchunks = hidden.shape[1] // chunk
+    hs = hidden.reshape(b, nchunks, chunk, d).swapaxes(0, 1)
+    ts = targets.reshape(b, nchunks, chunk).swapaxes(0, 1)
+    valid_len = t
+
+    def body(acc, xs):
+        i, h_c, t_c = xs
+        h_c = policy.batch_only(h_c)
+        lg = (h_c @ head.astype(h_c.dtype)).astype(jnp.float32)
+        lg = policy.batch_model_last(lg)
+        if softcap:
+            lg = jnp.tanh(lg / softcap) * softcap
+        if vocab:
+            lg = mask_padded_vocab(lg, vocab)
+        logz = jax.nn.logsumexp(lg, axis=-1)
+        gold = jnp.take_along_axis(lg, t_c[..., None], axis=-1)[..., 0]
+        posn = i * chunk + jnp.arange(chunk)
+        mask = (posn < valid_len).astype(jnp.float32)
+        return acc + ((logz - gold) * mask).sum(), None
+
+    total, _ = jax.lax.scan(body, jnp.zeros((), jnp.float32),
+                            (jnp.arange(nchunks), hs, ts),
+                            unroll=nchunks if unroll else 1)
+    return total / (b * valid_len)
+
+
+def loss_fn(cfg: ModelConfig, params, batch, remat: str = "full",
+            scan_unroll: bool = False, xent_chunk: int = 512):
+    """Next-token cross-entropy (+ MoE aux).  batch: {"tokens": (B, T)}."""
+    tokens = batch["tokens"]
+    hidden, _, aux = apply(cfg, params, tokens, mode="train", remat=remat,
+                           scan_unroll=scan_unroll, return_hidden=True)
+    head = params["embed"].T if cfg.tie_embeddings else params["head"]
+    nll = chunked_xent(hidden[:, :-1], head, tokens[:, 1:],
+                       chunk=xent_chunk, softcap=cfg.logit_softcap,
+                       unroll=scan_unroll, vocab=cfg.vocab_size)
+    if cfg.moe:
+        nll = nll + cfg.moe.aux_loss_weight * aux
+    return nll
+
+
+def prefill(cfg: ModelConfig, params, tokens, max_len: Optional[int] = None,
+            scan_unroll: bool = False):
+    """Run the prompt, return (logits, cache ready for decode at pos=T)."""
+    b, t = tokens.shape
+    cache = init_cache(cfg, b, max_len or t)
+    logits, cache, _ = apply(cfg, params, tokens, mode="prefill",
+                             cache=cache, scan_unroll=scan_unroll)
+    return logits, cache
+
+
+def decode_step(cfg: ModelConfig, params, cache, token, pos,
+                scan_unroll: bool = False):
+    """token: (B, 1) -> (logits (B,1,V), new cache)."""
+    logits, cache, _ = apply(cfg, params, token, mode="decode", cache=cache,
+                             pos=pos, scan_unroll=scan_unroll)
+    return logits, cache

@@ -1,0 +1,31 @@
+"""Feed-forward: gated (SwiGLU/GeGLU) or plain, plus MoE delegation."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.common import dense_init
+
+_ACTS = {"silu": jax.nn.silu, "gelu": jax.nn.gelu, "relu": jax.nn.relu}
+
+
+def mlp_init(key, cfg: ModelConfig, dtype):
+    d, f = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 3)
+    p = {"wi": dense_init(ks[0], d, f, dtype),
+         "wo": dense_init(ks[1], f, d, dtype)}
+    if cfg.gated_mlp:
+        p["wg"] = dense_init(ks[2], d, f, dtype)
+    return p
+
+
+def mlp_apply(cfg: ModelConfig, params, x: jnp.ndarray) -> jnp.ndarray:
+    act = _ACTS[cfg.act]
+    h = x @ params["wi"]
+    if cfg.gated_mlp:
+        h = act(x @ params["wg"]) * h
+    else:
+        h = act(h)
+    return h @ params["wo"]

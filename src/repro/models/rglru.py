@@ -1,0 +1,105 @@
+"""RG-LRU recurrent block (Griffin / RecurrentGemma).
+
+The RG-LRU recurrence h_t = a_t h_{t-1} + sqrt(1-a_t^2) (i_t x_t) is the
+same first-order linear sweep as the vadvc Thomas forward sweep — NERO's
+"sequential in depth, parallel across columns" pattern.  Training/prefill
+uses jax.lax.associative_scan (log-depth); decode carries (h, conv) state.
+The Pallas `lru_scan` kernel implements the same sweep with VMEM-resident
+carry for the TPU serving path.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.common import dense_init
+
+
+def rglru_init(key, cfg: ModelConfig, dtype):
+    d = cfg.d_model
+    w = cfg.rec.rnn_width or d
+    cw = cfg.rec.conv_width
+    ks = jax.random.split(key, 7)
+    return {
+        "w_branch_x": dense_init(ks[0], d, w, dtype),
+        "w_branch_g": dense_init(ks[1], d, w, dtype),
+        "conv": (jax.random.normal(ks[2], (cw, w), jnp.float32)
+                 * (1.0 / cw)).astype(dtype),
+        "w_rec_gate": dense_init(ks[3], w, w, dtype),
+        "w_in_gate": dense_init(ks[4], w, w, dtype),
+        # Λ init so a^(1/c) ∈ (0.9, 0.999) as in Griffin
+        "lam": jnp.linspace(2.0, 6.0, w, dtype=jnp.float32),
+        "w_out": dense_init(ks[5], w, d, dtype),
+    }
+
+
+def causal_conv1d(x: jnp.ndarray, kernel: jnp.ndarray,
+                  state: Optional[jnp.ndarray] = None):
+    """Depthwise causal conv.  x: (B, T, W); kernel: (cw, W).
+    With `state` (B, cw-1, W) does streaming conv and returns new state."""
+    cw = kernel.shape[0]
+    if state is None:
+        pad = jnp.zeros_like(x[:, :cw - 1])
+    else:
+        pad = state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)            # (B, T+cw-1, W)
+    out = sum(xp[:, i:i + x.shape[1]] * kernel[i] for i in range(cw))
+    new_state = xp[:, -(cw - 1):] if cw > 1 else jnp.zeros_like(x[:, :0])
+    return out, new_state
+
+
+def _gates(params, x):
+    """a_t (decay) and gated input for the LRU, fp32."""
+    xf = x.astype(jnp.float32)
+    r = jax.nn.sigmoid(xf @ params["w_rec_gate"].astype(jnp.float32))
+    i = jax.nn.sigmoid(xf @ params["w_in_gate"].astype(jnp.float32))
+    c = 8.0
+    log_a = -c * jax.nn.softplus(params["lam"]) * r
+    a = jnp.exp(log_a)
+    gated_x = i * xf
+    b = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) * gated_x
+    return a, b
+
+
+def lru_scan(a: jnp.ndarray, b: jnp.ndarray,
+             h0: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """h_t = a_t h_{t-1} + b_t along axis 1 (associative scan)."""
+    if h0 is not None:
+        b = b.at[:, 0].add(a[:, 0] * h0)
+
+    def combine(lhs, rhs):
+        a_l, b_l = lhs
+        a_r, b_r = rhs
+        return a_l * a_r, b_l * a_r + b_r
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return h
+
+
+def rglru_block_apply(cfg: ModelConfig, params, x: jnp.ndarray,
+                      state: Optional[dict] = None):
+    """Griffin recurrent block.  x: (B, T, D).
+
+    state (decode): {"h": (B, W) fp32, "conv": (B, cw-1, W)}.
+    Returns (out, new_state)."""
+    xb = x @ params["w_branch_x"]
+    gb = jax.nn.gelu(x @ params["w_branch_g"])
+    conv_state = state["conv"] if state is not None else None
+    xb, new_conv = causal_conv1d(xb, params["conv"], conv_state)
+    a, b = _gates(params, xb)
+    h0 = state["h"] if state is not None else None
+    h = lru_scan(a, b, h0)
+    out = (h.astype(x.dtype) * gb) @ params["w_out"]
+    new_state = {"h": h[:, -1], "conv": new_conv}
+    return out, new_state
+
+
+def rglru_init_state(cfg: ModelConfig, batch: int, dtype):
+    w = cfg.rec.rnn_width or cfg.d_model
+    cw = cfg.rec.conv_width
+    return {"h": jnp.zeros((batch, w), jnp.float32),
+            "conv": jnp.zeros((batch, cw - 1, w), dtype)}

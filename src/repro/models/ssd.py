@@ -1,0 +1,168 @@
+"""Mamba2 SSD (state-space duality) mixer — chunked scan formulation.
+
+The chunked SSD algorithm is NERO's windowing applied to the time axis:
+within-chunk work is dense (MXU-friendly einsums over an (cl, cl) decay
+kernel), across-chunk state flows through a first-order recurrence — the
+same forward-sweep pattern as vadvc.  Follows the minimal listing of the
+Mamba2 paper (Dao & Gu, 2024), with grouped B/C (n_groups) and a depthwise
+causal conv front.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.common import dense_init
+from repro.models.rglru import causal_conv1d
+
+
+def _dims(cfg: ModelConfig):
+    s = cfg.ssd
+    di = s.expand * cfg.d_model
+    nh = di // s.head_dim
+    return di, nh, s.head_dim, s.d_state, s.n_groups
+
+
+def ssd_init(key, cfg: ModelConfig, dtype):
+    di, nh, p, n, g = _dims(cfg)
+    d = cfg.d_model
+    cw = cfg.ssd.conv_width
+    ks = jax.random.split(key, 4)
+    d_in_proj = 2 * di + 2 * g * n + nh
+    conv_dim = di + 2 * g * n
+    return {
+        "in_proj": dense_init(ks[0], d, d_in_proj, dtype),
+        "conv": (jax.random.normal(ks[1], (cw, conv_dim), jnp.float32)
+                 / cw).astype(dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, nh, dtype=jnp.float32)),
+        "D": jnp.ones((nh,), jnp.float32),
+        "dt_bias": jnp.zeros((nh,), jnp.float32),
+        "norm_scale": jnp.ones((di,), jnp.float32),
+        "out_proj": dense_init(ks[2], di, d, dtype),
+    }
+
+
+def _segsum(x: jnp.ndarray) -> jnp.ndarray:
+    """Stable segment-sum: out[..., i, j] = sum_{j < k <= i} x[..., k],
+    -inf above the diagonal.  x: (..., cl)."""
+    cl = x.shape[-1]
+    cs = jnp.cumsum(x, axis=-1)
+    seg = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((cl, cl), bool), k=0)
+    return jnp.where(mask, seg, -jnp.inf)
+
+
+def _ssd_chunked(x, dt, A, B, C, chunk: int, h0=None):
+    """SSD scan.  x: (b, t, h, p); dt: (b, t, h); A: (h,);
+    B, C: (b, t, g, n).  Returns (y, h_last)."""
+    b, t, h, p = x.shape
+    g, n = B.shape[2], B.shape[3]
+    assert t % chunk == 0, (t, chunk)
+    nc = t // chunk
+    rep = h // g
+
+    def tochunk(a):
+        return a.reshape((b, nc, chunk) + a.shape[2:])
+
+    xc, dtc, Bc, Cc = map(tochunk, (x, dt, B, C))
+    Bh = jnp.repeat(Bc, rep, axis=3)        # (b,nc,cl,h,n)
+    Ch = jnp.repeat(Cc, rep, axis=3)
+
+    dA = dtc * A                             # (b,nc,cl,h)
+    dA_cs = jnp.cumsum(dA, axis=2)           # within-chunk cumsum
+
+    # ---- intra-chunk (dense, MXU) ----------------------------------------
+    L = jnp.exp(_segsum(dA.transpose(0, 1, 3, 2)))      # (b,nc,h,cl,cl)
+    xdt = xc * dtc[..., None]                           # (b,nc,cl,h,p)
+    y_diag = jnp.einsum("bclhn,bcshn,bchls,bcshp->bclhp", Ch, Bh, L, xdt)
+
+    # ---- chunk states -----------------------------------------------------
+    decay_states = jnp.exp(dA_cs[:, :, -1:, :] - dA_cs)        # (b,nc,cl,h)
+    states = jnp.einsum("bcshn,bcsh,bcshp->bchpn",
+                        Bh, decay_states * dtc, xc)            # per-chunk
+
+    # ---- inter-chunk recurrence (the vadvc-style sweep) --------------------
+    chunk_decay = jnp.exp(dA_cs[:, :, -1, :])                  # (b,nc,h)
+
+    def sweep(carry, inp):
+        st, dec = inp
+        new = carry * dec[..., None, None] + st
+        return new, carry                                       # emit prev
+
+    init = (jnp.zeros((b, h, p, n), jnp.float32) if h0 is None
+            else h0.astype(jnp.float32))
+    h_last, prev_states = jax.lax.scan(
+        sweep, init, (states.swapaxes(0, 1), chunk_decay.swapaxes(0, 1)))
+    prev_states = prev_states.swapaxes(0, 1)                    # (b,nc,h,p,n)
+
+    # ---- inter-chunk output -------------------------------------------------
+    state_decay = jnp.exp(dA_cs)                                # (b,nc,cl,h)
+    y_off = jnp.einsum("bclhn,bchpn,bclh->bclhp",
+                       Ch, prev_states, state_decay)
+
+    y = (y_diag + y_off).reshape(b, t, h, p)
+    return y, h_last
+
+
+def ssd_apply(cfg: ModelConfig, params, x: jnp.ndarray,
+              state: Optional[dict] = None):
+    """Full Mamba2 mixer.  x: (B, T, D) -> (out, new_state).
+
+    state (decode): {"h": (B, nh, p, n) fp32, "conv": (B, cw-1, conv_dim)}.
+    """
+    di, nh, p, n, g = _dims(cfg)
+    b, t, d = x.shape
+
+    zxbcdt = x @ params["in_proj"]
+    z, xbc, dt = jnp.split(zxbcdt, [di, 2 * di + 2 * g * n], axis=-1)
+    conv_state = state["conv"] if state is not None else None
+    xbc, new_conv = causal_conv1d(xbc, params["conv"], conv_state)
+    xbc = jax.nn.silu(xbc)
+    xi, B, C = jnp.split(xbc, [di, di + g * n], axis=-1)
+    xi = xi.reshape(b, t, nh, p).astype(jnp.float32)
+    B = B.reshape(b, t, g, n).astype(jnp.float32)
+    C = C.reshape(b, t, g, n).astype(jnp.float32)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])
+    A = -jnp.exp(params["A_log"])
+
+    h0 = state["h"] if state is not None else None
+    chunk = min(cfg.ssd.chunk, t)
+    pad = (-t) % chunk
+    if pad:
+        # Left-pad with zeros: contributes nothing to states/outputs when
+        # h0 == 0 (x=0 adds nothing; decay of a zero state is zero).
+        assert h0 is None, "chunk padding requires fresh state"
+        zpad = lambda a: jnp.pad(a, [(0, 0), (pad, 0)] +
+                                 [(0, 0)] * (a.ndim - 2))
+        y, h_last = _ssd_chunked(zpad(xi), zpad(dt), A, zpad(B), zpad(C),
+                                 chunk, None)
+        y = y[:, pad:]
+    else:
+        y, h_last = _ssd_chunked(xi, dt, A, B, C, chunk, h0)
+    y = y + xi * params["D"][:, None]
+    y = y.reshape(b, t, di)
+
+    # gated RMSNorm (mamba2)
+    yz = y * jax.nn.silu(z.astype(jnp.float32))
+    yz = yz * jax.lax.rsqrt(jnp.mean(yz * yz, -1, keepdims=True) + 1e-6)
+    yz = (yz * params["norm_scale"]).astype(x.dtype)
+    out = yz @ params["out_proj"]
+    new_state = {"h": h_last, "conv": new_conv}
+    return out, new_state
+
+
+def ssd_decode_step(cfg: ModelConfig, params, x: jnp.ndarray, state: dict):
+    """Single-token recurrent step (O(1) in sequence length)."""
+    return ssd_apply(cfg, params, x, state)
+
+
+def ssd_init_state(cfg: ModelConfig, batch: int, dtype):
+    di, nh, p, n, g = _dims(cfg)
+    cw = cfg.ssd.conv_width
+    conv_dim = di + 2 * g * n
+    return {"h": jnp.zeros((batch, nh, p, n), jnp.float32),
+            "conv": jnp.zeros((batch, cw - 1, conv_dim), dtype)}

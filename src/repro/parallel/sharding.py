@@ -1,0 +1,200 @@
+"""Logical-axis sharding rules (MaxText-style) for every framework pytree.
+
+One table maps parameter *paths* to PartitionSpecs per run kind:
+
+  * train:   FSDP over "data" on the embed/contraction dim + TP/EP over
+             "model" on heads/ffn/experts/vocab; batch over ("pod","data").
+  * serve (prefill/decode): weights TP over "model" only (no per-step
+             all-gathers); KV caches batch->"data", seq->"model"
+             (long-context, batch=1: seq->("data","model")).
+
+Stacked layer params (leading scan dim under superblocks/enc_blocks/
+dec_blocks) automatically get a leading None.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.tree_util import DictKey, SequenceKey
+
+from repro.configs.base import ModelConfig, ShapeConfig
+
+STACK_KEYS = ("superblocks", "enc_blocks", "dec_blocks")
+
+
+def _path_names(path) -> Tuple[str, ...]:
+    out = []
+    for k in path:
+        if isinstance(k, DictKey):
+            out.append(str(k.key))
+        elif isinstance(k, SequenceKey):
+            out.append(str(k.idx))
+        else:
+            out.append(str(k))
+    return tuple(out)
+
+
+# ---------------------------------------------------------------------------
+# parameter rules
+# ---------------------------------------------------------------------------
+
+def param_spec(names: Tuple[str, ...], ndim: int, kind: str,
+               expert_div: bool = True) -> P:
+    """Full rule table.  kind: 'train' (FSDP+TP) or 'serve' (TP only).
+
+    expert_div: n_experts divides the model axis -> expert-parallel MoE
+    weights; otherwise fall back to tensor-parallel over d_ff (granite's 40
+    experts don't divide a 16-wide model axis)."""
+    fsdp = "data" if kind == "train" else None
+    leaf = names[-1]
+    parent = names[-2] if len(names) >= 2 else ""
+    stacked = any(s in names for s in STACK_KEYS)
+    base_ndim = ndim - 1 if stacked else ndim
+
+    def done(spec: P) -> P:
+        assert len(spec) <= base_ndim, (names, ndim, spec)
+        spec = P(*(tuple(spec) + (None,) * (base_ndim - len(spec))))
+        if stacked:
+            spec = P(*((None,) + tuple(spec)))
+        return spec
+
+    m = "model"
+    d = fsdp
+
+    if leaf == "embed":
+        return done(P(m, d))
+    if leaf == "head":
+        return done(P(d, m))
+    if parent in ("attn", "xattn"):
+        if leaf in ("wq", "wk", "wv"):
+            return done(P(d, m))
+        if leaf == "wo":
+            return done(P(m, d))
+        return done(P())                        # qk-norm scales
+    if parent == "ffn":
+        if leaf == "router":
+            return done(P())
+        if base_ndim == 3:                      # MoE experts (E, d, f)
+            if leaf in ("wi", "wg"):
+                return done(P(m, d, None) if expert_div
+                            else P(None, d, m))
+            if leaf == "wo":
+                return done(P(m, None, d) if expert_div
+                            else P(None, m, d))
+        if leaf in ("wi", "wg"):
+            return done(P(d, m))
+        if leaf == "wo":
+            return done(P(m, d))
+    if parent == "rec":
+        if leaf in ("w_branch_x", "w_branch_g"):
+            return done(P(d, m))
+        if leaf == "conv":
+            return done(P(None, m))
+        if leaf in ("w_rec_gate", "w_in_gate"):
+            return done(P(None, m))
+        if leaf == "lam":
+            return done(P(m))
+        if leaf == "w_out":
+            return done(P(m, d))
+    if parent == "ssd":
+        if leaf == "in_proj":
+            return done(P(d, m))
+        if leaf == "conv":
+            return done(P(None, m))
+        if leaf == "norm_scale":
+            return done(P(m))
+        if leaf == "out_proj":
+            return done(P(m, d))
+        return done(P())                        # A_log, D, dt_bias
+    return done(P())                            # norms & everything scalar
+
+
+def params_sharding(params_or_shapes, mesh: Mesh, kind: str):
+    """Pytree of NamedShardings matching the params pytree."""
+    model_par = mesh.shape.get("model", 1)
+
+    def one(path, leaf):
+        names = _path_names(path)
+        expert_div = True
+        if len(leaf.shape) >= 3 and "ffn" in names:
+            stacked = any(s in names for s in STACK_KEYS)
+            n_experts = leaf.shape[1] if stacked else leaf.shape[0]
+            expert_div = (n_experts % model_par == 0)
+        spec = param_spec(names, len(leaf.shape), kind,
+                          expert_div=expert_div)
+        return NamedSharding(mesh, spec)
+
+    return jax.tree_util.tree_map_with_path(one, params_or_shapes)
+
+
+# ---------------------------------------------------------------------------
+# batch / cache rules
+# ---------------------------------------------------------------------------
+
+def batch_sharding(mesh: Mesh, batch_size: int):
+    """Batch dim spec: over ("pod","data") when they divide the batch."""
+    axes = [a for a in ("pod", "data") if a in mesh.axis_names]
+    n = 1
+    chosen = []
+    for a in axes:
+        if batch_size % (n * mesh.shape[a]) == 0:
+            chosen.append(a)
+            n *= mesh.shape[a]
+    return tuple(chosen) if chosen else None
+
+
+def data_spec(mesh: Mesh, batch_size: int, ndim: int) -> P:
+    b = batch_sharding(mesh, batch_size)
+    return P(*((b,) + (None,) * (ndim - 1)))
+
+
+def cache_spec(names: Tuple[str, ...], ndim: int, mesh: Mesh,
+               batch_size: int) -> P:
+    """KV / state cache rules.  Stacked leading scan dim -> None.
+
+    attn k/v (R, B, S, K, hd): B->data axes, S->"model"
+      (batch==1 long-context: S->("data","model")).
+    rec/ssd states: B->data, width/heads dim -> "model".
+    """
+    leaf = names[-1]
+    b_axes = batch_sharding(mesh, batch_size)
+    stacked = (any(s in names for s in STACK_KEYS)
+               or (leaf in ("k", "v") and ndim == 5)
+               or (leaf in ("k_scale", "v_scale") and ndim == 4)
+               or (names and names[0] == "dec"))
+    base = ndim - 1 if stacked else ndim
+
+    if leaf in ("k", "v", "k_scale", "v_scale") and base in (3, 4):
+        seq_ax = ("model" if b_axes
+                  else tuple(a for a in ("data", "model")
+                             if a in mesh.axis_names))
+        spec = (P(b_axes, seq_ax, None, None) if base == 4
+                else P(b_axes, seq_ax, None))   # int8 KV scales (B, S, K)
+    elif leaf == "h" and base == 2:           # rglru state (B, W)
+        spec = P(b_axes, "model")
+    elif leaf == "h" and base == 4:           # ssd state (B, nh, p, n)
+        spec = P(b_axes, "model", None, None)
+    elif leaf == "conv" and base == 3:        # conv state (B, cw-1, W)
+        spec = P(b_axes, None, "model")
+    elif leaf == "enc" and base == 3:         # whisper encoder states
+        spec = P(b_axes, None, None)
+    else:
+        spec = P(*([b_axes] + [None] * (base - 1))) if base else P()
+    spec = P(*(tuple(spec) + (None,) * (base - len(spec))))
+    if stacked:
+        spec = P(*((None,) + tuple(spec)))
+    return spec
+
+
+def cache_sharding(cache_shapes, mesh: Mesh, batch_size: int):
+    def one(path, leaf):
+        names = _path_names(path)
+        spec = cache_spec(names, len(leaf.shape), mesh, batch_size)
+        return NamedSharding(mesh, spec)
+
+    return jax.tree_util.tree_map_with_path(one, cache_shapes)

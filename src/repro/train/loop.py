@@ -1,0 +1,187 @@
+"""Training step builder + fault-tolerant training loop.
+
+`make_train_step` returns the jitted SPMD train step with the sharding rules
+applied (FSDP+TP+DP per parallel/sharding.py), microbatch gradient
+accumulation via lax.scan, and donated params/opt-state.
+
+`fit` is the production loop: checkpoint/restart (atomic, keep-N, async),
+deterministic data, a straggler/step-time watchdog, and metric logging.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import statistics
+import time
+from typing import Any, Callable, Dict, Iterator, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.models.api import Model
+from repro.parallel import policy
+from repro.parallel import sharding as shd
+from repro.train import optim as opt_lib
+
+
+def make_train_step(model: Model, mesh, opt_cfg: opt_lib.OptConfig,
+                    microbatches: int = 1, remat: str = "full",
+                    donate: bool = True, scan_unroll: bool = False,
+                    grad_dtype: str = "float32"):
+    """Returns (train_step, shardings) — train_step(params, opt, batch).
+
+    grad_dtype="bfloat16" accumulates/reduces microbatch gradients in bf16
+    (2x wire compression on the cross-data dW reductions — the gradient-
+    compression knob for collective-bound cells; fp32 master weights keep
+    the update exact)."""
+    cfg = model.cfg
+    acc_dtype = jnp.dtype(grad_dtype)
+
+    def loss_fn(params, batch):
+        return model.loss(params, batch, remat=remat,
+                          scan_unroll=scan_unroll)
+
+    shapes = model.param_shapes()
+    p_shard = shd.params_sharding(shapes, mesh, "train")
+
+    def _pin_grads(tree):
+        """Keep the f32 grad accumulator on the FSDP/TP param layout.
+        Unpinned, GSPMD replicates the scan carry and all-reduces FULL dW
+        per microbatch (measured 802 GB/device on gemma3 train) instead of
+        reduce-scattering into shards."""
+        return jax.tree.map(
+            lambda g, sh: jax.lax.with_sharding_constraint(g, sh),
+            tree, p_shard)
+
+    def step_fn(params, opt_state, batch):
+        if microbatches > 1:
+            def micro(carry, mb):
+                acc = carry
+                loss, grads = jax.value_and_grad(loss_fn)(params, mb)
+                acc = jax.tree.map(
+                    lambda a, g: a + g.astype(acc_dtype) / microbatches,
+                    acc, grads)
+                return _pin_grads(acc), loss
+
+            split = jax.tree.map(
+                lambda x: x.reshape((microbatches,
+                                     x.shape[0] // microbatches)
+                                    + x.shape[1:]), batch)
+            zero = _pin_grads(jax.tree.map(
+                lambda p: jnp.zeros(p.shape, acc_dtype), params))
+            grads, losses = jax.lax.scan(
+                micro, zero, split,
+                unroll=microbatches if scan_unroll else 1)
+            loss = losses.mean()
+        else:
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+            grads = _pin_grads(grads)
+        new_params, new_opt, metrics = opt_lib.apply_updates(
+            opt_cfg, params, opt_state, grads)
+        metrics["loss"] = loss
+        return new_params, new_opt, metrics
+    o_shard = {"m": p_shard, "v": p_shard, "master": p_shard,
+               "step": NamedSharding(mesh, P())}
+    rep = NamedSharding(mesh, P())
+
+    def batch_shardings(batch_spec):
+        return jax.tree.map(
+            lambda s: NamedSharding(
+                mesh, shd.data_spec(mesh, s.shape[0], len(s.shape))),
+            batch_spec)
+
+    def jit_for(batch_spec):
+        b_shard = batch_shardings(batch_spec)
+        m_shard = {"grad_norm": rep, "lr": rep, "loss": rep}
+        return jax.jit(
+            step_fn,
+            in_shardings=(p_shard, o_shard, b_shard),
+            out_shardings=(p_shard, o_shard, m_shard),
+            donate_argnums=(0, 1) if donate else ())
+
+    return step_fn, jit_for, (p_shard, o_shard)
+
+
+@dataclasses.dataclass
+class WatchdogStats:
+    """Straggler / slow-step detection: on real pods a slow step usually
+    means a failing host or contended interconnect; we log and count so the
+    launcher can decide to checkpoint-and-remesh."""
+    times: list = dataclasses.field(default_factory=list)
+    slow_steps: int = 0
+    threshold: float = 3.0
+
+    def record(self, dt: float) -> bool:
+        self.times.append(dt)
+        if len(self.times) >= 8:
+            med = statistics.median(self.times[-64:])
+            if dt > self.threshold * med:
+                self.slow_steps += 1
+                return True
+        return False
+
+
+def fit(model: Model, mesh, data_iter: Iterator[Dict[str, jnp.ndarray]],
+        steps: int, opt_cfg: Optional[opt_lib.OptConfig] = None,
+        microbatches: int = 1, remat: str = "full",
+        ckpt_dir: Optional[str] = None, ckpt_every: int = 100,
+        log_every: int = 10, seed: int = 0,
+        log_fn: Callable[[str], None] = print):
+    """Train for `steps`, resuming from the latest checkpoint if present."""
+    from repro.ckpt import checkpoint as ckpt_lib
+
+    opt_cfg = opt_cfg or opt_lib.OptConfig(total_steps=steps)
+    _, jit_for, (p_shard, o_shard) = make_train_step(
+        model, mesh, opt_cfg, microbatches=microbatches, remat=remat)
+
+    start_step = 0
+    params = opt_state = None
+    if ckpt_dir:
+        latest = ckpt_lib.latest_step(ckpt_dir)
+        if latest is not None:
+            log_fn(f"[fit] resuming from step {latest}")
+            params, opt_state, start_step = ckpt_lib.restore(
+                ckpt_dir, latest, mesh, p_shard, o_shard)
+    if params is None:
+        key = jax.random.PRNGKey(seed)
+        params = jax.device_put(model.init(key), p_shard)
+        opt_state = jax.device_put(opt_lib.init_opt_state(params), o_shard)
+    elif start_step:
+        # Data contract: batches are a pure function of (seed, step), so a
+        # resumed run must realign the stream — fast-forward the iterator
+        # to start_step (iterators constructed with start_step=0).
+        for _ in range(start_step):
+            next(data_iter)
+
+    step_jit = None
+    watch = WatchdogStats()
+    history = []
+    saver = ckpt_lib.AsyncSaver(ckpt_dir) if ckpt_dir else None
+    for step in range(start_step, steps):
+        batch = next(data_iter)
+        if step_jit is None:
+            spec = jax.tree.map(
+                lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), batch)
+            step_jit = jit_for(spec)
+        t0 = time.perf_counter()
+        batch_axes = shd.batch_sharding(
+            mesh, jax.tree.leaves(batch)[0].shape[0])
+        with mesh, policy.activation_rules(batch_axes):
+            params, opt_state, metrics = step_jit(params, opt_state, batch)
+        metrics = jax.tree.map(float, jax.device_get(metrics))
+        dt = time.perf_counter() - t0
+        if watch.record(dt):
+            log_fn(f"[watchdog] slow step {step}: {dt:.3f}s "
+                   f"(median {statistics.median(watch.times[-64:]):.3f}s)")
+        history.append({"step": step, "time_s": dt, **metrics})
+        if log_every and step % log_every == 0:
+            log_fn(f"[fit] step {step} loss {metrics['loss']:.4f} "
+                   f"gnorm {metrics['grad_norm']:.3f} {dt * 1e3:.0f}ms")
+        if saver and ckpt_every and (step + 1) % ckpt_every == 0:
+            saver.save(step + 1, params, opt_state)
+    if saver:
+        saver.save(steps, params, opt_state)
+        saver.wait()
+    return params, opt_state, history

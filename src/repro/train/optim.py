@@ -1,0 +1,88 @@
+"""AdamW with mixed precision (bf16 params, fp32 master + moments),
+cosine schedule with warmup, global-norm clipping.
+
+Optimizer state is a dict of trees with the *same paths* as params, so the
+parameter sharding rules apply verbatim (ZeRO: moments/master inherit the
+FSDP+TP layout)."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    lr: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+
+
+def schedule(cfg: OptConfig, step: jnp.ndarray) -> jnp.ndarray:
+    warm = cfg.lr * (step + 1) / max(cfg.warmup_steps, 1)
+    t = jnp.clip((step - cfg.warmup_steps)
+                 / max(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    cos = cfg.lr * 0.5 * (1.0 + jnp.cos(jnp.pi * t))
+    return jnp.where(step < cfg.warmup_steps, warm, cos)
+
+
+def init_opt_state(params) -> Dict[str, Any]:
+    zeros32 = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return {
+        "m": jax.tree.map(zeros32, params),
+        "v": jax.tree.map(zeros32, params),
+        # copy=True: when params are already fp32, astype would alias the
+        # param buffer and donating (params, opt_state) would donate it twice.
+        "master": jax.tree.map(
+            lambda p: jnp.array(p, dtype=jnp.float32, copy=True), params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def global_norm(tree) -> jnp.ndarray:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def apply_updates(cfg: OptConfig, params, opt_state, grads
+                  ) -> Tuple[Any, Dict[str, Any], Dict[str, jnp.ndarray]]:
+    step = opt_state["step"]
+    lr = schedule(cfg, step)
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-9))
+
+    b1, b2 = cfg.b1, cfg.b2
+    bc1 = 1.0 - b1 ** (step.astype(jnp.float32) + 1.0)
+    bc2 = 1.0 - b2 ** (step.astype(jnp.float32) + 1.0)
+
+    def upd(g, m, v, master):
+        g = g.astype(jnp.float32) * scale
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * g * g
+        mh = m / bc1
+        vh = v / bc2
+        new_master = master - lr * (mh / (jnp.sqrt(vh) + cfg.eps)
+                                    + cfg.weight_decay * master)
+        return m, v, new_master
+
+    flat = jax.tree.map(upd, grads, opt_state["m"], opt_state["v"],
+                        opt_state["master"])
+    m = jax.tree.map(lambda t: t[0], flat,
+                     is_leaf=lambda t: isinstance(t, tuple))
+    v = jax.tree.map(lambda t: t[1], flat,
+                     is_leaf=lambda t: isinstance(t, tuple))
+    master = jax.tree.map(lambda t: t[2], flat,
+                          is_leaf=lambda t: isinstance(t, tuple))
+    new_params = jax.tree.map(lambda mast, p: mast.astype(p.dtype),
+                              master, params)
+    new_state = {"m": m, "v": v, "master": master, "step": step + 1}
+    metrics = {"grad_norm": gnorm, "lr": lr}
+    return new_params, new_state, metrics

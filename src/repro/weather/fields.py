@@ -1,0 +1,79 @@
+"""COSMO-like weather state: prognostic fields on a (nz, ny, nx) grid.
+
+Fields follow the paper's vocabulary: "fields represent atmospheric
+components like wind, pressure, velocity, etc. that are required for weather
+calculation".  The state is a flat pytree so it shards/checkpoints like any
+model params.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+PROGNOSTIC = ("u", "v", "t", "pp")   # wind u/v, temperature, pressure pert.
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class WeatherState:
+    """Prognostic fields + vertical contravariant velocity (wcon, staggered
+    in x: (nz, ny, nx+1)) + slow tendencies + the running stage tendencies
+    that vadvc updates (utens_stage per field)."""
+
+    fields: Dict[str, jnp.ndarray]          # each (E, nz, ny, nx)
+    wcon: jnp.ndarray                       # (E, nz, ny, nx); staggered view
+                                            # wcon[..., i..i+1] built on use
+                                            # (periodic wrap / halo exchange)
+    tens: Dict[str, jnp.ndarray]            # slow tendencies, like fields
+    stage_tens: Dict[str, jnp.ndarray]      # vadvc-updated tendencies
+
+    def tree_flatten(self):
+        keys = tuple(sorted(self.fields))
+        leaves = ([self.fields[k] for k in keys] + [self.wcon]
+                  + [self.tens[k] for k in keys]
+                  + [self.stage_tens[k] for k in keys])
+        return leaves, keys
+
+    @classmethod
+    def tree_unflatten(cls, keys, leaves):
+        n = len(keys)
+        fields = dict(zip(keys, leaves[:n]))
+        wcon = leaves[n]
+        tens = dict(zip(keys, leaves[n + 1:2 * n + 1]))
+        stage = dict(zip(keys, leaves[2 * n + 1:]))
+        return cls(fields=fields, wcon=wcon, tens=tens, stage_tens=stage)
+
+    @property
+    def grid_shape(self) -> Tuple[int, int, int]:
+        f = next(iter(self.fields.values()))
+        return f.shape[-3:]
+
+
+def _smooth_noise(key, shape, dtype) -> jnp.ndarray:
+    """Band-limited random field (atmosphere-ish smoothness): random coarse
+    grid, trilinear-resized up."""
+    coarse = tuple(max(2, s // 8) for s in shape[-3:])
+    x = jax.random.normal(key, shape[:-3] + coarse, jnp.float32)
+    x = jax.image.resize(x, shape, method="trilinear")
+    return x.astype(dtype)
+
+
+def initial_state(key, grid_shape: Tuple[int, int, int], ensemble: int = 1,
+                  dtype=jnp.float32) -> WeatherState:
+    nz, ny, nx = grid_shape
+    keys = jax.random.split(key, 3 * len(PROGNOSTIC) + 1)
+    shape = (ensemble, nz, ny, nx)
+    fields = {f: _smooth_noise(keys[i], shape, dtype)
+              for i, f in enumerate(PROGNOSTIC)}
+    tens = {f: 0.01 * _smooth_noise(keys[len(PROGNOSTIC) + i], shape, dtype)
+            for i, f in enumerate(PROGNOSTIC)}
+    stage = {f: jnp.zeros(shape, dtype) for f in PROGNOSTIC}
+    # wcon: vertical velocity scaled so the implicit solve is well conditioned
+    # (physically |wcon·dt/dz| << 1).
+    wcon = 0.15 * _smooth_noise(keys[-1], (ensemble, nz, ny, nx), dtype)
+    return WeatherState(fields=fields, wcon=wcon, tens=tens, stage_tens=stage)

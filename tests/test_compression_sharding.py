@@ -1,0 +1,99 @@
+"""Gradient compression codec properties + sharding rule validity."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import registry
+from repro.models import api
+from repro.parallel import compression, sharding as shd
+from repro.launch.mesh import make_mesh
+
+
+# ---------------------------------------------------------------------------
+# int8 rowwise codec
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 10_000))
+def test_int8_roundtrip_error_bound(seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(16, 64)).astype(np.float32))
+    q, s = compression.int8_rowwise_encode(jax.random.PRNGKey(seed), x)
+    y = compression.int8_rowwise_decode(q, s)
+    # error per element bounded by one quantization step (= scale)
+    err = np.abs(np.asarray(y) - np.asarray(x))
+    bound = np.asarray(s) * 1.0 + 1e-7
+    assert (err <= bound + 1e-6).all()
+
+
+def test_int8_unbiased():
+    """Stochastic rounding: E[decode(encode(x))] == x."""
+    x = jnp.full((1, 64), 0.3712, jnp.float32) * jnp.linspace(
+        -1, 1, 64)[None]
+    acc = np.zeros((1, 64), np.float64)
+    n = 400
+    for i in range(n):
+        q, s = compression.int8_rowwise_encode(jax.random.PRNGKey(i), x)
+        acc += np.asarray(compression.int8_rowwise_decode(q, s),
+                          np.float64)
+    mean = acc / n
+    np.testing.assert_allclose(mean, np.asarray(x, np.float64), atol=5e-4)
+
+
+def test_compressed_psum_single_axis():
+    """shard_map DP reduction with all 3 codecs on a 1-wide axis."""
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+    mesh = make_mesh((1,), ("dp",))
+    g = {"w": jnp.arange(8.0).reshape(2, 4)}
+
+    for method in ("none", "bf16", "int8"):
+        def f(t):
+            return compression.compressed_psum(
+                t, "dp", method, key=jax.random.PRNGKey(0))
+
+        out = shard_map(f, mesh=mesh, in_specs=({"w": P()},),
+                        out_specs={"w": P()})(g)
+        np.testing.assert_allclose(np.asarray(out["w"]),
+                                   np.asarray(g["w"]), rtol=2e-2, atol=5e-2)
+
+
+# ---------------------------------------------------------------------------
+# sharding rules
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("arch", registry.ARCH_IDS)
+@pytest.mark.parametrize("kind", ["train", "serve"])
+def test_param_specs_are_rank_valid(arch, kind):
+    cfg = registry.reduced_config(registry.get_config(arch))
+    model = api.build(cfg)
+    shapes = model.param_shapes()
+    mesh = make_mesh((1, 1), ("data", "model"))
+    shards = shd.params_sharding(shapes, mesh, kind)
+    for leaf, sh in zip(jax.tree.leaves(shapes), jax.tree.leaves(
+            shards, is_leaf=lambda x: hasattr(x, "spec"))):
+        assert len(sh.spec) <= len(leaf.shape), (leaf.shape, sh.spec)
+
+
+@pytest.mark.parametrize("arch", ["yi-34b", "recurrentgemma-9b",
+                                  "mamba2-1.3b", "whisper-medium"])
+def test_cache_specs_are_rank_valid(arch):
+    cfg = registry.reduced_config(registry.get_config(arch))
+    model = api.build(cfg)
+    mesh = make_mesh((1, 1), ("data", "model"))
+    cache = jax.eval_shape(lambda: model.init_cache(4, 32))
+    shards = shd.cache_sharding(cache, mesh, 4)
+    for leaf, sh in zip(jax.tree.leaves(cache), jax.tree.leaves(
+            shards, is_leaf=lambda x: hasattr(x, "spec"))):
+        assert len(sh.spec) <= len(leaf.shape), (leaf.shape, sh.spec)
+
+
+def test_batch_sharding_divisibility():
+    mesh = make_mesh((1, 1), ("data", "model"))
+    assert shd.batch_sharding(mesh, 7) in (("data",), None)
+    # batch 7 with data=1 divides; with a fake 16-wide axis it must refuse
+    # (can't test >1 devices here; rule logic covered by dryrun cells)
+    assert shd.data_spec(mesh, 8, 2) is not None

@@ -1,0 +1,92 @@
+"""core/: tiling planner, autotuner, perf model, roofline parsing."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import autotune, hierarchy, perfmodel, roofline, tiling
+
+
+def test_candidate_tiles_respect_vmem_and_seq_axes():
+    hier = hierarchy.tpu_v5e()
+    plans = tiling.candidate_tiles(tiling.VADVC, (64, 256, 256), jnp.float32,
+                                   hier)
+    assert plans, "no legal plans"
+    for p in plans:
+        assert p.tile[0] == 64, "vadvc must keep z whole (sequential axis)"
+        assert p.vmem_bytes <= hier.vmem.capacity_bytes
+
+
+def test_autotune_pareto_and_dtype_dependence():
+    """Paper Fig.6: the Pareto-optimal tile depends on precision."""
+    grid = (64, 256, 256)
+    t32 = autotune.tune(tiling.VADVC, grid, jnp.float32)
+    t16 = autotune.tune(tiling.VADVC, grid, jnp.bfloat16)
+    assert t32.plan.fits(hierarchy.tpu_v5e())
+    assert t16.plan.fits(hierarchy.tpu_v5e())
+    # bf16 tiles hold 2x the points of fp32 at equal VMEM
+    assert (t16.plan.tile_points >= t32.plan.tile_points)
+
+
+def test_pareto_front_is_nondominated():
+    pts = [(1.0, 100, 0), (2.0, 50, 1), (0.5, 200, 2), (3.0, 300, 3)]
+    front = autotune.pareto_front(pts)
+    chosen = [pts[i] for i in front]
+    for a in chosen:
+        for b in chosen:
+            assert not (b[0] < a[0] and b[1] < a[1])
+    assert 3 not in front      # dominated point
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.sampled_from([tiling.HDIFF, tiling.VADVC, tiling.COPY]),
+       st.sampled_from(["float32", "bfloat16"]))
+def test_perf_estimate_invariants(op, dtype):
+    plans = tiling.candidate_tiles(op, (64, 128, 128), dtype)
+    for plan in plans[:5]:
+        est = perfmodel.estimate(plan)
+        assert est.time_s > 0
+        assert est.memory_s >= 0 and est.compute_s >= 0
+        assert est.energy_j > 0
+        frac = perfmodel.roofline_fraction(est)
+        assert 0 < frac <= 1.05
+
+
+def test_halo_overhead_decreases_with_tile_size():
+    small = tiling.TilePlan(tiling.HDIFF, (64, 256, 256), (1, 8, 256),
+                            "float32")
+    big = tiling.TilePlan(tiling.HDIFF, (64, 256, 256), (1, 64, 256),
+                          "float32")
+    assert big.halo_overhead < small.halo_overhead
+
+
+def test_collective_parsing():
+    hlo = """
+  %ar = bf16[128,1024]{1,0} all-reduce(bf16[128,1024] %x), replica_groups={}
+  %ag.1 = f32[16,512]{1,0} all-gather(f32[16,32] %y), dimensions={1}
+  %cp = (f32[4,4], f32[4,4]) collective-permute-start(f32[4,4] %z)
+  %aa = bf16[64]{0} all-to-all(bf16[64] %w)
+"""
+    coll = roofline.collective_bytes(hlo)
+    assert coll["all-reduce"] == 128 * 1024 * 2
+    assert coll["all-gather"] == 16 * 512 * 4       # result shape only
+    assert coll["all-to-all"] == 64 * 2
+    assert "collective-permute" in coll
+    wire = roofline.wire_bytes(coll)
+    assert wire > coll["all-reduce"]      # AR counts 2x (ring)
+
+
+def test_roofline_analyze_dominant_term():
+    cost = {"flops": 1e12, "bytes accessed": 1e9}
+    terms = roofline.analyze(cost, {"all-reduce": int(1e9)}, chips=256,
+                             model_flops_total=2e14)
+    assert terms.dominant == "collective"
+    assert terms.compute_s == pytest.approx(1e12 / hierarchy.PEAK_BF16_FLOPS)
+    assert 0 < terms.roofline_fraction < 1
+
+
+def test_machine_balance_sane():
+    h = hierarchy.tpu_v5e()
+    mb = h.machine_balance(jnp.bfloat16)
+    assert 200 < mb < 300      # 197e12/819e9 ≈ 240

@@ -1,0 +1,54 @@
+"""Elastic scaling: a checkpoint written on one mesh restores onto another
+(different device count and sharding), bit-exactly — the remesh path a
+launcher uses after node failure or pool resize."""
+
+import os
+import subprocess
+import sys
+
+_SNIPPET = r"""
+import jax, numpy as np, tempfile
+import jax.numpy as jnp
+from repro.ckpt import checkpoint as ckpt_lib
+from repro.configs import registry
+from repro.models import api
+from repro.parallel import sharding as shd
+from repro.train import optim
+from repro.launch.mesh import make_mesh
+
+cfg = registry.reduced_config(registry.get_config("olmo-1b"), layers=2)
+model = api.build(cfg)
+params = model.init(jax.random.PRNGKey(0))
+opt_state = optim.init_opt_state(params)
+
+d = tempfile.mkdtemp()
+# write on a 1x1 mesh (single host survivor)
+ckpt_lib.save(d, 7, params, opt_state)
+
+# restore onto a 2x2 mesh (scaled-up pool), production sharding rules
+mesh = make_mesh((2, 2), ("data", "model"))
+p_shard = shd.params_sharding(model.param_shapes(), mesh, "train")
+o_shard = {"m": p_shard, "v": p_shard, "master": p_shard,
+           "step": jax.sharding.NamedSharding(
+               mesh, jax.sharding.PartitionSpec())}
+p2, o2, step = ckpt_lib.restore(d, 7, mesh, p_shard, o_shard)
+assert step == 7
+for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(p2)):
+    np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                  np.asarray(b, np.float32))
+# restored leaves actually carry the 2x2 sharding
+leaf = p2["superblocks"]["b0"]["attn"]["wq"]
+assert len(leaf.sharding.device_set) == 4
+print("ELASTIC_OK")
+"""
+
+
+def test_restore_onto_larger_mesh():
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    env["PYTHONPATH"] = "src"
+    r = subprocess.run([sys.executable, "-c", _SNIPPET], env=env,
+                       capture_output=True, text=True, timeout=600,
+                       cwd=os.path.dirname(os.path.dirname(
+                           os.path.abspath(__file__))))
+    assert "ELASTIC_OK" in r.stdout, r.stderr[-2000:]

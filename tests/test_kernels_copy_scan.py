@@ -1,0 +1,34 @@
+"""copy stencil + lru_scan kernels vs oracles."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.kernels.copy_stencil.copy_stencil import copy_pallas
+from repro.kernels.copy_stencil.ref import copy_stencil as copy_ref
+
+
+@pytest.mark.parametrize("shape,tr", [((64, 128), 16), ((256, 256), 64),
+                                      ((512, 128), 256)])
+@pytest.mark.parametrize("dtype", [np.float32, jnp.bfloat16])
+def test_copy(shape, tr, dtype, rng):
+    src = jnp.asarray(rng.normal(size=shape).astype(np.float32), dtype)
+    got = copy_pallas(src, tr=tr, interpret=True)
+    assert got.dtype == src.dtype
+    np.testing.assert_array_equal(np.asarray(got, np.float32),
+                                  np.asarray(copy_ref(src), np.float32))
+
+
+def test_lru_scan_kernel_matches_associative_scan(rng):
+    from repro.kernels.lru_scan.ops import lru_scan as lru_op
+    from repro.kernels.lru_scan.ref import lru_scan_ref
+    for (t, c), (tt, tc) in [((32, 64), (8, 32)), ((64, 128), (16, 128)),
+                             ((16, 32), (16, 16))]:
+        a = jnp.asarray(
+            rng.uniform(0.3, 0.99, size=(t, c)).astype(np.float32))
+        b = jnp.asarray(rng.normal(size=(t, c)).astype(np.float32))
+        want = np.asarray(lru_scan_ref(a, b))
+        got = np.asarray(lru_op(a, b, tt=tt, tc=tc, use_pallas=True,
+                                interpret=True))
+        np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)

@@ -1,0 +1,70 @@
+"""Flash-attention Pallas kernel vs pure-jnp oracle (interpret mode)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.flash_attention import flash_mha_pallas, ref
+from repro.kernels.flash_attention.ops import auto_blocks
+
+
+def _rand(key, shape, dtype):
+    return jax.random.normal(key, shape, jnp.float32).astype(dtype)
+
+
+def _run(b, t, s, h, kh, hd, dtype, causal, window, softcap, bq=64, bk=64):
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = _rand(ks[0], (b, t, h, hd), dtype)
+    k = _rand(ks[1], (b, s, kh, hd), dtype)
+    v = _rand(ks[2], (b, s, kh, hd), dtype)
+    out = flash_mha_pallas(q, k, v, causal=causal, window=window,
+                           softcap=softcap, block_q=bq, block_k=bk,
+                           interpret=True)
+    want = ref.mha(q, k, v, causal=causal, window=window, softcap=softcap)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32),
+                               atol=tol, rtol=tol)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("causal", [True, False])
+def test_basic_shapes(dtype, causal):
+    _run(2, 128, 128, 4, 4, 32, dtype, causal, 0, 0.0)
+
+
+@pytest.mark.parametrize("g", [2, 4])
+def test_gqa_group_sizes(g):
+    _run(1, 128, 128, 4 * g // g * g, 4, 32, jnp.float32, True, 0, 0.0)
+    _run(1, 128, 128, g * 2, 2, 32, jnp.float32, True, 0, 0.0)
+
+
+def test_sliding_window():
+    _run(1, 256, 256, 2, 2, 32, jnp.float32, True, 64, 0.0)
+
+
+def test_softcap():
+    _run(1, 128, 128, 2, 1, 32, jnp.float32, True, 0, 30.0)
+
+
+def test_cross_attention_rectangular():
+    # prefill-style T != S, non-causal (whisper cross-attn shape)
+    _run(2, 64, 192, 4, 2, 32, jnp.float32, False, 0, 0.0)
+
+
+@settings(max_examples=12, deadline=None)
+@given(st.sampled_from([64, 128, 192]), st.sampled_from([64, 128, 256]),
+       st.sampled_from([(4, 4), (4, 2), (8, 1)]),
+       st.sampled_from([32, 64]),
+       st.booleans())
+def test_property_sweep(t, s, heads, hd, causal):
+    h, kh = heads
+    _run(1, t, s, h, kh, hd, jnp.float32, causal, 0, 0.0)
+
+
+def test_auto_blocks_fit_and_align():
+    bq, bk = auto_blocks(4096, 32768, 128)
+    assert 4096 % bq == 0 and 32768 % bk == 0
+    assert bq % 128 == 0 and bk % 128 == 0

@@ -1,0 +1,74 @@
+"""hdiff Pallas kernel vs pure-jnp oracle: shape/dtype sweeps + properties."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.hdiff import ref
+from repro.kernels.hdiff.hdiff import hdiff_pallas
+from repro.kernels.hdiff.ops import hdiff as hdiff_op
+
+SHAPES = [(1, 8, 8), (4, 8, 16), (8, 16, 32), (3, 32, 8), (2, 64, 64)]
+TILES = {8: [2, 4, 8], 16: [4, 8], 32: [8, 16], 64: [8, 32]}
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+@pytest.mark.parametrize("dtype", [np.float32, jnp.bfloat16])
+def test_pallas_matches_ref(shape, dtype, rng):
+    src = rng.normal(size=shape).astype(np.float32)
+    src = jnp.asarray(src, dtype)
+    want = np.asarray(ref.hdiff(src), np.float32)
+    for ty in TILES[shape[1]]:
+        got = np.asarray(hdiff_pallas(src, ty=ty, interpret=True),
+                         np.float32)
+        atol = 1e-5 if dtype == np.float32 else 0.15
+        np.testing.assert_allclose(got, want, atol=atol,
+                                   err_msg=f"ty={ty} shape={shape}")
+
+
+def test_ops_dispatch(rng):
+    src = jnp.asarray(rng.normal(size=(4, 16, 16)).astype(np.float32))
+    a = np.asarray(hdiff_op(src, use_pallas=False))
+    b = np.asarray(hdiff_op(src, use_pallas=True, ty=4))
+    np.testing.assert_allclose(a, b, atol=1e-5)
+
+
+def test_boundary_ring_passthrough(rng):
+    src = jnp.asarray(rng.normal(size=(2, 16, 16)).astype(np.float32))
+    out = np.asarray(ref.hdiff(src))
+    s = np.asarray(src)
+    assert np.array_equal(out[:, :2, :], s[:, :2, :])
+    assert np.array_equal(out[:, -2:, :], s[:, -2:, :])
+    assert np.array_equal(out[:, :, :2], s[:, :, :2])
+    assert np.array_equal(out[:, :, -2:], s[:, :, -2:])
+
+
+def test_constant_field_is_fixed_point():
+    src = jnp.full((3, 16, 16), 3.25, jnp.float32)
+    out = np.asarray(ref.hdiff(src))
+    np.testing.assert_allclose(out, 3.25, atol=1e-6)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 10_000), st.floats(0.005, 0.031))
+def test_limiter_bounds_output(seed, coeff):
+    """With the flux limiter, diffusion must not amplify the field range —
+    within the explicit-step stability region coeff < 1/32 (above it the
+    scheme amplifies by von-Neumann analysis, limiter or not)."""
+    r = np.random.default_rng(seed)
+    src = jnp.asarray(r.normal(size=(2, 12, 12)).astype(np.float32))
+    out = np.asarray(ref.hdiff(src, coeff=coeff))
+    s = np.asarray(src)
+    # interior values remain bounded by a modest expansion of input range
+    span = s.max() - s.min()
+    assert out.max() <= s.max() + 0.5 * span + 1e-5
+    assert out.min() >= s.min() - 0.5 * span + -1e-5
+
+
+def test_linearity_of_unlimited_variant(rng):
+    a = jnp.asarray(rng.normal(size=(2, 12, 12)).astype(np.float32))
+    b = jnp.asarray(rng.normal(size=(2, 12, 12)).astype(np.float32))
+    lhs = np.asarray(ref.hdiff_simple(a + b))
+    rhs = np.asarray(ref.hdiff_simple(a)) + np.asarray(ref.hdiff_simple(b))
+    np.testing.assert_allclose(lhs, rhs, atol=1e-4)

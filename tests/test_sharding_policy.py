@@ -1,0 +1,108 @@
+"""Sharding rules, vocab padding, and launcher knobs."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import registry
+from repro.configs.base import SHAPES
+from repro.models import api, lm
+from repro.parallel import sharding as shd
+from repro.launch.mesh import make_mesh
+
+
+def test_param_spec_train_vs_serve():
+    names = ("superblocks", "b0", "attn", "wq")
+    assert shd.param_spec(names, 3, "train") == P(None, "data", "model")
+    assert shd.param_spec(names, 3, "serve") == P(None, None, "model")
+    names = ("rem0", "ffn", "wo")
+    assert shd.param_spec(names, 2, "train") == P("model", "data")
+    assert shd.param_spec(names, 2, "serve") == P("model", None)
+
+
+def test_moe_expert_div_fallback():
+    """40 experts on a 16-wide model axis -> TP over d_ff, E unsharded."""
+    names = ("superblocks", "b0", "ffn", "wi")
+    assert shd.param_spec(names, 4, "train", expert_div=True) \
+        == P(None, "model", "data", None)
+    assert shd.param_spec(names, 4, "train", expert_div=False) \
+        == P(None, None, "data", "model")
+
+
+def test_params_sharding_detects_nondivisible_experts():
+    mesh = make_mesh((1, 1), ("data", "model"))
+    cfg = registry.get_config("granite-moe-3b-a800m")
+    model = api.build(cfg)
+    shapes = model.param_shapes()
+    tree = shd.params_sharding(shapes, mesh, "train")
+    leaf = tree["superblocks"]["b0"]["ffn"]["wi"]
+    # model axis width 1 divides everything -> expert-parallel layout
+    assert leaf.spec == P(None, "model", "data", None)
+
+
+def test_padded_vocab_is_128_multiple_and_masked():
+    cfg = registry.get_config("granite-moe-3b-a800m")
+    assert cfg.padded_vocab % 128 == 0
+    assert cfg.padded_vocab >= cfg.vocab_size
+    logits = jnp.ones((2, 3, cfg.padded_vocab))
+    masked = lm.mask_padded_vocab(logits, cfg.vocab_size)
+    assert float(masked[..., cfg.vocab_size:].max()) < -1e29
+    assert float(masked[..., :cfg.vocab_size].min()) == 1.0
+
+
+def test_padding_columns_do_not_change_loss():
+    """Garbage in the physical padding rows must not affect the NLL."""
+    cfg = registry.reduced_config(registry.get_config("tinyllama-1.1b"),
+                                  layers=2)
+    cfg = dataclasses.replace(cfg, vocab_size=250)   # padded_vocab = 256
+    assert cfg.padded_vocab == 256
+    model = api.build(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    batch = {"tokens": jax.random.randint(jax.random.PRNGKey(1), (2, 16),
+                                          0, cfg.vocab_size)}
+    base = float(model.loss(params, batch, remat="none"))
+    poisoned = jax.tree.map(lambda x: x, params)
+    poisoned["head"] = params["head"].at[:, cfg.vocab_size:].set(1e4)
+    poisoned["embed"] = params["embed"].at[cfg.vocab_size:].set(-1e4)
+    pois = float(model.loss(poisoned, batch, remat="none"))
+    np.testing.assert_allclose(base, pois, rtol=1e-5)
+
+
+def test_choose_microbatches_fits_and_caps():
+    from repro.launch import dryrun
+    mesh = make_mesh((1, 1), ("data", "model"))
+    cfg = registry.reduced_config(registry.get_config("olmo-1b"))
+    mb = dryrun.choose_microbatches(cfg, SHAPES["train_4k"], mesh)
+    assert mb >= 1 and (mb & (mb - 1)) == 0 or mb == SHAPES[
+        "train_4k"].global_batch
+    assert dryrun.choose_microbatches(cfg, SHAPES["decode_32k"], mesh) == 1
+
+
+def test_grad_accum_bf16_close_to_f32():
+    """bf16 gradient accumulation (wire compression) stays numerically
+    close to f32 accumulation for one step."""
+    from repro.data import synthetic
+    from repro.train import loop, optim
+    cfg = registry.reduced_config(registry.get_config("tinyllama-1.1b"),
+                                  layers=2)
+    model = api.build(cfg)
+    mesh = make_mesh((1, 1), ("data", "model"))
+    opt_cfg = optim.OptConfig(lr=1e-3, warmup_steps=0, total_steps=10,
+                              clip_norm=1e9)
+    params = model.init(jax.random.PRNGKey(0))
+    opt_state = optim.init_opt_state(params)
+    batch = jax.tree.map(jnp.asarray, synthetic.lm_batch(cfg, 0, 0, 8, 32))
+    s32, _, _ = loop.make_train_step(model, mesh, opt_cfg, microbatches=4,
+                                     remat="none")
+    s16, _, _ = loop.make_train_step(model, mesh, opt_cfg, microbatches=4,
+                                     remat="none", grad_dtype="bfloat16")
+    p32, _, _ = s32(params, opt_state, batch)
+    p16, _, _ = s16(params, opt_state, batch)
+    for a, b in zip(jax.tree.leaves(p32), jax.tree.leaves(p16)):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32),
+                                   atol=5e-3, rtol=5e-2)
