@@ -1,0 +1,88 @@
+"""Fused vs unfused dycore step — the NERO fusion claim, measured + modeled.
+
+Paper §3 (arxiv 2107.08716): the CPU/GPU baseline round-trips every
+intermediate through main memory; the in-fabric pipeline streams each field
+once.  This benchmark reports that claim three ways for one full dycore step
+(4 prognostic fields):
+
+  * measured wall-clock of `dycore_step(fused=True)` vs `fused=False`
+    (CPU note: without a TPU the fused kernel runs in the Pallas
+    *interpreter*, so its wall-clock here validates the pipeline, it does
+    not demonstrate the speedup — the modeled rows do);
+  * modeled HBM traffic per step from core/memmodel.dycore_step_traffic
+    (array-level reads/writes each pipeline materializes), with the fused
+    y-window halo re-read overhead from the auto-tuned TilePlan;
+  * modeled TPU time/energy for the fused plan from core/perfmodel.
+
+Emitted metric names (docs/benchmarks.md):
+  dycore_fused/walltime_{fused,unfused}   us per step (measured)
+  dycore_fused/traffic_{fused,unfused}    modeled MB per step + reduction
+  dycore_fused/model_{fused}              modeled TPU time + bottleneck
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, time_fn
+from repro.core import hierarchy as hw
+from repro.core import memmodel, perfmodel, tiling
+from repro.kernels.dycore_fused import ops as fused_ops
+from repro.weather import dycore, fields
+
+GRID = (8, 32, 64)          # small enough for the CPU interpreter
+ENSEMBLE = 1
+MODEL_GRID = (64, 256, 256)  # the paper's domain, for the modeled rows
+
+
+def run():
+    st = fields.initial_state(jax.random.PRNGKey(0), GRID,
+                              ensemble=ENSEMBLE)
+    n_fields = len(fields.PROGNOSTIC)
+
+    t_unfused = time_fn(
+        lambda s: dycore.dycore_step(s, fused=False), st, iters=3, warmup=1)
+    emit("dycore_fused/walltime_unfused", t_unfused,
+         f"grid={GRID} ensemble={ENSEMBLE}")
+    t_fused = time_fn(
+        lambda s: dycore.dycore_step(s, fused=True), st, iters=3, warmup=1)
+    backend = jax.default_backend()
+    emit("dycore_fused/walltime_fused", t_fused,
+         f"grid={GRID} ensemble={ENSEMBLE} backend={backend}"
+         + (" (Pallas interpreter — validates, not representative)"
+            if backend != "tpu" else ""))
+
+    # Modeled HBM traffic at the paper's domain, auto-tuned fused window.
+    for dtype in ("float32", "bfloat16"):
+        ty = fused_ops.plan_tile(MODEL_GRID, jnp.dtype(dtype))
+        t = memmodel.dycore_step_traffic(MODEL_GRID, dtype,
+                                         n_fields=n_fields, ty=ty)
+        mb = 1.0 / 2**20
+        emit(f"dycore_fused/traffic_unfused_{dtype}", 0.0,
+             f"MB={t['unfused']['total'] * mb:.0f} "
+             f"vadvc={t['unfused']['vadvc'] * mb:.0f} "
+             f"pointwise={t['unfused']['pointwise'] * mb:.0f} "
+             f"hdiff={(t['unfused']['hdiff'] + t['unfused']['hdiff_pad']) * mb:.0f}")
+        emit(f"dycore_fused/traffic_fused_{dtype}", 0.0,
+             f"MB={t['fused']['total'] * mb:.0f} ty={ty} "
+             f"halo_overhead={t['halo_overhead'] * 100:.1f}% "
+             f"reduction={t['reduction_x']:.2f}x "
+             f"(aliased-window pessimistic bound: "
+             f"MB={t['fused']['stream_window_reads'] * mb:.0f}, "
+             f"{t['reduction_x_window_reads']:.2f}x)")
+
+        # Modeled TPU time for the fused plan (per field pipeline pass).
+        plan = tiling.TilePlan(op=tiling.DYCORE_FUSED, grid_shape=MODEL_GRID,
+                               tile=(MODEL_GRID[0], ty, MODEL_GRID[2]),
+                               dtype=dtype)
+        est = perfmodel.estimate(plan)
+        emit(f"dycore_fused/model_fused_{dtype}",
+             est.time_s * n_fields * 1e6,
+             f"bottleneck={est.bottleneck} gflops={est.gflops:.0f} "
+             f"vmem={100.0 * plan.vmem_bytes / hw.tpu_v5e().vmem.capacity_bytes:.0f}%")
+
+
+if __name__ == "__main__":
+    run()

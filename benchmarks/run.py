@@ -11,12 +11,12 @@ import traceback
 
 
 def main() -> None:
-    from benchmarks import (copy_stencil, dryrun_table, energy,
+    from benchmarks import (copy_stencil, dryrun_table, dycore_fused, energy,
                             kernel_walltime, pe_scaling, roofline_kernels,
                             table3, tile_autotune)
     print("name,us_per_call,derived")
     for mod in (roofline_kernels, copy_stencil, tile_autotune, pe_scaling,
-                energy, table3, kernel_walltime, dryrun_table):
+                energy, table3, kernel_walltime, dycore_fused, dryrun_table):
         try:
             mod.run()
         except Exception as e:     # keep the suite going; record failure

@@ -102,7 +102,7 @@ def all_steps(ckpt_dir: str):
             meta = os.path.join(ckpt_dir, name, "meta.json")
             if os.path.exists(meta):       # complete checkpoints only
                 out.append(int(name[5:]))
-    return out
+    return sorted(out)                     # os.listdir order is fs-dependent
 
 
 def latest_step(ckpt_dir: str) -> Optional[int]:

@@ -15,6 +15,7 @@ from typing import Callable, List, Optional, Sequence, Tuple
 
 from repro.core import hierarchy as hw
 from repro.core import perfmodel
+from repro.core import tiling as _tiling
 from repro.core.tiling import OpSpec, TilePlan, candidate_tiles
 
 
@@ -23,6 +24,36 @@ class TunedResult:
     plan: TilePlan
     est: perfmodel.PerfEstimate
     pareto: Tuple[Tuple[float, int], ...]   # (time_s, vmem_bytes) frontier
+
+
+# Registry of tunable op tile spaces, name -> OpSpec.  Kernel packages look
+# their search space up here (and benchmarks sweep it) instead of hard-coding
+# an OpSpec import per call site.
+OP_SPECS = {
+    spec.name: spec
+    for spec in (_tiling.HDIFF, _tiling.VADVC, _tiling.COPY,
+                 _tiling.LRU_SCAN, _tiling.DYCORE_FUSED)
+}
+
+
+def register_op(spec: OpSpec) -> OpSpec:
+    """Add (or replace) an op's tile space in the registry."""
+    OP_SPECS[spec.name] = spec
+    return spec
+
+
+def get_op(name: str) -> OpSpec:
+    try:
+        return OP_SPECS[name]
+    except KeyError:
+        raise KeyError(f"unknown op {name!r}; registered: "
+                       f"{sorted(OP_SPECS)}") from None
+
+
+def tune_named(name: str, grid_shape: Sequence[int], dtype,
+               **kwargs) -> "TunedResult":
+    """`tune` with the OpSpec looked up by registered name."""
+    return tune(get_op(name), grid_shape, dtype, **kwargs)
 
 
 def pareto_front(points: Sequence[Tuple[float, int, int]]) -> List[int]:

@@ -25,6 +25,8 @@ import jax
 import numpy as np
 
 from repro.configs.base import ModelConfig, ShapeConfig
+from repro.core import hierarchy as hw
+from repro.core import tiling
 from repro.parallel import sharding as shd
 
 
@@ -94,3 +96,71 @@ def estimate(cfg: ModelConfig, shape: ShapeConfig, mesh, p_shapes, p_shard,
     out["total"] = sum(out.values())
     out["fits_16g"] = bool(out["total"] <= 16 * 2**30)
     return out
+
+
+def dycore_step_traffic(grid_shape, dtype, *, n_fields: int = 4,
+                        ty: int = 8) -> Dict[str, Dict[str, int]]:
+    """Modeled HBM traffic of one dycore step, fused vs unfused — the NERO
+    fusion accounting (arxiv 2107.08716 §3: the baseline's intermediates
+    round-trip main memory between kernels; the fused PE streams each field
+    once).
+
+    Counts array-level reads/writes actually materialized by each pipeline,
+    per ensemble member, for `n_fields` prognostic fields on a (nz, ny, nx)
+    grid.  Unfused (weather/dycore.py `fused=False`):
+
+      vadvc      reads f, wcon, utens, utens_stage; writes stage
+      point-wise reads f, stage;                    writes f'
+      hdiff      pads (read f' / write padded), reads padded, writes f''
+
+    Fused (kernels/dycore_fused), two bounds:
+
+      "stream" — the dataflow ideal (NERO's line buffers): each input read
+      once plus the 2-row y-window halo re-read from the TilePlan, 2 writes;
+      plus one shared w = wcon_i + wcon_{i+1} precompute (read wcon, write w).
+
+      "stream_window_reads" — the Pallas formulation as implemented: the
+      periodic y-halo comes from three aliased prev/cur/next input refs, and
+      each ref fetches a whole ty-row window per grid cell (Pallas only
+      elides re-fetches when an operand's *own* block index repeats), so the
+      pessimistic bound is 3x input reads.  The truth on real hardware lies
+      between the two; the ideal is what a line-buffer/manual-DMA
+      formulation of the same pipeline would reach.
+
+    Returns {"unfused": {...}, "fused": {...}, "reduction_x": float
+    (ideal), "reduction_x_window_reads": float (pessimistic)} with
+    per-stage byte counts and totals.
+    """
+    grid_shape = tuple(int(g) for g in grid_shape)
+    b = hw.dtype_bytes(dtype)
+    pts = math.prod(grid_shape)
+    fb = pts * b                                   # one field's HBM bytes
+
+    unfused = {
+        "vadvc": n_fields * (4 + 1) * fb,
+        "pointwise": n_fields * (2 + 1) * fb,
+        "hdiff_pad": n_fields * 2 * fb,            # materialized wrap-pad
+        "hdiff": n_fields * 2 * fb,
+    }
+    unfused["total"] = sum(unfused.values())
+
+    nz, ny, nx = grid_shape
+    ty = max(2, min(ty, ny))
+    plan = tiling.TilePlan(op=tiling.DYCORE_FUSED, grid_shape=grid_shape,
+                           tile=(nz, ty, nx), dtype=str(jax.numpy.dtype(dtype)))
+    n_in = tiling.DYCORE_FUSED.fields_in
+    n_out = tiling.DYCORE_FUSED.fields_out
+    fused = {
+        "stream": n_fields * plan.hbm_bytes_total,  # 4 in (+halo) + 2 out
+        "w_precompute": 2 * fb,                     # shared across fields
+    }
+    fused["total"] = sum(fused.values())
+    # As-implemented pessimistic bound: 3 whole-window fetches per input.
+    fused["stream_window_reads"] = (
+        n_fields * (3 * n_in + n_out) * fb + fused["w_precompute"])
+
+    return {"unfused": unfused, "fused": fused,
+            "reduction_x": unfused["total"] / max(fused["total"], 1),
+            "reduction_x_window_reads": (
+                unfused["total"] / max(fused["stream_window_reads"], 1)),
+            "halo_overhead": plan.halo_overhead}

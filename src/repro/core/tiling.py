@@ -78,6 +78,19 @@ LRU_SCAN = OpSpec(
     seq_axes=(0,), parallel_axes=(1,), flops_per_point=9.0,
     scratch_fields=1)
 
+# dycore_fused: the whole-field dycore step fused into one dataflow pipeline
+# (kernels/dycore_fused) — vadvc Thomas solve + point-wise update + compound
+# hdiff.  4 streamed inputs (f, w, utens, utens_stage), 2 outputs (f_new,
+# stage); z stays whole (the solve is sequential) and so does x (the kernel
+# realizes the periodic x-halo as a VMEM lane roll, so only y is tiled and
+# only the 2-deep y-halo is re-read from HBM); 6 tile-shaped fp32 VMEM
+# temporaries (fwork/wwork/rhs/ccol/dcol/stage).
+# flops/point = vadvc(38) + update(2) + hdiff(21).
+DYCORE_FUSED = OpSpec(
+    name="dycore_fused", fields_in=4, fields_out=2, halo=(0, 2, 0),
+    seq_axes=(0, 2), parallel_axes=(1,), flops_per_point=61.0,
+    scratch_fields=6)
+
 
 @dataclasses.dataclass(frozen=True)
 class TilePlan:

@@ -1,0 +1,15 @@
+"""Version compatibility shims shared by the Pallas kernel packages.
+
+jax renamed `pltpu.TPUCompilerParams` to `pltpu.CompilerParams` (~0.5.x);
+this container ships 0.4.x.  Kernels import `CompilerParams` from here so
+they build against either spelling.
+"""
+
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+CompilerParams = getattr(pltpu, "CompilerParams", None) or getattr(
+    pltpu, "TPUCompilerParams")
+
+__all__ = ["CompilerParams"]

@@ -1,0 +1,9 @@
+"""Fused compound dycore step: vadvc -> point-wise update -> hdiff in one
+Pallas dataflow pipeline (NERO's in-fabric fusion, arxiv 2107.08716 §3)."""
+
+from repro.kernels.dycore_fused.fused import fused_dycore_pallas
+from repro.kernels.dycore_fused.ops import fused_step, plan_tile, snap_ty
+from repro.kernels.dycore_fused.ref import fused_step_ref
+
+__all__ = ["fused_dycore_pallas", "fused_step", "fused_step_ref",
+           "plan_tile", "snap_ty"]

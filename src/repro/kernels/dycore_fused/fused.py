@@ -1,0 +1,216 @@
+"""Pallas TPU compound kernel: one fused dycore field step per grid cell.
+
+This is the NERO dataflow argument (arxiv 2107.08716 §3) applied to the whole
+dycore step instead of a single stencil: the CPU/GPU baseline writes every
+stage's result back to main memory (vadvc tendency, explicitly-updated field,
+padded halo copy), while the FPGA PE streams a window once and pipelines
+laplace -> flux-limit -> output plus the vertical Thomas solve entirely in
+near-memory (BRAM/URAM).  The TPU formulation of that PE:
+
+  * grid = (batch, ny/ty): each grid cell owns a full z-slab of one y-window
+    (vadvc is sequential in z, so z is never tiled — the paper's PE design);
+    batch rides the ensemble axis.
+  * The 2-deep periodic y-halo is realized with three aliased input refs
+    (prev / cur / next window) whose index maps wrap modulo the window count
+    — the overlapping-window idiom from kernels/hdiff/hdiff.py, made
+    periodic.  x stays whole inside the window; the periodic x-halo is a
+    lane roll in VMEM.
+  * Stages chain through VMEM scratch only: the forward Thomas sweep stores
+    (ccol, dcol) in fp32 scratch (the paper's "intermediate buffer to allow
+    for backward sweep calculation"), backward substitution writes the stage
+    tendency into scratch, the point-wise update and the compound hdiff read
+    it straight from VMEM, and only (f_new, stage) for the *cur* window ever
+    travel back to HBM.
+  * Compute is fp32 internally; bf16 I/O supported (the paper's
+    half-precision mode trades HBM traffic for accuracy).
+
+The staggered vertical velocity enters pre-combined: callers pass
+w = wcon_i + wcon_{i+1} (periodic next column), which is the only combination
+the solve ever uses — this keeps every block transfer a clean rectangular
+HBM->VMEM DMA, the same trick vadvc.py uses with its wl/wr pre-slices.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.compat import CompilerParams
+
+from repro.kernels.hdiff.ref import DEFAULT_COEFF
+from repro.kernels.vadvc.ref import BET_M, BET_P, DTR_STAGE
+
+HALO = 2   # y/x halo depth of the compound hdiff stage
+
+
+def _fused_kernel(f_prev, f_cur, f_next,
+                  w_prev, w_cur, w_next,
+                  t_prev, t_cur, t_next,
+                  s_prev, s_cur, s_next,
+                  outf_ref, outs_ref,
+                  fwork, wwork, rhs, ccol, dcol, stage,
+                  *, nz: int, ty: int, dt: float, coeff: float):
+    f32 = jnp.float32
+
+    def asm(prev, cur, nxt):
+        """Assemble the (nz, ty+4, nx) fp32 working window: cur plus a 2-row
+        halo taken from the periodic prev/next windows."""
+        return jnp.concatenate(
+            [prev[0][:, -HALO:], cur[0], nxt[0][:, :HALO]],
+            axis=1).astype(f32)
+
+    fwork[...] = asm(f_prev, f_cur, f_next)
+    wwork[...] = asm(w_prev, w_cur, w_next)
+    # u_pos == u_stage == f in the dycore step, so the static part of the
+    # tridiagonal RHS is precomputed once per window.
+    rhs[...] = (DTR_STAGE * fwork[...] + asm(t_prev, t_cur, t_next)
+                + asm(s_prev, s_cur, s_next))
+
+    def ld(ref, k):
+        return ref[pl.ds(k, 1)][0]
+
+    # ---- vadvc forward sweep, k = 0 ---------------------------------------
+    gcv = 0.25 * ld(wwork, 1)
+    cs = gcv * BET_M
+    ccol0 = gcv * BET_P
+    bcol = DTR_STAGE - ccol0
+    corr = -cs * (ld(fwork, 1) - ld(fwork, 0))
+    divided = 1.0 / bcol
+    ccol[pl.ds(0, 1)] = (ccol0 * divided)[None]
+    dcol[pl.ds(0, 1)] = ((ld(rhs, 0) + corr) * divided)[None]
+
+    # ---- forward sweep, 0 < k < nz-1 --------------------------------------
+    def fwd_body(k, _):
+        gav = -0.25 * ld(wwork, k)
+        gcv = 0.25 * ld(wwork, k + 1)
+        as_ = gav * BET_M
+        cs = gcv * BET_M
+        acol = gav * BET_P
+        ccol_k = gcv * BET_P
+        bcol = DTR_STAGE - acol - ccol_k
+        fk = ld(fwork, k)
+        corr = (-as_ * (ld(fwork, k - 1) - fk)
+                - cs * (ld(fwork, k + 1) - fk))
+        cprev = ccol[pl.ds(k - 1, 1)][0]
+        dprev = dcol[pl.ds(k - 1, 1)][0]
+        divided = 1.0 / (bcol - cprev * acol)
+        ccol[pl.ds(k, 1)] = (ccol_k * divided)[None]
+        dcol[pl.ds(k, 1)] = (((ld(rhs, k) + corr) - dprev * acol)
+                             * divided)[None]
+        return 0
+
+    jax.lax.fori_loop(1, nz - 1, fwd_body, 0)
+
+    # ---- forward sweep, k = nz-1 ------------------------------------------
+    k = nz - 1
+    gav = -0.25 * ld(wwork, k)
+    as_ = gav * BET_M
+    acol = gav * BET_P
+    bcol = DTR_STAGE - acol
+    corr = -as_ * (ld(fwork, k - 1) - ld(fwork, k))
+    cprev = ccol[pl.ds(k - 1, 1)][0]
+    dprev = dcol[pl.ds(k - 1, 1)][0]
+    divided = 1.0 / (bcol - cprev * acol)
+    dlast = ((ld(rhs, k) + corr) - dprev * acol) * divided
+    dcol[pl.ds(k, 1)] = dlast[None]
+
+    # ---- backward substitution -> stage tendency, never leaving VMEM -------
+    stage[pl.ds(nz - 1, 1)] = (DTR_STAGE * (dlast - ld(fwork, nz - 1)))[None]
+
+    def bwd_body(m, datac):
+        k = nz - 2 - m
+        datac = dcol[pl.ds(k, 1)][0] - ccol[pl.ds(k, 1)][0] * datac
+        stage[pl.ds(k, 1)] = (DTR_STAGE * (datac - ld(fwork, k)))[None]
+        return datac
+
+    jax.lax.fori_loop(0, nz - 1, bwd_body, dlast)
+
+    # ---- point-wise explicit update (still in VMEM) ------------------------
+    stg = stage[...]                       # (nz, ty+4, nx)
+    fup = fwork[...] + dt * stg
+
+    # ---- compound hdiff on the updated field -------------------------------
+    # y shifts index into the halo'd working window; x shifts are periodic
+    # lane rolls (the full x extent lives in the window).
+    def s(dj: int, di: int) -> jnp.ndarray:
+        win = fup[:, HALO + dj: HALO + dj + ty, :]
+        return jnp.roll(win, -di, axis=2) if di else win
+
+    def lap(dj: int, di: int) -> jnp.ndarray:
+        # true-Laplacian sign (see kernels/hdiff/ref.py)
+        return ((s(dj, di - 1) + s(dj, di + 1)
+                 + s(dj - 1, di) + s(dj + 1, di))
+                - 4.0 * s(dj, di))
+
+    lap_c, lap_xp, lap_xm = lap(0, 0), lap(0, 1), lap(0, -1)
+    lap_yp, lap_ym = lap(1, 0), lap(-1, 0)
+
+    flx = lap_xp - lap_c
+    flx_m = lap_c - lap_xm
+    fly = lap_yp - lap_c
+    fly_m = lap_c - lap_ym
+    # COSMO flux limiter.
+    flx = jnp.where(flx * (s(0, 1) - s(0, 0)) > 0.0, 0.0, flx)
+    flx_m = jnp.where(flx_m * (s(0, 0) - s(0, -1)) > 0.0, 0.0, flx_m)
+    fly = jnp.where(fly * (s(1, 0) - s(0, 0)) > 0.0, 0.0, fly)
+    fly_m = jnp.where(fly_m * (s(0, 0) - s(-1, 0)) > 0.0, 0.0, fly_m)
+
+    out = s(0, 0) - coeff * ((flx - flx_m) + (fly - fly_m))
+    outf_ref[0] = out.astype(outf_ref.dtype)
+    outs_ref[0] = stg[:, HALO:HALO + ty, :].astype(outs_ref.dtype)
+
+
+def fused_dycore_pallas(f: jnp.ndarray, w: jnp.ndarray, utens: jnp.ndarray,
+                        utens_stage: jnp.ndarray, *,
+                        coeff: float = DEFAULT_COEFF, dt: float = 0.1,
+                        ty: int = 8, interpret: bool = False):
+    """Fused dycore field step.  All inputs (..., nz, ny, nx), doubly
+    periodic in (y, x); `w` is the pre-combined staggered vertical velocity
+    wcon_i + wcon_{i+1} (see module docstring).  ny % ty == 0, ty >= 2,
+    nz >= 2.  Returns (f_new, stage) shaped/typed like `f`.
+    """
+    shape = f.shape
+    nz, ny, nx = shape[-3:]
+    if ny % ty or ty < 2:
+        raise ValueError(f"ny={ny} must be divisible by ty={ty} >= 2")
+    if nz < 2:
+        raise ValueError(f"nz={nz} must be >= 2 (staggered vertical sweep)")
+    nyb = ny // ty
+    batch = math.prod(shape[:-3]) if len(shape) > 3 else 1
+
+    spec = functools.partial(pl.BlockSpec, (1, nz, ty, nx))
+    # Periodic overlapping windows: prev/next wrap modulo the window count.
+    window = [
+        spec(lambda b, j: (b, 0, (j + nyb - 1) % nyb, 0)),   # prev
+        spec(lambda b, j: (b, 0, j, 0)),                     # cur
+        spec(lambda b, j: (b, 0, (j + 1) % nyb, 0)),         # next
+    ]
+    out_spec = spec(lambda b, j: (b, 0, j, 0))
+
+    kernel = functools.partial(_fused_kernel, nz=nz, ty=ty, dt=dt,
+                               coeff=coeff)
+    bshape = (batch, nz, ny, nx)
+    scratch = pltpu.VMEM((nz, ty + 2 * HALO, nx), jnp.float32)
+    fn = pl.pallas_call(
+        kernel,
+        grid=(batch, nyb),
+        in_specs=window * 4,
+        out_specs=[out_spec, out_spec],
+        out_shape=[jax.ShapeDtypeStruct(bshape, f.dtype)] * 2,
+        scratch_shapes=[scratch] * 6,   # fwork, wwork, rhs, ccol, dcol, stage
+        compiler_params=CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+        name="nero_dycore_fused",
+    )
+    args = []
+    for a in (f, w, utens, utens_stage):
+        a = a.reshape(bshape)
+        args += [a, a, a]
+    f_new, stage = fn(*args)
+    return f_new.reshape(shape), stage.reshape(shape)

@@ -1,0 +1,57 @@
+"""Jitted public entry points for the fused dycore step (planner-aware).
+
+`fused_step(...)` is what the weather dycore calls per prognostic field: it
+builds the pre-combined staggered vertical velocity, picks the auto-tuned
+y-window (NERO's OpenTuner stage via core/autotune.py), and dispatches to the
+Pallas compound kernel — or to the unfused oracle composition when
+`use_pallas=False` (the differentiable fallback path).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import autotune
+from repro.kernels.dycore_fused import ref as _ref
+from repro.kernels.dycore_fused.fused import fused_dycore_pallas
+
+DEFAULT_COEFF = _ref.DEFAULT_COEFF
+DEFAULT_DT = _ref.DEFAULT_DT
+
+
+def snap_ty(ty: int, ny: int) -> int:
+    """Largest legal y-window <= `ty`: a divisor of ny, >= 2 (falling back to
+    a single whole-y window when ny has no divisor in [2, ty])."""
+    ty = max(2, min(int(ty), ny))
+    while ny % ty and ty > 2:
+        ty -= 1
+    return ty if ny % ty == 0 else ny
+
+
+def plan_tile(grid_shape, dtype) -> int:
+    """Auto-tuned y-window for the fused kernel (paper Fig. 6 stage)."""
+    tuned = autotune.tune_named("dycore_fused", grid_shape, dtype)
+    return snap_ty(tuned.plan.tile[1], grid_shape[1])
+
+
+@functools.partial(jax.jit, static_argnames=("coeff", "dt", "use_pallas",
+                                             "ty", "interpret"))
+def fused_step(f: jnp.ndarray, wcon: jnp.ndarray, utens: jnp.ndarray,
+               utens_stage: jnp.ndarray, coeff: float = DEFAULT_COEFF,
+               dt: float = DEFAULT_DT, use_pallas: bool = True, ty: int = 0,
+               interpret: bool = True):
+    """One fused dycore field step on a doubly-periodic (..., nz, ny, nx)
+    domain.  `wcon` is the unstaggered vertical velocity; the kernel's
+    staggered neighbor is the periodic next x-column.  Returns
+    (f_new, stage)."""
+    if not use_pallas:
+        return _ref.fused_step_ref_batched(f, wcon, utens, utens_stage,
+                                           coeff=coeff, dt=dt)
+    ny = f.shape[-2]
+    ty = snap_ty(ty, ny) if ty else plan_tile(f.shape[-3:], f.dtype)
+    w = wcon + jnp.roll(wcon, -1, axis=-1)   # wcon_i + wcon_{i+1}, periodic
+    return fused_dycore_pallas(f, w, utens, utens_stage, coeff=coeff, dt=dt,
+                               ty=ty, interpret=interpret)

@@ -1,0 +1,104 @@
+"""Unfused oracle for the compound dycore field step (the fusion baseline).
+
+One field step is the composition the weather dycore applies per prognostic
+field (weather/dycore.py): implicit vertical advection (Thomas solve) ->
+point-wise explicit update -> periodic compound horizontal diffusion.  This
+module expresses that composition with the *validated* per-kernel oracles
+(vadvc ref, hdiff ref) and full HBM round-trips between stages — exactly the
+baseline NERO measures against (arxiv 2107.08716 §3: on the CPU/GPU baseline
+"intermediate results are stored in main memory" between kernels).
+
+The fused Pallas kernel (fused.py) must match this bit-for-bit up to fp32
+rounding; it is the equivalence oracle for every dycore_fused test.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.hdiff import ref as hdiff_ref
+from repro.kernels.vadvc import ref as vadvc_ref
+
+DEFAULT_COEFF = hdiff_ref.DEFAULT_COEFF
+DEFAULT_DT = 0.1
+HALO = 2   # hdiff halo depth; the fused kernel's in-kernel y/x halo
+
+
+def pad_periodic(f: jnp.ndarray, halo: int = HALO) -> jnp.ndarray:
+    """Wrap-pad the two horizontal axes (..., ny, nx) by `halo`."""
+    f = jnp.concatenate([f[..., -halo:, :], f, f[..., :halo, :]], axis=-2)
+    f = jnp.concatenate([f[..., :, -halo:], f, f[..., :, :halo]], axis=-1)
+    return f
+
+
+def fused_step_ref(f: jnp.ndarray, wcon: jnp.ndarray, utens: jnp.ndarray,
+                   utens_stage: jnp.ndarray, coeff: float = DEFAULT_COEFF,
+                   dt: float = DEFAULT_DT):
+    """One dycore field step, unfused.  All inputs (nz, ny, nx); the domain
+    is doubly periodic in (y, x); wcon is the *unstaggered* field (the
+    i+1-staggered neighbor is the periodic next column).
+
+    Returns (f_new, stage) — the diffused updated field and the vadvc-updated
+    stage tendency, both shaped/typed like `f`.
+    """
+    ny, nx = f.shape[-2:]
+    # 1) tridiagonal vertical solve (u_pos == u_stage == f in the dycore).
+    wcon_s = jnp.concatenate([wcon, wcon[..., :1]], axis=-1)
+    stage = vadvc_ref.vadvc(f, wcon_s, f, utens, utens_stage)
+    # 2) point-wise explicit update.
+    f2 = f + dt * stage
+    # 3) periodic compound horizontal diffusion (pad -> interior -> crop).
+    padded = pad_periodic(f2, HALO)
+    out = hdiff_ref.hdiff(padded, coeff=coeff)
+    f_new = out[..., HALO:HALO + ny, HALO:HALO + nx]
+    return f_new, stage
+
+
+def limiter_fragile_mask(f2: jnp.ndarray, noise: float = 1e-5) -> jnp.ndarray:
+    """Points whose COSMO flux-limiter branch decision sits within fp32
+    noise of flipping.
+
+    The limiter zeroes a flux when `flux * Δf > 0`.  That comparison is
+    discontinuous: when the product is within rounding noise of zero (e.g.
+    Δf == ±0.0 at a local plateau), two numerically equivalent evaluation
+    orders of the *same* scheme — fused vs unfused — may take different
+    branches and legitimately differ by O(coeff·|flux|) at that point.  The
+    equivalence tests use this mask to separate those measure-zero branch
+    flips from real defects: outside the mask the paths must agree to 1e-5;
+    inside it only a loose physical bound applies.
+
+    `f2` is the point-wise-updated field the hdiff stage consumes
+    (f + dt·stage), any shape (..., ny, nx), periodic in (y, x).
+    """
+    a = f2.astype(jnp.float32)
+
+    def sh(v, dj, di):   # value at (j+dj, i+di), periodic
+        return jnp.roll(jnp.roll(v, -dj, axis=-2), -di, axis=-1)
+
+    lap = (sh(a, 0, -1) + sh(a, 0, 1) + sh(a, -1, 0) + sh(a, 1, 0)) - 4.0 * a
+    pairs = [
+        (sh(lap, 0, 1) - lap, sh(a, 0, 1) - a),      # flx
+        (lap - sh(lap, 0, -1), a - sh(a, 0, -1)),    # flx_m
+        (sh(lap, 1, 0) - lap, sh(a, 1, 0) - a),      # fly
+        (lap - sh(lap, -1, 0), a - sh(a, -1, 0)),    # fly_m
+    ]
+    fragile = jnp.zeros(a.shape, bool)
+    for flux, df in pairs:
+        tol = noise * (jnp.abs(flux) + jnp.abs(df)) + 1e-12
+        fragile |= jnp.abs(flux * df) <= tol
+    return fragile
+
+
+def fused_step_ref_batched(f, wcon, utens, utens_stage,
+                           coeff: float = DEFAULT_COEFF,
+                           dt: float = DEFAULT_DT):
+    """`fused_step_ref` over arbitrary leading batch dims (..., nz, ny, nx)."""
+    shape = f.shape
+    if len(shape) == 3:
+        return fused_step_ref(f, wcon, utens, utens_stage, coeff, dt)
+    flat = lambda a: a.reshape((-1,) + a.shape[-3:])
+    step = lambda ff, ww, tt, ss: fused_step_ref(ff, ww, tt, ss, coeff, dt)
+    f_new, stage = jax.vmap(step)(flat(f), flat(wcon), flat(utens),
+                                  flat(utens_stage))
+    return f_new.reshape(shape), stage.reshape(shape)

@@ -26,6 +26,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.compat import CompilerParams
+
 from repro.kernels.hdiff.ref import DEFAULT_COEFF
 
 
@@ -97,7 +99,7 @@ def hdiff_pallas(src: jnp.ndarray, coeff: float = DEFAULT_COEFF,
         in_specs=in_specs,
         out_specs=out_spec,
         out_shape=jax.ShapeDtypeStruct(src.shape, src.dtype),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
         name="nero_hdiff",

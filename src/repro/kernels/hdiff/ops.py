@@ -13,14 +13,14 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.core import autotune, tiling
+from repro.core import autotune
 from repro.kernels.hdiff import ref as _ref
 from repro.kernels.hdiff.hdiff import hdiff_pallas
 
 
 def plan_tile(grid_shape, dtype) -> int:
     """Auto-tuned y-window for the Pallas kernel (paper Fig. 6 stage)."""
-    tuned = autotune.tune(tiling.HDIFF, grid_shape, dtype)
+    tuned = autotune.tune_named("hdiff", grid_shape, dtype)
     ty = tuned.plan.tile[1]
     ny = grid_shape[1]
     while ny % ty or ty < 2:      # snap to a legal divisor

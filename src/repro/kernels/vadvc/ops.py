@@ -7,14 +7,14 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.core import autotune, tiling
+from repro.core import autotune
 from repro.kernels.vadvc import ref as _ref
 from repro.kernels.vadvc.vadvc import vadvc_pallas
 
 
 def plan_tile(grid_shape, dtype):
     """Auto-tuned (tj, ti) horizontal window (paper's 64x2 fp32 analogue)."""
-    tuned = autotune.tune(tiling.VADVC, grid_shape, dtype)
+    tuned = autotune.tune_named("vadvc", grid_shape, dtype)
     _, tj, ti = tuned.plan.tile
     nz, ny, nx = grid_shape
 

@@ -24,6 +24,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.compat import CompilerParams
+
 from repro.kernels.vadvc.ref import BET_M, BET_P, DTR_STAGE
 
 
@@ -129,7 +131,7 @@ def vadvc_pallas(u_stage: jnp.ndarray, wcon: jnp.ndarray, u_pos: jnp.ndarray,
             pltpu.VMEM((nz, tj, ti), jnp.float32),   # ccol
             pltpu.VMEM((nz, tj, ti), jnp.float32),   # dcol
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel")),
         interpret=interpret,
         name="nero_vadvc",

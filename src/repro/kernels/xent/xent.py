@@ -23,6 +23,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.compat import CompilerParams
+
 NEG_INF = -1e30
 
 
@@ -100,7 +102,7 @@ def xent_pallas(hidden: jnp.ndarray, head: jnp.ndarray,
             pltpu.VMEM((bn, 1), jnp.float32),            # running sum
             pltpu.VMEM((bn, 1), jnp.float32),            # gold logit
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
         name="nero_fused_xent",

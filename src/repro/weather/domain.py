@@ -9,24 +9,36 @@ mesh axes) before the horizontal stencil, plus a 1-column exchange for the
 x-staggered `wcon` before the vertical solve.  Vertical columns are never
 split (vadvc's z dependency), matching the paper's PE design.
 
+With `fused=True` (default) the local compute is the single-pass Pallas
+pipeline from kernels/dycore_fused: all four inputs are halo-exchanged up
+front (2-deep in y and x — the stage tendency is recomputed on the halo
+rather than communicated, it is point-wise in the horizontal), the periodic
+kernel runs on the padded slab, and the interior is cropped.  Wrap-around
+garbage from the kernel's periodic windows only ever lands in the cropped
+2-ring, so the same kernel serves both the periodic single-chip domain and
+the halo-exchanged shard.  `fused=False` keeps the original per-kernel
+composition.
+
 Ensemble members ride the "pod" axis of the multi-pod mesh: weather centers
-run ~50-member ensembles, which is exactly a data-parallel outer axis.
+run ~50-member ensembles, which is exactly a data-parallel outer axis — see
+docs/architecture.md ("Scale-out: domain decomposition and ensemble pods")
+for a worked example.
 """
 
 from __future__ import annotations
 
-import functools
-from typing import Tuple
-
 import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
-from jax.experimental.shard_map import shard_map
 
+from repro.compat import shard_map as _shard_map
+
+from repro.kernels.dycore_fused import ops as fused_ops
+from repro.kernels.dycore_fused.fused import fused_dycore_pallas
 from repro.kernels.hdiff import ref as hdiff_ref
 from repro.kernels.vadvc import ref as vadvc_ref
 from repro.weather.fields import PROGNOSTIC, WeatherState
-from repro.weather.dycore import HALO
+from repro.weather.dycore import HALO, _auto_interpret
 
 
 def _exchange(f: jnp.ndarray, axis_name: str, n: int, halo: int,
@@ -52,6 +64,21 @@ def _exchange(f: jnp.ndarray, axis_name: str, n: int, halo: int,
     return jnp.concatenate([top, f, bot], axis=dim)
 
 
+def _right_column(wcon: jnp.ndarray, ax_x: str, nx_shards: int) -> jnp.ndarray:
+    """The x-staggered neighbor of the slab's last column: the x-neighbor
+    shard's first column (periodic 1-column exchange)."""
+    if nx_shards == 1:
+        return wcon[..., :1]
+    bwd = [(i, (i - 1) % nx_shards) for i in range(nx_shards)]
+    return jax.lax.ppermute(wcon[..., :1], ax_x, perm=bwd)
+
+
+def _staggered_w(wcon: jnp.ndarray, ax_x: str, nx_shards: int) -> jnp.ndarray:
+    """w = wcon_i + wcon_{i+1} on the local slab (see _right_column)."""
+    right = _right_column(wcon, ax_x, nx_shards)
+    return wcon + jnp.concatenate([wcon[..., 1:], right], axis=-1)
+
+
 def _local_hdiff(f: jnp.ndarray, coeff: float, ax_y: str, ax_x: str,
                  ny_shards: int, nx_shards: int) -> jnp.ndarray:
     """f: (E, nz, ly, lx) local slab -> diffused slab."""
@@ -66,13 +93,8 @@ def _local_hdiff(f: jnp.ndarray, coeff: float, ax_y: str, ax_x: str,
 
 def _local_vadvc(u_stage, wcon, u_pos, utens, utens_stage, ax_x, nx_shards):
     """All (E, nz, ly, lx); staggered wcon column fetched from x-neighbor."""
-    e, nz, ly, lx = u_stage.shape
-    if nx_shards == 1:
-        right = wcon[..., :1]
-    else:
-        bwd = [(i, (i - 1) % nx_shards) for i in range(nx_shards)]
-        right = jax.lax.ppermute(wcon[..., :1], ax_x, perm=bwd)
-    wcon_s = jnp.concatenate([wcon, right], axis=-1)
+    wcon_s = jnp.concatenate(
+        [wcon, _right_column(wcon, ax_x, nx_shards)], axis=-1)
     # vmap over ensemble; fields already (nz, ly, lx) per member.
     out = jax.vmap(vadvc_ref.vadvc)(u_stage, wcon_s, u_pos, utens,
                                     utens_stage)
@@ -81,18 +103,23 @@ def _local_vadvc(u_stage, wcon, u_pos, utens, utens_stage, ax_x, nx_shards):
 
 def make_distributed_step(mesh: Mesh, *, coeff: float = 0.025,
                           dt: float = 0.1, ax_e: str | None = "pod",
-                          ax_y: str = "data", ax_x: str = "model"):
+                          ax_y: str = "data", ax_x: str = "model",
+                          fused: bool = True,
+                          interpret: bool | None = None):
     """Build the jitted distributed dycore step for `mesh`.
 
     Sharding: ensemble over `ax_e` (if present in the mesh), y over `ax_y`,
-    x over `ax_x`; z always chip-local."""
+    x over `ax_x`; z always chip-local.  `fused` selects the single-pass
+    Pallas pipeline for the chip-local compute (module docstring)."""
     have_e = ax_e is not None and ax_e in mesh.axis_names
     e_spec = ax_e if have_e else None
     spec = P(e_spec, None, ax_y, ax_x)
     ny_shards = mesh.shape[ax_y]
     nx_shards = mesh.shape[ax_x]
+    if interpret is None:
+        interpret = _auto_interpret()
 
-    def local_step(fields, wcon, tens, stage_tens):
+    def local_step_unfused(fields, wcon, tens, stage_tens):
         new_fields, new_stage = {}, {}
         for name in PROGNOSTIC:
             f = fields[name]
@@ -104,11 +131,35 @@ def make_distributed_step(mesh: Mesh, *, coeff: float = 0.025,
             new_stage[name] = stage
         return new_fields, new_stage
 
-    sharded = shard_map(
-        local_step, mesh=mesh,
+    def local_step_fused(fields, wcon, tens, stage_tens):
+        e, nz, ly, lx = wcon.shape
+
+        def pad(a):
+            a = _exchange(a, ax_y, ny_shards, HALO, dim=2)
+            return _exchange(a, ax_x, nx_shards, HALO, dim=3)
+
+        # One exchange of the pre-combined staggered velocity serves all
+        # fields; the per-field inputs are exchanged so the halo ring's
+        # vadvc tendency is recomputed locally (cheaper than a second
+        # exchange of the updated field mid-pipeline).
+        wp = pad(_staggered_w(wcon, ax_x, nx_shards))
+        ty = fused_ops.plan_tile((nz, ly + 2 * HALO, lx + 2 * HALO),
+                                 wcon.dtype)
+        crop = lambda a: a[:, :, HALO:HALO + ly, HALO:HALO + lx]
+        new_fields, new_stage = {}, {}
+        for name in PROGNOSTIC:
+            f_new, stage = fused_dycore_pallas(
+                pad(fields[name]), wp, pad(tens[name]),
+                pad(stage_tens[name]), coeff=coeff, dt=dt, ty=ty,
+                interpret=interpret)
+            new_fields[name] = crop(f_new)
+            new_stage[name] = crop(stage)
+        return new_fields, new_stage
+
+    sharded = _shard_map(
+        local_step_fused if fused else local_step_unfused, mesh,
         in_specs=(spec, spec, spec, spec),
-        out_specs=(spec, spec),
-        check_rep=False)
+        out_specs=(spec, spec))
 
     @jax.jit
     def step(state: WeatherState) -> WeatherState:

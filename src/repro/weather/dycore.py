@@ -6,6 +6,17 @@ One `dycore_step` applies the three computational patterns the paper names
 *representative* dycore, faithful to the kernels and their composition, not a
 full COSMO port.
 
+Two execution paths (see docs/architecture.md for the dataflow diagram):
+
+  * `fused=True` (default): the whole field step runs as ONE Pallas compound
+    kernel (kernels/dycore_fused) — the vadvc tendency, the explicitly
+    updated field, and the hdiff working set never leave VMEM, which is
+    NERO's in-fabric fusion (arxiv 2107.08716 §3).
+  * `fused=False`: the original unfused composition — wrap-pad, per-kernel
+    jnp oracles, every intermediate materialized in HBM.  It is kept both as
+    the fallback for backends without Pallas support and as the equivalence
+    oracle the fused path is tested against.
+
 The domain is doubly periodic in (y, x) — the standard dycore test setup —
 so the distributed version (weather/domain.py) only needs circular halo
 exchanges.  Periodic variants of the kernels are expressed with jnp.roll on
@@ -15,23 +26,17 @@ top of the validated interior kernels.
 from __future__ import annotations
 
 import functools
-from typing import Tuple
 
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.dycore_fused import ops as fused_ops
+from repro.kernels.dycore_fused.ref import pad_periodic
 from repro.kernels.hdiff import ref as hdiff_ref
 from repro.kernels.vadvc import ref as vadvc_ref
 from repro.weather.fields import PROGNOSTIC, WeatherState
 
 HALO = 2   # hdiff needs 2; vadvc needs 1 (staggered wcon)
-
-
-def pad_periodic(f: jnp.ndarray, halo: int = HALO) -> jnp.ndarray:
-    """Wrap-pad the two horizontal axes (..., ny, nx) by `halo`."""
-    f = jnp.concatenate([f[..., -halo:, :], f, f[..., :halo, :]], axis=-2)
-    f = jnp.concatenate([f[..., :, -halo:], f, f[..., :, :halo]], axis=-1)
-    return f
 
 
 def hdiff_periodic(src: jnp.ndarray, coeff: float) -> jnp.ndarray:
@@ -58,32 +63,54 @@ def vadvc_field(u_stage, wcon, u_pos, utens, utens_stage):
     return out.reshape(shape)
 
 
-@functools.partial(jax.jit, static_argnames=("coeff", "dt"))
+def _auto_interpret() -> bool:
+    """Pallas runs natively on TPU, in interpreter mode everywhere else."""
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("coeff", "dt", "fused",
+                                             "interpret"))
 def dycore_step(state: WeatherState, coeff: float = 0.025,
-                dt: float = 0.1) -> WeatherState:
+                dt: float = 0.1, fused: bool = True,
+                interpret: bool | None = None) -> WeatherState:
     """One large-timestep: vertical-implicit advection per field, explicit
-    point-wise update, horizontal diffusion smoothing."""
+    point-wise update, horizontal diffusion smoothing.
+
+    `fused=True` routes each field through the single-pass Pallas pipeline;
+    `fused=False` is the unfused oracle composition (identical math, every
+    intermediate round-tripping HBM)."""
     new_fields, new_stage = {}, {}
-    for name in PROGNOSTIC:
-        f = state.fields[name]
-        # 1) tridiagonal vertical solve -> updated stage tendency
-        stage = vadvc_field(u_stage=f, wcon=state.wcon, u_pos=f,
-                            utens=state.tens[name],
-                            utens_stage=state.stage_tens[name])
-        # 2) point-wise explicit update
-        f = f + dt * stage
-        # 3) compound horizontal diffusion
-        f = hdiff_periodic(f, coeff)
-        new_fields[name] = f
-        new_stage[name] = stage
+    if fused:
+        if interpret is None:
+            interpret = _auto_interpret()
+        for name in PROGNOSTIC:
+            f_new, stage = fused_ops.fused_step(
+                state.fields[name], state.wcon, state.tens[name],
+                state.stage_tens[name], coeff=coeff, dt=dt,
+                interpret=interpret)
+            new_fields[name] = f_new
+            new_stage[name] = stage
+    else:
+        for name in PROGNOSTIC:
+            f = state.fields[name]
+            # 1) tridiagonal vertical solve -> updated stage tendency
+            stage = vadvc_field(u_stage=f, wcon=state.wcon, u_pos=f,
+                                utens=state.tens[name],
+                                utens_stage=state.stage_tens[name])
+            # 2) point-wise explicit update
+            f = f + dt * stage
+            # 3) compound horizontal diffusion
+            f = hdiff_periodic(f, coeff)
+            new_fields[name] = f
+            new_stage[name] = stage
     return WeatherState(fields=new_fields, wcon=state.wcon,
                         tens=state.tens, stage_tens=new_stage)
 
 
 def run(state: WeatherState, steps: int, coeff: float = 0.025,
-        dt: float = 0.1) -> WeatherState:
+        dt: float = 0.1, fused: bool = True) -> WeatherState:
     def body(s, _):
-        return dycore_step(s, coeff=coeff, dt=dt), ()
+        return dycore_step(s, coeff=coeff, dt=dt, fused=fused), ()
 
     final, _ = jax.lax.scan(body, state, (), length=steps)
     return final

@@ -16,6 +16,13 @@ import pytest
 from repro.core import hlo_cost
 
 
+def _cost(compiled) -> dict:
+    """compiled.cost_analysis() returns a dict in jax >= 0.5, a one-element
+    list of dicts in 0.4.x."""
+    c = compiled.cost_analysis()
+    return c[0] if isinstance(c, (list, tuple)) else c
+
+
 def _body(c, _):
     (x,) = c
     return (jnp.tanh(x @ x),), None
@@ -42,7 +49,7 @@ def compiled_pair():
 
 def test_multiplier_one_matches_xla(compiled_pair):
     cs, _ = compiled_pair
-    xla = cs.cost_analysis()
+    xla = _cost(cs)
     mine = hlo_cost.analyze_text(cs.as_text(), loop_multipliers=False)
     assert mine.flops == pytest.approx(xla["flops"], rel=0.02)
     assert mine.bytes_accessed == pytest.approx(xla["bytes accessed"],
@@ -53,7 +60,7 @@ def test_multiplier_one_matches_xla(compiled_pair):
 
 def test_loop_aware_matches_unrolled(compiled_pair):
     cs, cu = compiled_pair
-    xla_unrolled = cu.cost_analysis()
+    xla_unrolled = _cost(cu)
     mine = hlo_cost.analyze_text(cs.as_text())
     assert mine.while_trip_counts == [12]
     assert mine.flops == pytest.approx(xla_unrolled["flops"], rel=0.02)
@@ -97,8 +104,8 @@ def f(x):
     y, _ = jax.lax.scan(body, x, None, length=9)
     return y
 
-smap = jax.shard_map(f, mesh=mesh, in_specs=P("d"), out_specs=P(None),
-                     check_vma=False)
+from repro.compat import shard_map
+smap = shard_map(f, mesh, in_specs=P("d"), out_specs=P(None))
 spec = jax.ShapeDtypeStruct((8, 128), jnp.float32)
 c = jax.jit(smap).lower(spec).compile()
 mine = hlo_cost.analyze_text(c.as_text())
@@ -133,7 +140,7 @@ def test_dot_general_batched_flops():
     sb = jax.ShapeDtypeStruct((4, 32, 8), jnp.float32)
     c = jax.jit(f).lower(sa, sb).compile()
     mine = hlo_cost.analyze_text(c.as_text())
-    xla = c.cost_analysis()
+    xla = _cost(c)
     assert mine.flops == pytest.approx(xla["flops"], rel=0.02)
     assert mine.flops == pytest.approx(2 * 4 * 16 * 32 * 8, rel=0.02)
 

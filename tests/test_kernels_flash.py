@@ -4,6 +4,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+pytest.importorskip(   # degrade, don't error, without the dev extra
+    "hypothesis", reason="needs hypothesis: pip install -r requirements-dev.txt")
 from hypothesis import given, settings, strategies as st
 
 from repro.kernels.flash_attention import flash_mha_pallas, ref

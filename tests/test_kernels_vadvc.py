@@ -3,6 +3,8 @@
 import numpy as np
 import jax.numpy as jnp
 import pytest
+pytest.importorskip(   # degrade, don't error, without the dev extra
+    "hypothesis", reason="needs hypothesis: pip install -r requirements-dev.txt")
 from hypothesis import given, settings, strategies as st
 
 from repro.kernels.vadvc import ref
