@@ -1,9 +1,19 @@
-"""Shared benchmark utilities: wall-clock timing + CSV emission."""
+"""Shared benchmark utilities: wall-clock timing + CSV/JSON emission.
+
+Every `emit` call prints the CSV row AND records it in an in-process
+registry, so benchmark modules can dump machine-readable `BENCH_*.json`
+artifacts (`write_json`) for cross-PR perf tracking — see
+docs/benchmarks.md ("Machine-readable output").  `BENCH_DIR` (env) picks
+the output directory, default CWD.  `BENCH_SMOKE=1` asks modules to shrink
+to CI-smoke sizes.
+"""
 
 from __future__ import annotations
 
+import json
+import os
 import time
-from typing import Callable
+from typing import Callable, Dict, List
 
 import jax
 
@@ -23,5 +33,37 @@ def time_fn(fn: Callable, *args, iters: int = 5, warmup: int = 2) -> float:
     return ts[len(ts) // 2] * 1e6
 
 
+_RECORDS: List[Dict] = []
+
+
 def emit(name: str, us_per_call: float, derived: str = ""):
     print(f"{name},{us_per_call:.1f},{derived}")
+    _RECORDS.append({"name": name, "us_per_call": us_per_call,
+                     "derived": derived})
+
+
+def records() -> List[Dict]:
+    """All rows emitted so far in this process (CSV mirror)."""
+    return list(_RECORDS)
+
+
+def smoke_mode() -> bool:
+    """CI smoke runs (BENCH_SMOKE=1) shrink grids/iters to stay fast."""
+    return os.environ.get("BENCH_SMOKE", "") not in ("", "0")
+
+
+def bench_path(filename: str) -> str:
+    """Where a BENCH_*.json artifact lands (BENCH_DIR env, default CWD)."""
+    return os.path.join(os.environ.get("BENCH_DIR", "."), filename)
+
+
+def write_json(filename: str, payload: Dict) -> str:
+    """Dump `payload` (+ backend/smoke metadata) to BENCH_DIR/filename."""
+    path = bench_path(filename)
+    payload = dict(payload)
+    payload.setdefault("backend", jax.default_backend())
+    payload.setdefault("smoke", smoke_mode())
+    with open(path, "w") as fh:
+        json.dump(payload, fh, indent=2, sort_keys=True)
+    print(f"# wrote {path}")
+    return path

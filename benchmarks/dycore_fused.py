@@ -5,60 +5,99 @@ intermediate through main memory; the in-fabric pipeline streams each field
 once.  This benchmark reports that claim three ways for one full dycore step
 (4 prognostic fields):
 
-  * measured wall-clock of `dycore_step(fused=True)` vs `fused=False`
-    (CPU note: without a TPU the fused kernel runs in the Pallas
-    *interpreter*, so its wall-clock here validates the pipeline, it does
-    not demonstrate the speedup — the modeled rows do);
+  * measured wall-clock of `dycore_step` on its three paths — unfused
+    oracle, per-field fused (4 Pallas launches), whole-state fused (ONE
+    launch, shared staggered-velocity slab).  (CPU note: without a TPU the
+    fused kernels run in the Pallas *interpreter*, so their wall-clock here
+    validates the pipelines, it does not demonstrate the speedup — the
+    modeled rows do);
   * modeled HBM traffic per step from core/memmodel.dycore_step_traffic
     (array-level reads/writes each pipeline materializes), with the fused
     y-window halo re-read overhead from the auto-tuned TilePlan;
-  * modeled TPU time/energy for the fused plan from core/perfmodel.
+  * modeled TPU time/energy for the fused plan from core/perfmodel, and the
+    k-step communication-avoiding exchange model
+    (core/memmodel.kstep_exchange_model).
 
 Emitted metric names (docs/benchmarks.md):
-  dycore_fused/walltime_{fused,unfused}   us per step (measured)
-  dycore_fused/traffic_{fused,unfused}    modeled MB per step + reduction
-  dycore_fused/model_{fused}              modeled TPU time + bottleneck
+  dycore_fused/walltime_{unfused,fused,whole_state}  us per step (measured)
+  dycore_fused/traffic_{unfused,fused,whole_state}_* modeled MB per step
+  dycore_fused/model_{fused}                         modeled TPU time
+  dycore_fused/kstep_k<k>                            k-step exchange model
+
+Also writes BENCH_dycore.json (walltime, modeled HBM bytes, steps/s) for
+cross-PR perf tracking.
 """
 
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
-from benchmarks.common import emit, time_fn
+from benchmarks.common import emit, smoke_mode, time_fn, write_json
 from repro.core import hierarchy as hw
 from repro.core import memmodel, perfmodel, tiling
 from repro.kernels.dycore_fused import ops as fused_ops
 from repro.weather import dycore, fields
 
-GRID = (8, 32, 64)          # small enough for the CPU interpreter
+# Measured grid: deliberately small.  The Pallas interpreter's grid loop
+# carries the full output state per iteration (O(grid_steps x state) copy
+# overhead that real hardware does not have), which at large grids swamps —
+# and inverts — the launch-amortization effect the whole-state step
+# targets.  At this size the per-`pallas_call` dispatch cost is the visible
+# term, which is exactly the 4-launches-vs-1 comparison; HBM-traffic
+# effects are covered by the modeled rows at the paper's domain.
+GRID = (4, 16, 16)
 ENSEMBLE = 1
 MODEL_GRID = (64, 256, 256)  # the paper's domain, for the modeled rows
+SMOKE_GRID = (4, 16, 16)     # CI smoke job (tiny, interpret mode)
 
 
 def run():
-    st = fields.initial_state(jax.random.PRNGKey(0), GRID,
+    smoke = smoke_mode()
+    grid = SMOKE_GRID if smoke else GRID
+    iters, warmup = (1, 1) if smoke else (7, 2)
+    st = fields.initial_state(jax.random.PRNGKey(0), grid,
                               ensemble=ENSEMBLE)
     n_fields = len(fields.PROGNOSTIC)
-
-    t_unfused = time_fn(
-        lambda s: dycore.dycore_step(s, fused=False), st, iters=3, warmup=1)
-    emit("dycore_fused/walltime_unfused", t_unfused,
-         f"grid={GRID} ensemble={ENSEMBLE}")
-    t_fused = time_fn(
-        lambda s: dycore.dycore_step(s, fused=True), st, iters=3, warmup=1)
     backend = jax.default_backend()
+    interp_note = ("" if backend == "tpu"
+                   else " (Pallas interpreter — validates, not representative)")
+
+    walltime = {}
+    t_unfused = time_fn(lambda s: dycore.dycore_step(s, fused=False), st,
+                        iters=iters, warmup=warmup)
+    walltime["unfused"] = t_unfused
+    emit("dycore_fused/walltime_unfused", t_unfused,
+         f"grid={grid} ensemble={ENSEMBLE}")
+    t_fused = time_fn(
+        lambda s: dycore.dycore_step(s, fused=True, whole_state=False), st,
+        iters=iters, warmup=warmup)
+    walltime["fused_per_field"] = t_fused
     emit("dycore_fused/walltime_fused", t_fused,
-         f"grid={GRID} ensemble={ENSEMBLE} backend={backend}"
-         + (" (Pallas interpreter — validates, not representative)"
-            if backend != "tpu" else ""))
+         f"grid={grid} ensemble={ENSEMBLE} backend={backend}"
+         f" 4 launches{interp_note}")
+    t_whole = time_fn(
+        lambda s: dycore.dycore_step(s, fused=True, whole_state=True), st,
+        iters=iters, warmup=warmup)
+    walltime["fused_whole_state"] = t_whole
+    emit("dycore_fused/walltime_whole_state", t_whole,
+         f"grid={grid} ensemble={ENSEMBLE} backend={backend}"
+         f" 1 launch, shared w{interp_note} "
+         f"vs_per_field={t_fused / max(t_whole, 1e-9):.2f}x")
 
     # Modeled HBM traffic at the paper's domain, auto-tuned fused window.
+    model_grid = grid if smoke else MODEL_GRID
+    traffic = {}
     for dtype in ("float32", "bfloat16"):
-        ty = fused_ops.plan_tile(MODEL_GRID, jnp.dtype(dtype))
-        t = memmodel.dycore_step_traffic(MODEL_GRID, dtype,
+        ty = fused_ops.plan_tile(model_grid, jnp.dtype(dtype))
+        t = memmodel.dycore_step_traffic(model_grid, dtype,
                                          n_fields=n_fields, ty=ty)
+        traffic[dtype] = {
+            "unfused": t["unfused"]["total"],
+            "fused_per_field": t["fused"]["total"],
+            "fused_whole_state": t["fused_whole"]["total"],
+            "reduction_x_whole": t["reduction_x_whole"],
+        }
         mb = 1.0 / 2**20
         emit(f"dycore_fused/traffic_unfused_{dtype}", 0.0,
              f"MB={t['unfused']['total'] * mb:.0f} "
@@ -72,16 +111,49 @@ def run():
              f"(aliased-window pessimistic bound: "
              f"MB={t['fused']['stream_window_reads'] * mb:.0f}, "
              f"{t['reduction_x_window_reads']:.2f}x)")
+        emit(f"dycore_fused/traffic_whole_state_{dtype}", 0.0,
+             f"MB={t['fused_whole']['total'] * mb:.0f} ty={ty} "
+             f"reduction={t['reduction_x_whole']:.2f}x "
+             f"vs_per_field="
+             f"{t['fused']['total'] / max(t['fused_whole']['total'], 1):.3f}x "
+             f"(pessimistic bound: "
+             f"MB={t['fused_whole']['stream_window_reads'] * mb:.0f}, "
+             f"{t['reduction_x_whole_window_reads']:.2f}x)")
 
         # Modeled TPU time for the fused plan (per field pipeline pass).
-        plan = tiling.TilePlan(op=tiling.DYCORE_FUSED, grid_shape=MODEL_GRID,
-                               tile=(MODEL_GRID[0], ty, MODEL_GRID[2]),
+        plan = tiling.TilePlan(op=tiling.DYCORE_FUSED, grid_shape=model_grid,
+                               tile=(model_grid[0], ty, model_grid[2]),
                                dtype=dtype)
         est = perfmodel.estimate(plan)
         emit(f"dycore_fused/model_fused_{dtype}",
              est.time_s * n_fields * 1e6,
              f"bottleneck={est.bottleneck} gflops={est.gflops:.0f} "
              f"vmem={100.0 * plan.vmem_bytes / hw.tpu_v5e().vmem.capacity_bytes:.0f}%")
+
+    # Communication-avoiding k-step exchange model (weather/domain.py).
+    kstep = {}
+    for k in (1, 2, 4):
+        try:
+            m = memmodel.kstep_exchange_model(model_grid, "float32",
+                                              n_fields=n_fields, k=k)
+        except ValueError:
+            continue
+        kstep[str(k)] = m
+        emit(f"dycore_fused/kstep_k{k}", 0.0,
+             f"rounds={m['rounds_kstep']}v{m['rounds_sequential']} "
+             f"bytes_ratio={m['bytes_ratio']:.2f} "
+             f"redundant_flops={m['redundant_flops_frac'] * 100:.0f}%")
+
+    write_json("BENCH_dycore.json", {
+        "grid": list(grid),
+        "model_grid": list(model_grid),
+        "ensemble": ENSEMBLE,
+        "n_fields": n_fields,
+        "walltime_us": walltime,
+        "steps_per_s": {k: 1e6 / max(v, 1e-9) for k, v in walltime.items()},
+        "modeled_hbm_bytes": traffic,
+        "kstep_exchange": kstep,
+    })
 
 
 if __name__ == "__main__":

@@ -32,7 +32,8 @@ class TunedResult:
 OP_SPECS = {
     spec.name: spec
     for spec in (_tiling.HDIFF, _tiling.VADVC, _tiling.COPY,
-                 _tiling.LRU_SCAN, _tiling.DYCORE_FUSED)
+                 _tiling.LRU_SCAN, _tiling.DYCORE_FUSED,
+                 _tiling.DYCORE_WHOLE_STATE)
 }
 
 

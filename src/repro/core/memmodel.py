@@ -159,8 +159,76 @@ def dycore_step_traffic(grid_shape, dtype, *, n_fields: int = 4,
     fused["stream_window_reads"] = (
         n_fields * (3 * n_in + n_out) * fb + fused["w_precompute"])
 
-    return {"unfused": unfused, "fused": fused,
+    # Whole-state variant (one pallas_call for all fields, shared w): per
+    # field only the 3 private streams (f, utens, utens_stage) plus the w
+    # slab amortized 1/n_fields — the OpSpec's fractional fields_in — so
+    # `n_fields * plan.hbm_bytes_total` already counts w exactly once.
+    wplan = tiling.TilePlan(op=tiling.dycore_whole_state_spec(n_fields),
+                            grid_shape=grid_shape, tile=(nz, ty, nx),
+                            dtype=str(jax.numpy.dtype(dtype)))
+    whole = {
+        "stream": n_fields * wplan.hbm_bytes_total,
+        "w_precompute": 2 * fb,
+    }
+    whole["total"] = sum(whole.values())
+    # Pessimistic aliased-window bound: 3 whole-window fetches per private
+    # input per field, but w's 3 windows are fetched once per (e, j) — the
+    # shared BlockSpec index map repeats across the field axis.
+    whole["stream_window_reads"] = (
+        (n_fields * (3 * 3 + n_out) + 3) * fb + whole["w_precompute"])
+
+    return {"unfused": unfused, "fused": fused, "fused_whole": whole,
             "reduction_x": unfused["total"] / max(fused["total"], 1),
             "reduction_x_window_reads": (
                 unfused["total"] / max(fused["stream_window_reads"], 1)),
+            "reduction_x_whole": unfused["total"] / max(whole["total"], 1),
+            "reduction_x_whole_window_reads": (
+                unfused["total"] / max(whole["stream_window_reads"], 1)),
             "halo_overhead": plan.halo_overhead}
+
+
+def kstep_exchange_model(grid_shape, dtype, *, n_fields: int = 4,
+                         k: int = 1, shards=(2, 2),
+                         halo: int = 2) -> Dict[str, float]:
+    """Communication-avoiding k-step accounting (weather/domain.py
+    `k_steps`): one stacked `(3*n_fields + 1)`-operand halo exchange of
+    depth `k*halo` (y) / `k*halo + 1` (x) buys k fused whole-state steps
+    with no collectives, at the price of redundant halo-ring compute.
+
+    Per shard, per k timesteps:
+
+      bytes_kstep      — bytes ppermuted by the single deep stacked exchange
+      bytes_sequential — bytes ppermuted by k rounds of the depth-(halo,
+                         halo+1) stacked exchange (the k_steps=1 path)
+      rounds_kstep / rounds_sequential — collective rounds (2 vs 2k)
+      redundant_flops_frac — extra stencil work on the halo rings relative
+                             to the interior (grows with k; the knob's cost)
+
+    `shards` is (py, px); the local slab is (ny/py, nx/px)."""
+    nz, ny, nx = (int(g) for g in grid_shape)
+    py, px = shards
+    ly, lx = ny // py, nx // px
+    b = hw.dtype_bytes(dtype)
+    ops = 3 * n_fields + 1                    # fields + tens + stage + wcon
+
+    def exchanged(depth_y: int, depth_x: int) -> int:
+        hi_lo = 2                             # both directions
+        y = ops * nz * depth_y * lx * b * hi_lo
+        x = ops * nz * depth_x * (ly + 2 * depth_y) * b * hi_lo
+        return int(y + x)
+
+    hy, hx = k * halo, k * halo + 1
+    if hy > ly or hx > lx:
+        raise ValueError(
+            f"k={k} needs a ({hy}, {hx})-deep halo; local slab ({ly}, {lx})")
+    bytes_kstep = exchanged(hy, hx)
+    bytes_seq = k * exchanged(halo, halo + 1)
+    padded = (ly + 2 * hy) * (lx + 2 * hx)
+    return {
+        "bytes_kstep": bytes_kstep,
+        "bytes_sequential": bytes_seq,
+        "bytes_ratio": bytes_kstep / max(bytes_seq, 1),
+        "rounds_kstep": 2,
+        "rounds_sequential": 2 * k,
+        "redundant_flops_frac": padded / (ly * lx) - 1.0,
+    }

@@ -24,7 +24,9 @@ class OpSpec:
     """Abstract description of a memory-bound operator for planning purposes.
 
     `fields_in` / `fields_out`: number of same-shaped 3-D input/output fields
-    the op streams (vadvc: 7 in / 1 out; hdiff: 1 in / 1 out).
+    the op streams (vadvc: 7 in / 1 out; hdiff: 1 in / 1 out).  May be
+    fractional when a stream is shared/amortized across an outer batch axis
+    (dycore_whole_state: the `w` slab is read once per field group).
     `halo`: per-axis one-sided halo the stencil needs (hdiff: (0,2,2)).
     `seq_axes`: axes that must stay whole inside a tile because the op is
     sequential along them (vadvc: z; lru_scan: t).
@@ -33,7 +35,7 @@ class OpSpec:
     """
 
     name: str
-    fields_in: int
+    fields_in: float
     fields_out: int
     halo: Tuple[int, int, int]
     seq_axes: Tuple[int, ...]
@@ -90,6 +92,32 @@ DYCORE_FUSED = OpSpec(
     name="dycore_fused", fields_in=4, fields_out=2, halo=(0, 2, 0),
     seq_axes=(0, 2), parallel_axes=(1,), flops_per_point=61.0,
     scratch_fields=6)
+
+
+def dycore_whole_state_spec(n_fields: int = 4) -> OpSpec:
+    """Tile space of the whole-state fused dycore step (one `pallas_call`
+    for all `n_fields` prognostic fields, shared staggered velocity `w`).
+
+    Per-field HBM traffic: 3 private input streams (f, utens, utens_stage)
+    plus the shared `w` slab amortized over the field axis — `fields_in =
+    3 + 1/n_fields` (the planner's byte accounting tolerates a fractional
+    stream).  VMEM is a different story: `w` amortizes in *traffic* but
+    stays fully resident next to the per-field windows while the innermost
+    field iterations reuse it, so it is counted as a 7th tile-shaped
+    scratch buffer (6 pipeline temporaries + the resident shared-`w`
+    window).  That is why the whole-state space is registered separately —
+    its VMEM pressure, and hence the legal-tile set, depends on the field
+    count.
+    """
+    if n_fields < 1:
+        raise ValueError(f"n_fields={n_fields} must be >= 1")
+    return OpSpec(
+        name="dycore_whole_state", fields_in=3 + 1.0 / n_fields,
+        fields_out=2, halo=(0, 2, 0), seq_axes=(0, 2), parallel_axes=(1,),
+        flops_per_point=61.0, scratch_fields=7)
+
+
+DYCORE_WHOLE_STATE = dycore_whole_state_spec()
 
 
 @dataclasses.dataclass(frozen=True)

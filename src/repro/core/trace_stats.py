@@ -1,0 +1,56 @@
+"""Count primitives in traced jaxprs — launch/collective accounting.
+
+The whole-state dycore's contract is structural, not just numerical: ONE
+`pallas_call` per step, ONE `ppermute` pair per mesh direction per k-step
+round.  Those invariants are asserted by counting primitive equations in
+the traced jaxpr (recursing through pjit/scan/shard_map/cond sub-jaxprs),
+which works on any backend — including CPU, where Pallas interpret-mode
+never lowers to a custom call that HLO-level counting could find.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict
+
+
+def _sub_jaxprs(eqn) -> list:
+    subs = []
+    for v in eqn.params.values():
+        vs = v if isinstance(v, (tuple, list)) else (v,)
+        for x in vs:
+            if hasattr(x, "jaxpr"):        # ClosedJaxpr
+                subs.append(x.jaxpr)
+            elif hasattr(x, "eqns"):       # raw Jaxpr
+                subs.append(x)
+    return subs
+
+
+def count_primitive(jaxpr, name: str) -> int:
+    """Occurrences of primitive `name` in `jaxpr`, recursing into every
+    sub-jaxpr (pjit, scan, while, cond branches, shard_map, ...).  A scan
+    body counts ONCE regardless of trip count — this counts distinct
+    launches/collectives in the program text, i.e. per-iteration cost."""
+    jaxpr = getattr(jaxpr, "jaxpr", jaxpr)   # accept ClosedJaxpr
+    n = 0
+    for eqn in jaxpr.eqns:
+        if eqn.primitive.name == name:
+            n += 1
+        for sub in _sub_jaxprs(eqn):
+            n += count_primitive(sub, name)
+    return n
+
+
+def primitive_counts(jaxpr) -> Dict[str, int]:
+    """Histogram of every primitive in `jaxpr` (recursive, scan bodies
+    counted once)."""
+    jaxpr = getattr(jaxpr, "jaxpr", jaxpr)
+    out: Dict[str, int] = {}
+
+    def walk(j: Any) -> None:
+        for eqn in j.eqns:
+            out[eqn.primitive.name] = out.get(eqn.primitive.name, 0) + 1
+            for sub in _sub_jaxprs(eqn):
+                walk(sub)
+
+    walk(jaxpr)
+    return out

@@ -214,3 +214,81 @@ def fused_dycore_pallas(f: jnp.ndarray, w: jnp.ndarray, utens: jnp.ndarray,
         args += [a, a, a]
     f_new, stage = fn(*args)
     return f_new.reshape(shape), stage.reshape(shape)
+
+
+def fused_dycore_whole_state_pallas(fs: jnp.ndarray, w: jnp.ndarray,
+                                    utens: jnp.ndarray,
+                                    utens_stage: jnp.ndarray, *,
+                                    coeff: float = DEFAULT_COEFF,
+                                    dt: float = 0.1, ty: int = 8,
+                                    interpret: bool = False):
+    """Whole-state fused dycore step: ONE `pallas_call` for every prognostic
+    field, sharing the staggered-velocity slab across fields.
+
+    `fs`, `utens`, `utens_stage` are field-stacked `(..., nf, nz, ny, nx)`;
+    `w` is the pre-combined staggered vertical velocity `(..., nz, ny, nx)`,
+    identical for every field.  The grid is `(batch, ny/ty, nf)` with the
+    field axis innermost and the per-field operands flattened to
+    `batch*nf` so their index maps read `b*nf + k` — while `w` keeps its
+    un-stacked layout and an index map that *ignores* `k`.  Consecutive
+    field iterations therefore revisit the same `w` block index, and Pallas
+    elides the re-fetch: each (ensemble, y-window) slab of `w` is DMA'd
+    from HBM once per step instead of once per field (~1/(3+1/nf) of input
+    traffic saved, 25% at nf→∞) on top of the nf× launch amortization.
+
+    Returns `(f_new, stage)` shaped/typed like `fs`.
+    """
+    shape = fs.shape
+    if len(shape) < 4:
+        raise ValueError(f"fs must be (..., nf, nz, ny, nx), got {shape}")
+    nf, nz, ny, nx = shape[-4:]
+    if ny % ty or ty < 2:
+        raise ValueError(f"ny={ny} must be divisible by ty={ty} >= 2")
+    if nz < 2:
+        raise ValueError(f"nz={nz} must be >= 2 (staggered vertical sweep)")
+    if w.shape[-3:] != (nz, ny, nx):
+        raise ValueError(f"w shape {w.shape} != fields grid {(nz, ny, nx)}")
+    nyb = ny // ty
+    batch = math.prod(shape[:-4]) if len(shape) > 4 else 1
+
+    spec = functools.partial(pl.BlockSpec, (1, nz, ty, nx))
+
+    def fmap(dj: int):
+        # Per-field operand: flattened (batch*nf) leading axis, periodic
+        # y-window offset dj.
+        return lambda b, j, k: (b * nf + k, 0, (j + dj) % nyb, 0)
+
+    def wmap(dj: int):
+        # Shared operand: the field grid index k is collapsed — the block
+        # index repeats across the nf innermost iterations, so the slab is
+        # fetched once per (b, j).
+        return lambda b, j, k: (b, 0, (j + dj) % nyb, 0)
+
+    fwin = [spec(fmap(nyb - 1)), spec(fmap(0)), spec(fmap(1))]
+    wwin = [spec(wmap(nyb - 1)), spec(wmap(0)), spec(wmap(1))]
+    out_spec = spec(lambda b, j, k: (b * nf + k, 0, j, 0))
+
+    kernel = functools.partial(_fused_kernel, nz=nz, ty=ty, dt=dt,
+                               coeff=coeff)
+    fshape = (batch * nf, nz, ny, nx)
+    wshape = (batch, nz, ny, nx)
+    scratch = pltpu.VMEM((nz, ty + 2 * HALO, nx), jnp.float32)
+    fn = pl.pallas_call(
+        kernel,
+        grid=(batch, nyb, nf),
+        in_specs=fwin + wwin + fwin + fwin,
+        out_specs=[out_spec, out_spec],
+        out_shape=[jax.ShapeDtypeStruct(fshape, fs.dtype)] * 2,
+        scratch_shapes=[scratch] * 6,   # fwork, wwork, rhs, ccol, dcol, stage
+        compiler_params=CompilerParams(
+            dimension_semantics=("parallel", "arbitrary", "arbitrary")),
+        interpret=interpret,
+        name="nero_dycore_whole_state",
+    )
+    args = []
+    for a, s in ((fs, fshape), (w, wshape), (utens, fshape),
+                 (utens_stage, fshape)):
+        a = a.reshape(s)
+        args += [a, a, a]
+    f_new, stage = fn(*args)
+    return f_new.reshape(shape), stage.reshape(shape)

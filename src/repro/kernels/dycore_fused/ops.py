@@ -1,10 +1,20 @@
 """Jitted public entry points for the fused dycore step (planner-aware).
 
-`fused_step(...)` is what the weather dycore calls per prognostic field: it
-builds the pre-combined staggered vertical velocity, picks the auto-tuned
-y-window (NERO's OpenTuner stage via core/autotune.py), and dispatches to the
-Pallas compound kernel — or to the unfused oracle composition when
-`use_pallas=False` (the differentiable fallback path).
+Two granularities:
+
+* `fused_step(...)` — one prognostic field per call: builds the pre-combined
+  staggered vertical velocity, picks the auto-tuned y-window (NERO's
+  OpenTuner stage via core/autotune.py), and dispatches to the Pallas
+  compound kernel — or to the unfused oracle composition when
+  `use_pallas=False` (the differentiable fallback path).
+* `fused_step_whole_state(...)` — ALL prognostic fields in ONE `pallas_call`:
+  fields are stacked on a leading `nf` axis, the shared staggered-velocity
+  slab is DMA'd once per (ensemble, y-window) instead of once per field, and
+  the launch cost is amortized nf×.  This is the default hot path of
+  `weather/dycore.py::dycore_step`.
+
+Both default `interpret=None`, resolved via `_auto_interpret()`: native
+Pallas on TPU, interpreter everywhere else.
 """
 
 from __future__ import annotations
@@ -14,12 +24,18 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.core import autotune
+from repro.core import autotune, tiling
 from repro.kernels.dycore_fused import ref as _ref
-from repro.kernels.dycore_fused.fused import fused_dycore_pallas
+from repro.kernels.dycore_fused.fused import (fused_dycore_pallas,
+                                              fused_dycore_whole_state_pallas)
 
 DEFAULT_COEFF = _ref.DEFAULT_COEFF
 DEFAULT_DT = _ref.DEFAULT_DT
+
+
+def _auto_interpret() -> bool:
+    """Pallas runs natively on TPU, in interpreter mode everywhere else."""
+    return jax.default_backend() != "tpu"
 
 
 def snap_ty(ty: int, ny: int) -> int:
@@ -37,12 +53,28 @@ def plan_tile(grid_shape, dtype) -> int:
     return snap_ty(tuned.plan.tile[1], grid_shape[1])
 
 
+def plan_tile_whole_state(grid_shape, dtype, n_fields: int) -> int:
+    """Auto-tuned y-window for the whole-state kernel.
+
+    The whole-state tile space differs from the per-field one: the shared
+    `w` slab amortizes to 1/n_fields of input *traffic* but stays fully
+    resident in VMEM alongside the per-field windows, so the legal tile set
+    (and the Pareto pick) shifts with the field count.  The default
+    (4-field) space lives in the autotune registry as
+    "dycore_whole_state"; here the spec for the *actual* `n_fields` is
+    built and tuned directly, leaving the registry untouched.
+    """
+    spec = tiling.dycore_whole_state_spec(n_fields)
+    tuned = autotune.tune(spec, grid_shape, dtype)
+    return snap_ty(tuned.plan.tile[1], grid_shape[1])
+
+
 @functools.partial(jax.jit, static_argnames=("coeff", "dt", "use_pallas",
                                              "ty", "interpret"))
 def fused_step(f: jnp.ndarray, wcon: jnp.ndarray, utens: jnp.ndarray,
                utens_stage: jnp.ndarray, coeff: float = DEFAULT_COEFF,
                dt: float = DEFAULT_DT, use_pallas: bool = True, ty: int = 0,
-               interpret: bool = True):
+               interpret: bool | None = None):
     """One fused dycore field step on a doubly-periodic (..., nz, ny, nx)
     domain.  `wcon` is the unstaggered vertical velocity; the kernel's
     staggered neighbor is the periodic next x-column.  Returns
@@ -50,8 +82,37 @@ def fused_step(f: jnp.ndarray, wcon: jnp.ndarray, utens: jnp.ndarray,
     if not use_pallas:
         return _ref.fused_step_ref_batched(f, wcon, utens, utens_stage,
                                            coeff=coeff, dt=dt)
+    if interpret is None:
+        interpret = _auto_interpret()
     ny = f.shape[-2]
     ty = snap_ty(ty, ny) if ty else plan_tile(f.shape[-3:], f.dtype)
     w = wcon + jnp.roll(wcon, -1, axis=-1)   # wcon_i + wcon_{i+1}, periodic
     return fused_dycore_pallas(f, w, utens, utens_stage, coeff=coeff, dt=dt,
                                ty=ty, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("coeff", "dt", "use_pallas",
+                                             "ty", "interpret"))
+def fused_step_whole_state(fs: jnp.ndarray, wcon: jnp.ndarray,
+                           utens: jnp.ndarray, utens_stage: jnp.ndarray,
+                           coeff: float = DEFAULT_COEFF,
+                           dt: float = DEFAULT_DT, use_pallas: bool = True,
+                           ty: int = 0, interpret: bool | None = None):
+    """Whole-state fused dycore step: `fs`/`utens`/`utens_stage` are
+    field-stacked (..., nf, nz, ny, nx); `wcon` is the shared unstaggered
+    vertical velocity (..., nz, ny, nx).  One `pallas_call` covers every
+    field; see `fused_dycore_whole_state_pallas`.  Returns (f_new, stage)
+    shaped like `fs`."""
+    if not use_pallas:
+        wb = jnp.broadcast_to(jnp.expand_dims(wcon, -4), fs.shape)
+        return _ref.fused_step_ref_batched(fs, wb, utens, utens_stage,
+                                           coeff=coeff, dt=dt)
+    if interpret is None:
+        interpret = _auto_interpret()
+    nf, _, ny, _ = fs.shape[-4:]
+    ty = (snap_ty(ty, ny) if ty
+          else plan_tile_whole_state(fs.shape[-3:], fs.dtype, nf))
+    w = wcon + jnp.roll(wcon, -1, axis=-1)   # wcon_i + wcon_{i+1}, periodic
+    return fused_dycore_whole_state_pallas(fs, w, utens, utens_stage,
+                                           coeff=coeff, dt=dt, ty=ty,
+                                           interpret=interpret)

@@ -4,20 +4,36 @@ This is NERO's scale-out story made real (paper §5: "HBM provides an
 attractive solution for scale-out computation" with one memory channel per
 PE): every chip owns an (ny/Py, nx/Px) slab of the horizontal domain in its
 own HBM; the compound stencils run chip-locally out of VMEM; the only
-communication is a 2-deep circular halo exchange (`jax.lax.ppermute` over the
-mesh axes) before the horizontal stencil, plus a 1-column exchange for the
-x-staggered `wcon` before the vertical solve.  Vertical columns are never
-split (vadvc's z dependency), matching the paper's PE design.
+communication is a circular halo exchange (`jax.lax.ppermute` over the mesh
+axes).  Vertical columns are never split (vadvc's z dependency), matching
+the paper's PE design.
 
-With `fused=True` (default) the local compute is the single-pass Pallas
-pipeline from kernels/dycore_fused: all four inputs are halo-exchanged up
-front (2-deep in y and x — the stage tendency is recomputed on the halo
-rather than communicated, it is point-wise in the horizontal), the periodic
-kernel runs on the padded slab, and the interior is cropped.  Wrap-around
-garbage from the kernel's periodic windows only ever lands in the cropped
-2-ring, so the same kernel serves both the periodic single-chip domain and
-the halo-exchanged shard.  `fused=False` keeps the original per-kernel
-composition.
+With `fused=True, whole_state=True` (default) the communication is **one
+stacked halo exchange**: every exchanged operand — all prognostic fields,
+their slow tendencies, the stage tendencies, and the raw `wcon` — is
+concatenated into a single (E, 3·nf+1, nz, ly, lx) tensor, so each
+direction costs exactly one `ppermute` pair per round instead of one pair
+per field per input.  The staggered velocity is then built *locally* from
+the padded `wcon` (its wrapped last column is garbage, absorbed by one
+extra column of x-halo), the single-launch whole-state Pallas kernel runs
+on the padded slab, and the interior is cropped.  Wrap-around garbage from
+the kernel's periodic windows only ever lands in the cropped ring, so the
+same kernel serves both the periodic single-chip domain and the
+halo-exchanged shard.
+
+`k_steps > 1` is the **communication-avoiding multi-step** mode: the
+stacked exchange is made `k·HALO` deep (`k·HALO + 1` in x, for the
+staggered velocity), `k` whole-state fused steps run back-to-back on the
+padded slab with NO collectives in between, and the interior is cropped
+once at the end — trading redundant halo-ring flops for k× fewer collective
+rounds.  Each local step pollutes at most HALO cells inward from the pad
+edge, so after k steps the garbage front has consumed exactly the pad and
+the interior is untouched (bit-identical arithmetic to k sequential
+exchanged steps).
+
+`whole_state=False` keeps the per-field fused pipeline with per-operand
+exchanges (the communication-granularity oracle); `fused=False` keeps the
+original per-kernel composition.
 
 Ensemble members ride the "pod" axis of the multi-pod mesh: weather centers
 run ~50-member ensembles, which is exactly a data-parallel outer axis — see
@@ -34,7 +50,8 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from repro.compat import shard_map as _shard_map
 
 from repro.kernels.dycore_fused import ops as fused_ops
-from repro.kernels.dycore_fused.fused import fused_dycore_pallas
+from repro.kernels.dycore_fused.fused import (fused_dycore_pallas,
+                                              fused_dycore_whole_state_pallas)
 from repro.kernels.hdiff import ref as hdiff_ref
 from repro.kernels.vadvc import ref as vadvc_ref
 from repro.weather.fields import PROGNOSTIC, WeatherState
@@ -46,7 +63,9 @@ def _exchange(f: jnp.ndarray, axis_name: str, n: int, halo: int,
     """Circular halo exchange along `dim` over mesh axis `axis_name`.
 
     Returns f extended by `halo` on both sides of `dim`.  With n == 1 this
-    degenerates to periodic wrap-padding (no communication)."""
+    degenerates to periodic wrap-padding (no communication).  `halo` must
+    not exceed the local extent (a deeper exchange would need neighbors-of-
+    neighbors data — callers check and raise)."""
     def take(a, sl):
         idx = [slice(None)] * a.ndim
         idx[dim] = sl
@@ -104,20 +123,29 @@ def _local_vadvc(u_stage, wcon, u_pos, utens, utens_stage, ax_x, nx_shards):
 def make_distributed_step(mesh: Mesh, *, coeff: float = 0.025,
                           dt: float = 0.1, ax_e: str | None = "pod",
                           ax_y: str = "data", ax_x: str = "model",
-                          fused: bool = True,
+                          fused: bool = True, whole_state: bool = True,
+                          k_steps: int = 1,
                           interpret: bool | None = None):
     """Build the jitted distributed dycore step for `mesh`.
 
     Sharding: ensemble over `ax_e` (if present in the mesh), y over `ax_y`,
-    x over `ax_x`; z always chip-local.  `fused` selects the single-pass
-    Pallas pipeline for the chip-local compute (module docstring)."""
+    x over `ax_x`; z always chip-local.  `fused`/`whole_state` select the
+    chip-local compute path (module docstring); `k_steps` advances the state
+    by k timesteps per call with ONE stacked halo exchange (the
+    communication-avoiding mode; requires the default fused whole-state
+    path).  The returned `step` always advances `k_steps` timesteps."""
     have_e = ax_e is not None and ax_e in mesh.axis_names
     e_spec = ax_e if have_e else None
     spec = P(e_spec, None, ax_y, ax_x)
     ny_shards = mesh.shape[ax_y]
     nx_shards = mesh.shape[ax_x]
+    if k_steps < 1:
+        raise ValueError(f"k_steps={k_steps} must be >= 1")
+    if k_steps > 1 and not (fused and whole_state):
+        raise ValueError("k_steps > 1 requires the fused whole-state path")
     if interpret is None:
         interpret = _auto_interpret()
+    nf = len(PROGNOSTIC)
 
     def local_step_unfused(fields, wcon, tens, stage_tens):
         new_fields, new_stage = {}, {}
@@ -156,8 +184,57 @@ def make_distributed_step(mesh: Mesh, *, coeff: float = 0.025,
             new_stage[name] = crop(stage)
         return new_fields, new_stage
 
+    def local_step_whole_state(fields, wcon, tens, stage_tens):
+        e, nz, ly, lx = wcon.shape
+        hy = k_steps * HALO
+        # +1 in x: the staggered velocity is built locally from the padded
+        # raw wcon (w[c] = wcon[c] + wcon[c+1]), which loses the outermost
+        # right column to garbage; one spare column keeps the k-step
+        # validity front clear of the interior.
+        hx = k_steps * HALO + 1
+        if hy > ly or hx > lx:
+            raise ValueError(
+                f"k_steps={k_steps} needs a ({hy}, {hx})-deep halo but the "
+                f"local slab is only ({ly}, {lx}); use fewer shards, a "
+                f"bigger grid, or a smaller k_steps")
+        # ONE stacked exchange per direction covers every operand: fields,
+        # slow tendencies, stage tendencies, raw wcon.
+        stacked = jnp.stack(
+            [fields[n] for n in PROGNOSTIC]
+            + [tens[n] for n in PROGNOSTIC]
+            + [stage_tens[n] for n in PROGNOSTIC] + [wcon], axis=1)
+        g = _exchange(stacked, ax_y, ny_shards, hy, dim=3)
+        g = _exchange(g, ax_x, nx_shards, hx, dim=4)
+        fs, ts, ss = g[:, :nf], g[:, nf:2 * nf], g[:, 2 * nf:3 * nf]
+        # Staggered velocity on the padded slab; the wrapped last column is
+        # garbage (absorbed by the +1 x-halo).
+        wconp = g[:, -1]
+        w = wconp + jnp.roll(wconp, -1, axis=-1)
+
+        ty = fused_ops.plan_tile_whole_state(
+            (nz, ly + 2 * hy, lx + 2 * hx), wcon.dtype, nf)
+
+        def body(carry, _):
+            fsk, ssk = carry
+            f_new, s_new = fused_dycore_whole_state_pallas(
+                fsk, w, ts, ssk, coeff=coeff, dt=dt, ty=ty,
+                interpret=interpret)
+            return (f_new, s_new), ()
+
+        (fs, ss), _ = jax.lax.scan(body, (fs, ss), (), length=k_steps)
+        crop = lambda a: a[..., hy:hy + ly, hx:hx + lx]
+        new_fields = {n: crop(fs[:, i]) for i, n in enumerate(PROGNOSTIC)}
+        new_stage = {n: crop(ss[:, i]) for i, n in enumerate(PROGNOSTIC)}
+        return new_fields, new_stage
+
+    if fused and whole_state:
+        local_step = local_step_whole_state
+    elif fused:
+        local_step = local_step_fused
+    else:
+        local_step = local_step_unfused
     sharded = _shard_map(
-        local_step_fused if fused else local_step_unfused, mesh,
+        local_step, mesh,
         in_specs=(spec, spec, spec, spec),
         out_specs=(spec, spec))
 

@@ -6,16 +6,20 @@ One `dycore_step` applies the three computational patterns the paper names
 *representative* dycore, faithful to the kernels and their composition, not a
 full COSMO port.
 
-Two execution paths (see docs/architecture.md for the dataflow diagram):
+Three execution paths (see docs/architecture.md for the dataflow diagram):
 
-  * `fused=True` (default): the whole field step runs as ONE Pallas compound
-    kernel (kernels/dycore_fused) — the vadvc tendency, the explicitly
-    updated field, and the hdiff working set never leave VMEM, which is
-    NERO's in-fabric fusion (arxiv 2107.08716 §3).
+  * `fused=True, whole_state=True` (default): ALL prognostic fields run as
+    ONE Pallas compound kernel per step (kernels/dycore_fused whole-state
+    variant) — the per-stage intermediates never leave VMEM *and* the
+    shared staggered-velocity slab is streamed from HBM once per step
+    instead of once per field.  One kernel launch per timestep.
+  * `fused=True, whole_state=False`: the per-field fused pipeline — one
+    `pallas_call` per prognostic field.  Kept as the launch-granularity
+    oracle the whole-state path is tested/benchmarked against.
   * `fused=False`: the original unfused composition — wrap-pad, per-kernel
     jnp oracles, every intermediate materialized in HBM.  It is kept both as
     the fallback for backends without Pallas support and as the equivalence
-    oracle the fused path is tested against.
+    oracle the fused paths are tested against.
 
 The domain is doubly periodic in (y, x) — the standard dycore test setup —
 so the distributed version (weather/domain.py) only needs circular halo
@@ -31,6 +35,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.dycore_fused import ops as fused_ops
+from repro.kernels.dycore_fused.ops import _auto_interpret
 from repro.kernels.dycore_fused.ref import pad_periodic
 from repro.kernels.hdiff import ref as hdiff_ref
 from repro.kernels.vadvc import ref as vadvc_ref
@@ -63,24 +68,40 @@ def vadvc_field(u_stage, wcon, u_pos, utens, utens_stage):
     return out.reshape(shape)
 
 
-def _auto_interpret() -> bool:
-    """Pallas runs natively on TPU, in interpreter mode everywhere else."""
-    return jax.default_backend() != "tpu"
+def stack_state(d: dict) -> jnp.ndarray:
+    """Stack the per-field dict onto a new axis -4: (..., nf, nz, ny, nx)."""
+    return jnp.stack([d[name] for name in PROGNOSTIC], axis=-4)
+
+
+def unstack_state(a: jnp.ndarray) -> dict:
+    """Inverse of `stack_state`."""
+    return {name: jnp.take(a, i, axis=-4)
+            for i, name in enumerate(PROGNOSTIC)}
 
 
 @functools.partial(jax.jit, static_argnames=("coeff", "dt", "fused",
-                                             "interpret"))
+                                             "whole_state", "interpret"))
 def dycore_step(state: WeatherState, coeff: float = 0.025,
                 dt: float = 0.1, fused: bool = True,
+                whole_state: bool = True,
                 interpret: bool | None = None) -> WeatherState:
     """One large-timestep: vertical-implicit advection per field, explicit
     point-wise update, horizontal diffusion smoothing.
 
-    `fused=True` routes each field through the single-pass Pallas pipeline;
+    `fused=True, whole_state=True` (default) runs every prognostic field in
+    a single Pallas launch with the staggered-velocity slab shared across
+    fields; `whole_state=False` keeps the per-field fused pipeline;
     `fused=False` is the unfused oracle composition (identical math, every
     intermediate round-tripping HBM)."""
     new_fields, new_stage = {}, {}
-    if fused:
+    if fused and whole_state:
+        f_new, stage = fused_ops.fused_step_whole_state(
+            stack_state(state.fields), state.wcon, stack_state(state.tens),
+            stack_state(state.stage_tens), coeff=coeff, dt=dt,
+            interpret=interpret)
+        new_fields = unstack_state(f_new)
+        new_stage = unstack_state(stage)
+    elif fused:
         if interpret is None:
             interpret = _auto_interpret()
         for name in PROGNOSTIC:
@@ -108,9 +129,11 @@ def dycore_step(state: WeatherState, coeff: float = 0.025,
 
 
 def run(state: WeatherState, steps: int, coeff: float = 0.025,
-        dt: float = 0.1, fused: bool = True) -> WeatherState:
+        dt: float = 0.1, fused: bool = True,
+        whole_state: bool = True) -> WeatherState:
     def body(s, _):
-        return dycore_step(s, coeff=coeff, dt=dt, fused=fused), ()
+        return dycore_step(s, coeff=coeff, dt=dt, fused=fused,
+                           whole_state=whole_state), ()
 
     final, _ = jax.lax.scan(body, state, (), length=steps)
     return final

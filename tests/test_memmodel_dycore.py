@@ -1,0 +1,48 @@
+"""Whole-state dycore traffic + k-step exchange accounting (memmodel)."""
+
+import pytest
+
+from repro.core import memmodel, tiling
+
+def test_dycore_traffic_whole_state_beats_per_field():
+    """Whole-state fused step: shared-w batching must strictly reduce
+    modeled HBM traffic vs the per-field fused step, in both bounds."""
+    for dtype in ("float32", "bfloat16"):
+        t = memmodel.dycore_step_traffic((64, 256, 256), dtype,
+                                         n_fields=4, ty=32)
+        assert t["fused_whole"]["total"] < t["fused"]["total"]
+        assert (t["fused_whole"]["stream_window_reads"]
+                < t["fused"]["stream_window_reads"])
+        assert t["reduction_x_whole"] > t["reduction_x"] > 1.0
+        # shared w saves ~the per-field w stream: bounded by 1/4 of inputs
+        saving = t["fused"]["total"] / t["fused_whole"]["total"]
+        assert 1.05 < saving < 1.25, saving
+
+
+def test_kstep_exchange_model():
+    """Communication-avoiding k-step: collective rounds drop k-fold; bytes
+    stay within ~1x of sequential (deep halo ~= k shallow halos); the
+    redundant-flops tax grows monotonically with k."""
+    prev_tax = -1.0
+    for k in (1, 2, 4):
+        m = memmodel.kstep_exchange_model((64, 256, 256), "float32",
+                                          n_fields=4, k=k, shards=(2, 2))
+        assert m["rounds_kstep"] == 2
+        assert m["rounds_sequential"] == 2 * k
+        assert 0.5 < m["bytes_ratio"] <= 1.0 + 1e-9
+        assert m["redundant_flops_frac"] > prev_tax
+        prev_tax = m["redundant_flops_frac"]
+    with pytest.raises(ValueError):
+        memmodel.kstep_exchange_model((8, 16, 16), "float32", k=4,
+                                      shards=(2, 2))
+
+
+def test_whole_state_opspec_field_count_dependence():
+    """More fields amortize the shared-w stream further (fields_in -> 3) but
+    never change the resident VMEM accounting (scratch includes w)."""
+    s2 = tiling.dycore_whole_state_spec(2)
+    s8 = tiling.dycore_whole_state_spec(8)
+    assert s8.fields_in < s2.fields_in
+    assert s2.scratch_fields == s8.scratch_fields == 7
+    with pytest.raises(ValueError):
+        tiling.dycore_whole_state_spec(0)

@@ -70,15 +70,18 @@ st = fields.initial_state(key, (6, 8, 8), ensemble=2)
 kw = ({"axis_types": (jax.sharding.AxisType.Auto,) * 2}
       if hasattr(jax.sharding, "AxisType") else {})
 mesh = jax.make_mesh((2, 2), ("data", "model"), **kw)
-for fused in (True, False):
+outs = {}
+for fused, whole in ((True, True), (True, False), (False, False)):
     # like-for-like: distributed vs single-device on the SAME path.  Even
     # so the graphs differ (pad/crop vs wrap, shard shapes), so a handful
     # of flux-limiter branch flips are legitimate (see
     # kernels/dycore_fused/ref.py::limiter_fragile_mask); tolerate <=2
     # flipped points per field under a loose physical bound.
-    ref = dycore.dycore_step(st, fused=fused)
-    step, spec = domain.make_distributed_step(mesh, fused=fused)
+    ref = dycore.dycore_step(st, fused=fused, whole_state=whole)
+    step, spec = domain.make_distributed_step(mesh, fused=fused,
+                                              whole_state=whole)
     out = step(domain.shard_state(st, mesh, spec))
+    outs[(fused, whole)] = out
     for name in fields.PROGNOSTIC:
         err = np.abs(np.asarray(ref.fields[name])
                      - np.asarray(out.fields[name]))
@@ -87,20 +90,104 @@ for fused in (True, False):
         errs = np.abs(np.asarray(ref.stage_tens[name])
                       - np.asarray(out.stage_tens[name])).max()
         assert errs < 1e-5, (fused, name, errs)   # stage: no limiter upstream
+# stacked exchange vs per-field exchange, head-to-head on the same shards
+for name in fields.PROGNOSTIC:
+    a = np.asarray(outs[(True, True)].fields[name])
+    b = np.asarray(outs[(True, False)].fields[name])
+    bad = int((np.abs(a - b) > 1e-5).sum())
+    assert bad <= 2 and np.abs(a - b).max() < 0.05, (name, bad)
+    sa = np.asarray(outs[(True, True)].stage_tens[name])
+    sb = np.asarray(outs[(True, False)].stage_tens[name])
+    assert np.abs(sa - sb).max() < 1e-5, name
 print("DIST_OK")
 """
 
 
-def test_distributed_matches_single_device():
-    """Halo-exchange domain decomposition == single-device periodic step
-    (runs in a subprocess with 4 forced host devices)."""
+_KSTEP_SNIPPET = r"""
+import jax, numpy as np
+from repro.core import trace_stats
+from repro.weather import fields, dycore, domain
+K = 2
+st = fields.initial_state(jax.random.PRNGKey(1), (4, 8, 16), ensemble=2)
+kw = ({"axis_types": (jax.sharding.AxisType.Auto,) * 2}
+      if hasattr(jax.sharding, "AxisType") else {})
+mesh = jax.make_mesh((2, 2), ("data", "model"), **kw)
+stepK, spec = domain.make_distributed_step(mesh, k_steps=K)
+step1, _ = domain.make_distributed_step(mesh, k_steps=1)
+
+# collective structure: ONE ppermute pair per mesh direction per K steps,
+# ONE pallas_call per local step; per-field path pays per-operand exchanges
+j = jax.make_jaxpr(stepK)(st)
+assert trace_stats.count_primitive(j, "ppermute") == 4, "deep-halo exchange"
+assert trace_stats.count_primitive(j, "pallas_call") == 1
+j1 = jax.make_jaxpr(step1)(st)
+assert trace_stats.count_primitive(j1, "ppermute") == 4
+jpf = jax.make_jaxpr(jax.jit(domain.make_distributed_step(
+    mesh, whole_state=False)[0]))(st)
+n_pf = trace_stats.count_primitive(jpf, "ppermute")
+assert n_pf >= 4 * len(fields.PROGNOSTIC), n_pf   # per-field/per-input cost
+
+# K-step deep halo == K sequential exchanged steps (tolerance: fp32 round)
+sst = domain.shard_state(st, mesh, spec)
+outK = stepK(sst)
+seq = sst
+for _ in range(K):
+    seq = step1(seq)
+for name in fields.PROGNOSTIC:
+    err = np.abs(np.asarray(outK.fields[name])
+                 - np.asarray(seq.fields[name]))
+    bad = int((err > 1e-5).sum())
+    assert bad <= 2 and err.max() < 0.05, (name, bad, err.max())
+    errs = np.abs(np.asarray(outK.stage_tens[name])
+                  - np.asarray(seq.stage_tens[name])).max()
+    assert errs < 1e-5, (name, errs)
+
+# the deep halo cannot exceed the local slab: loud error, not corruption
+try:
+    domain.make_distributed_step(mesh, k_steps=3)[0](sst)
+except ValueError as e:
+    assert "halo" in str(e), e
+else:
+    raise AssertionError("k_steps=3 on a 4-row slab should refuse")
+print("KSTEP_OK")
+"""
+
+
+def _run_forced_device_snippet(snippet: str, marker: str):
+    """Run `snippet` in a subprocess with 4 forced host CPU devices."""
     env = {"XLA_FLAGS": "--xla_force_host_platform_device_count=4",
            "PYTHONPATH": "src", "PATH": "/usr/bin:/bin"}
     import os
     env.update({k: v for k, v in os.environ.items()
                 if k not in env and k != "XLA_FLAGS"})
-    r = subprocess.run([sys.executable, "-c", _DIST_SNIPPET], env=env,
+    r = subprocess.run([sys.executable, "-c", snippet], env=env,
                        capture_output=True, text=True, timeout=600,
                        cwd=os.path.dirname(os.path.dirname(
                            os.path.abspath(__file__))))
-    assert "DIST_OK" in r.stdout, r.stderr[-2000:]
+    assert marker in r.stdout, r.stderr[-2000:]
+
+
+def test_distributed_matches_single_device():
+    """Halo-exchange domain decomposition == single-device periodic step on
+    all three local-compute paths, and stacked-exchange == per-field
+    exchange head-to-head (subprocess with 4 forced host devices)."""
+    _run_forced_device_snippet(_DIST_SNIPPET, "DIST_OK")
+
+
+def test_kstep_communication_avoiding():
+    """K-step deep-halo mode: one ppermute pair per direction per K steps,
+    one pallas_call per local step, equivalent to K sequential exchanged
+    steps, and a loud error when the halo outgrows the local slab."""
+    _run_forced_device_snippet(_KSTEP_SNIPPET, "KSTEP_OK")
+
+
+def test_run_whole_state_matches_per_field():
+    """dycore.run threads whole_state; multi-step trajectories agree."""
+    st = fields.initial_state(jax.random.PRNGKey(5), (4, 8, 8))
+    out_w = dycore.run(st, steps=3, whole_state=True)
+    out_p = dycore.run(st, steps=3, whole_state=False)
+    for name in fields.PROGNOSTIC:
+        err = np.abs(np.asarray(out_w.fields[name])
+                     - np.asarray(out_p.fields[name]))
+        bad = int((err > 1e-5).sum())
+        assert bad <= 2 and err.max() < 0.05, (name, bad, err.max())
