@@ -30,12 +30,17 @@ cross-PR perf tracking.
 
 from __future__ import annotations
 
+import json
+import os
+import subprocess
+import sys
+
 import jax
 import jax.numpy as jnp
 
 from benchmarks.common import emit, smoke_mode, time_fn, write_json
 from repro.core import hierarchy as hw
-from repro.core import memmodel, perfmodel, tiling
+from repro.core import memmodel, perfmodel, tiling, trace_stats
 from repro.kernels.dycore_fused import ops as fused_ops
 from repro.weather import dycore, fields
 
@@ -50,6 +55,38 @@ GRID = (4, 16, 16)
 ENSEMBLE = 1
 MODEL_GRID = (64, 256, 256)  # the paper's domain, for the modeled rows
 SMOKE_GRID = (4, 16, 16)     # CI smoke job (tiny, interpret mode)
+KSTEP_K = 2                  # depth of the measured/traced k-step round
+
+
+# Structural counts of the distributed k-step round need >1 shard per mesh
+# axis, so they are traced in a subprocess with forced host devices (same
+# trick as tests/test_weather.py) and read back as JSON.
+_STRUCT_SNIPPET = r"""
+import json, jax
+from repro.core import trace_stats
+from repro.weather import domain, fields
+st = fields.initial_state(jax.random.PRNGKey(0), (4, 16, 16), ensemble=1)
+kw = ({"axis_types": (jax.sharding.AxisType.Auto,) * 2}
+      if hasattr(jax.sharding, "AxisType") else {})
+mesh = jax.make_mesh((2, 2), ("data", "model"), **kw)
+step, _ = domain.make_distributed_step(mesh, k_steps=%d)
+j = jax.make_jaxpr(step)(st)
+print("STRUCT=" + json.dumps(trace_stats.launch_and_collective_counts(j)))
+"""
+
+
+def _kstep_round_structure(k: int) -> dict:
+    """Trace the distributed k-step round on a forced 4-device CPU mesh and
+    return {"pallas_call": ..., "ppermute": ...} per round."""
+    env = {k_: v for k_, v in os.environ.items() if k_ != "XLA_FLAGS"}
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    env.setdefault("PYTHONPATH", "src")
+    r = subprocess.run([sys.executable, "-c", _STRUCT_SNIPPET % k], env=env,
+                       capture_output=True, text=True, timeout=600)
+    for line in r.stdout.splitlines():
+        if line.startswith("STRUCT="):
+            return json.loads(line[len("STRUCT="):])
+    raise RuntimeError(f"k-step structure trace failed: {r.stderr[-2000:]}")
 
 
 def run():
@@ -84,6 +121,19 @@ def run():
          f"grid={grid} ensemble={ENSEMBLE} backend={backend}"
          f" 1 launch, shared w{interp_note} "
          f"vs_per_field={t_fused / max(t_whole, 1e-9):.2f}x")
+    # The k-step round: KSTEP_K timesteps in ONE launch (in-kernel scan,
+    # state in VMEM between local steps) vs KSTEP_K whole-state launches.
+    t_kstep = time_fn(
+        lambda s: dycore.run(s, steps=KSTEP_K, k_steps=KSTEP_K), st,
+        iters=iters, warmup=warmup)
+    t_kseq = time_fn(
+        lambda s: dycore.run(s, steps=KSTEP_K), st,
+        iters=iters, warmup=warmup)
+    walltime["kstep_round"] = t_kstep
+    walltime["kstep_scan_of_launches"] = t_kseq
+    emit("dycore_fused/walltime_kstep", t_kstep,
+         f"grid={grid} k={KSTEP_K} backend={backend} 1 launch/round"
+         f"{interp_note} vs_scan={t_kseq / max(t_kstep, 1e-9):.2f}x")
 
     # Modeled HBM traffic at the paper's domain, auto-tuned fused window.
     model_grid = grid if smoke else MODEL_GRID
@@ -91,12 +141,18 @@ def run():
     for dtype in ("float32", "bfloat16"):
         ty = fused_ops.plan_tile(model_grid, jnp.dtype(dtype))
         t = memmodel.dycore_step_traffic(model_grid, dtype,
-                                         n_fields=n_fields, ty=ty)
+                                         n_fields=n_fields, ty=ty,
+                                         k_steps=KSTEP_K)
         traffic[dtype] = {
             "unfused": t["unfused"]["total"],
             "fused_per_field": t["fused"]["total"],
             "fused_whole_state": t["fused_whole"]["total"],
+            "fused_kstep": t["fused_kstep"]["total"],
+            "fused_kstep_scan": t["fused_kstep"]["scan_total"],
+            "interstep_state": t["fused_kstep"]["interstep_state"],
+            "interstep_state_scan": t["fused_kstep"]["interstep_state_scan"],
             "reduction_x_whole": t["reduction_x_whole"],
+            "interstep_reduction_x": t["interstep_reduction_x"],
         }
         mb = 1.0 / 2**20
         emit(f"dycore_fused/traffic_unfused_{dtype}", 0.0,
@@ -119,6 +175,13 @@ def run():
              f"(pessimistic bound: "
              f"MB={t['fused_whole']['stream_window_reads'] * mb:.0f}, "
              f"{t['reduction_x_whole_window_reads']:.2f}x)")
+        emit(f"dycore_fused/traffic_kstep_{dtype}", 0.0,
+             f"MB={t['fused_kstep']['total'] * mb:.0f}/round k={KSTEP_K} "
+             f"vs_scan={t['reduction_x_kstep_vs_scan']:.2f}x "
+             f"interstep_state_MB={t['fused_kstep']['interstep_state'] * mb:.0f}"
+             f" vs {t['fused_kstep']['interstep_state_scan'] * mb:.0f} "
+             f"({t['interstep_reduction_x']:.0f}x fewer HBM state "
+             f"round-trips)")
 
         # Modeled TPU time for the fused plan (per field pipeline pass).
         plan = tiling.TilePlan(op=tiling.DYCORE_FUSED, grid_shape=model_grid,
@@ -144,16 +207,49 @@ def run():
              f"bytes_ratio={m['bytes_ratio']:.2f} "
              f"redundant_flops={m['redundant_flops_frac'] * 100:.0f}%")
 
+    # Structural counts of the k-step round — the regression guard that is
+    # immune to interpreter-walltime noise: the single-chip round must be
+    # ONE pallas_call; the distributed round additionally one ppermute pair
+    # per mesh direction (traced on a forced 4-device mesh in a subprocess).
+    st_small = fields.initial_state(jax.random.PRNGKey(0), SMOKE_GRID)
+    j = jax.make_jaxpr(
+        lambda s: dycore.run(s, steps=KSTEP_K, k_steps=KSTEP_K,
+                             interpret=True))(st_small)
+    calls_local = trace_stats.count_primitive(j, "pallas_call")
+    try:
+        struct = _kstep_round_structure(KSTEP_K)
+    except (RuntimeError, subprocess.SubprocessError) as e:
+        print(f"# distributed structure trace unavailable: {e}")
+        struct = {"pallas_call": calls_local, "ppermute": None}
+    calls_round = max(calls_local, struct["pallas_call"])
+    emit("dycore_fused/kstep_structure", 0.0,
+         f"pallas_calls_per_round={calls_round} "
+         f"collectives_per_round={struct['ppermute']} k={KSTEP_K}")
+
     write_json("BENCH_dycore.json", {
         "grid": list(grid),
         "model_grid": list(model_grid),
         "ensemble": ENSEMBLE,
         "n_fields": n_fields,
+        "k_steps": KSTEP_K,
+        "pallas_calls_per_round": calls_round,
+        "collectives_per_round": struct["ppermute"],
         "walltime_us": walltime,
-        "steps_per_s": {k: 1e6 / max(v, 1e-9) for k, v in walltime.items()},
+        # steps_per_s counts SIMULATED timesteps: the kstep entries' walltime
+        # covers a whole KSTEP_K-step round, the others a single step.
+        "steps_per_s": {
+            k: (KSTEP_K if k.startswith("kstep") else 1) * 1e6
+            / max(v, 1e-9) for k, v in walltime.items()},
         "modeled_hbm_bytes": traffic,
         "kstep_exchange": kstep,
     })
+
+    if calls_round > 1:
+        # Structural regression: the k-step round fragmented into multiple
+        # launches.  Fail the bench (and the CI smoke job) loudly.
+        raise SystemExit(
+            f"k-step structural regression: {calls_round} pallas_calls per "
+            f"round (expected 1)")
 
 
 if __name__ == "__main__":

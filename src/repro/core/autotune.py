@@ -33,7 +33,7 @@ OP_SPECS = {
     spec.name: spec
     for spec in (_tiling.HDIFF, _tiling.VADVC, _tiling.COPY,
                  _tiling.LRU_SCAN, _tiling.DYCORE_FUSED,
-                 _tiling.DYCORE_WHOLE_STATE)
+                 _tiling.DYCORE_WHOLE_STATE, _tiling.DYCORE_KSTEP)
 }
 
 
@@ -106,3 +106,65 @@ def tune(op: OpSpec,
     best = min(front, key=cost)
     frontier = tuple((scored[i][0], scored[i][1]) for i in front)
     return TunedResult(plan=cands[best], est=ests[best], pareto=frontier)
+
+
+# ---------------------------------------------------------------------------
+# k_steps autotuning — the communication-avoiding knob, picked the same way
+# plan_tile picks the y-window (ROADMAP "Autotune k_steps").
+# ---------------------------------------------------------------------------
+
+# Fixed per-collective-round cost: dispatch + link latency of a ppermute
+# round on the 2-D torus (model constant, same register as hierarchy.py's
+# bandwidth/energy numbers).
+COLLECTIVE_LATENCY_S = 5e-6
+
+# Fused dycore flops per grid point per field per step (tiling.DYCORE_FUSED).
+_DYCORE_FLOPS_PER_POINT = _tiling.DYCORE_FUSED.flops_per_point
+
+
+def plan_k_steps(grid_shape: Sequence[int], dtype, mesh_shape,
+                 *, n_fields: int = 4, halo: int = 2, max_k: int = 8,
+                 hier: Optional[hw.Hierarchy] = None,
+                 latency_s: float = COLLECTIVE_LATENCY_S,
+                 utilization: float = 0.85) -> int:
+    """Pick the communication-avoiding depth k for the distributed dycore.
+
+    Modeled per-TIMESTEP cost of running the k-step round
+    (`weather/domain.py::make_distributed_step(k_steps=k)`):
+
+        (rounds(k) * latency + wire_bytes(k) / ici_bw) / k      collectives
+      + compute * (1 + redundant_flops_frac(k))                 halo-ring tax
+
+    with the wire/redundancy terms from `memmodel.kstep_exchange_model` and
+    the compute term from the fused-kernel flop count at the local slab.
+    Large k amortizes collective latency but pays a growing redundant-flops
+    tax on the deepened halo ring; the argmin is the paper's sweet spot.
+    Candidates stop where the deep halo outgrows the local slab.
+
+    `mesh_shape` is `(py, px)` — spatial shards along y and x.
+    """
+    from repro.core import memmodel   # local import: memmodel is heavy
+
+    hier = hier or hw.tpu_v5e()
+    nz, ny, nx = (int(g) for g in grid_shape)
+    py, px = (int(s) for s in mesh_shape)
+    ly, lx = ny // py, nx // px
+    b = hw.dtype_bytes(dtype)
+    peak = (hier.peak_flops_bf16 if b <= 2 else hier.peak_flops_fp32)
+    compute_s = (_DYCORE_FLOPS_PER_POINT * n_fields * nz * ly * lx
+                 / (peak * utilization))
+
+    best_k, best_cost = 1, None
+    for k in range(1, max_k + 1):
+        try:
+            m = memmodel.kstep_exchange_model(
+                grid_shape, dtype, n_fields=n_fields, k=k,
+                shards=(py, px), halo=halo)
+        except ValueError:
+            break   # deep halo outgrew the local slab
+        coll_s = (m["rounds_kstep"] * latency_s
+                  + m["bytes_kstep"] / hier.ici_bw) / k
+        cost = coll_s + compute_s * (1.0 + m["redundant_flops_frac"])
+        if best_cost is None or cost < best_cost:
+            best_k, best_cost = k, cost
+    return best_k

@@ -99,7 +99,8 @@ def estimate(cfg: ModelConfig, shape: ShapeConfig, mesh, p_shapes, p_shard,
 
 
 def dycore_step_traffic(grid_shape, dtype, *, n_fields: int = 4,
-                        ty: int = 8) -> Dict[str, Dict[str, int]]:
+                        ty: int = 8,
+                        k_steps: int = 1) -> Dict[str, Dict[str, int]]:
     """Modeled HBM traffic of one dycore step, fused vs unfused — the NERO
     fusion accounting (arxiv 2107.08716 §3: the baseline's intermediates
     round-trip main memory between kernels; the fused PE streams each field
@@ -127,9 +128,21 @@ def dycore_step_traffic(grid_shape, dtype, *, n_fields: int = 4,
       between the two; the ideal is what a line-buffer/manual-DMA
       formulation of the same pipeline would reach.
 
-    Returns {"unfused": {...}, "fused": {...}, "reduction_x": float
-    (ideal), "reduction_x_window_reads": float (pessimistic)} with
-    per-stage byte counts and totals.
+    The k-step round (`k_steps > 1`, kernels/dycore_fused
+    `fused_dycore_kstep_pallas`) adds the "fused_kstep" bounds: ONE launch
+    advances k timesteps with the prognostic state held in VMEM between
+    local steps, so the inter-step state traffic — field + stage tendency
+    read AND written per step boundary — collapses from once per step to
+    once per ROUND: a modeled >= k× reduction on exactly the bytes the PR 2
+    scan-of-launches path round-tripped ("interstep_state" vs
+    "interstep_state_scan", ratio "interstep_reduction_x").  The price is
+    the 3-window working slab each grid cell stages (the kernel's y-halo is
+    a whole window per side), reflected in the per-round stream bound.
+
+    Returns {"unfused": {...}, "fused": {...}, "fused_whole": {...},
+    "fused_kstep": {...} (when k_steps > 1), "reduction_x": float (ideal),
+    "reduction_x_window_reads": float (pessimistic), ...} with per-stage
+    byte counts and totals.
     """
     grid_shape = tuple(int(g) for g in grid_shape)
     b = hw.dtype_bytes(dtype)
@@ -177,29 +190,64 @@ def dycore_step_traffic(grid_shape, dtype, *, n_fields: int = 4,
     whole["stream_window_reads"] = (
         (n_fields * (3 * 3 + n_out) + 3) * fb + whole["w_precompute"])
 
-    return {"unfused": unfused, "fused": fused, "fused_whole": whole,
-            "reduction_x": unfused["total"] / max(fused["total"], 1),
-            "reduction_x_window_reads": (
-                unfused["total"] / max(fused["stream_window_reads"], 1)),
-            "reduction_x_whole": unfused["total"] / max(whole["total"], 1),
-            "reduction_x_whole_window_reads": (
-                unfused["total"] / max(whole["stream_window_reads"], 1)),
-            "halo_overhead": plan.halo_overhead}
+    out = {"unfused": unfused, "fused": fused, "fused_whole": whole,
+           "reduction_x": unfused["total"] / max(fused["total"], 1),
+           "reduction_x_window_reads": (
+               unfused["total"] / max(fused["stream_window_reads"], 1)),
+           "reduction_x_whole": unfused["total"] / max(whole["total"], 1),
+           "reduction_x_whole_window_reads": (
+               unfused["total"] / max(whole["stream_window_reads"], 1)),
+           "halo_overhead": plan.halo_overhead}
+
+    if k_steps > 1:
+        kspec = tiling.dycore_kstep_spec(n_fields, k_steps)
+        kty = max(2, min(max(ty, k_steps * 2), ny))
+        ksplan = tiling.TilePlan(op=kspec, grid_shape=grid_shape,
+                                 tile=(nz, kty, nx),
+                                 dtype=str(jax.numpy.dtype(dtype)))
+        # Per-round carried-state traffic (field + stage tendency, read and
+        # written at HBM): once per ROUND in the k-step kernel vs once per
+        # STEP in the scan-of-launches path.
+        interstep = 4 * n_fields * fb
+        kstep = {
+            # One k-step round, 3-window per-field streams + shared w.
+            "stream": n_fields * ksplan.hbm_bytes_total + 2 * fb,
+            # The PR 2 path for the same round: k whole-state launches.
+            "scan_total": k_steps * whole["total"],
+            "scan_window_reads": k_steps * whole["stream_window_reads"],
+            "interstep_state": interstep,
+            "interstep_state_scan": k_steps * interstep,
+        }
+        kstep["total"] = kstep["stream"]
+        out["fused_kstep"] = kstep
+        out["interstep_reduction_x"] = (
+            kstep["interstep_state_scan"] / max(kstep["interstep_state"], 1))
+        out["reduction_x_kstep_vs_scan"] = (
+            kstep["scan_total"] / max(kstep["total"], 1))
+    return out
 
 
 def kstep_exchange_model(grid_shape, dtype, *, n_fields: int = 4,
-                         k: int = 1, shards=(2, 2),
-                         halo: int = 2) -> Dict[str, float]:
+                         k: int = 1, shards=(2, 2), halo: int = 2,
+                         exchange_dtype=None) -> Dict[str, float]:
     """Communication-avoiding k-step accounting (weather/domain.py
-    `k_steps`): one stacked `(3*n_fields + 1)`-operand halo exchange of
-    depth `k*halo` (y) / `k*halo + 1` (x) buys k fused whole-state steps
-    with no collectives, at the price of redundant halo-ring compute.
+    `k_steps`): one RAGGED stacked halo exchange — the `3*n_fields` field
+    operands at depth `k*halo` in both directions, `wcon` alone one column
+    deeper in x for its staggering (`w[c] = wcon[c] + wcon[c+1]`) — buys k
+    fused steps in one launch with no collectives, at the price of
+    redundant halo-ring compute.
+
+    `exchange_dtype` models the wire cast (`make_distributed_step(...,
+    exchange_dtype="bfloat16")`): halo bytes are counted at the wire dtype
+    (bf16 halves them), independent of the state dtype.
 
     Per shard, per k timesteps:
 
-      bytes_kstep      — bytes ppermuted by the single deep stacked exchange
+      bytes_kstep      — bytes ppermuted by the single deep packed exchange
       bytes_sequential — bytes ppermuted by k rounds of the depth-(halo,
-                         halo+1) stacked exchange (the k_steps=1 path)
+                         halo / halo+1 for wcon) exchange (the k_steps=1
+                         path at the same wire dtype)
+      bytes_wcon       — wcon's share of bytes_kstep (the ragged ride)
       rounds_kstep / rounds_sequential — collective rounds (2 vs 2k)
       redundant_flops_frac — extra stencil work on the halo rings relative
                              to the interior (grows with k; the knob's cost)
@@ -208,25 +256,35 @@ def kstep_exchange_model(grid_shape, dtype, *, n_fields: int = 4,
     nz, ny, nx = (int(g) for g in grid_shape)
     py, px = shards
     ly, lx = ny // py, nx // px
-    b = hw.dtype_bytes(dtype)
-    ops = 3 * n_fields + 1                    # fields + tens + stage + wcon
+    b = hw.dtype_bytes(exchange_dtype if exchange_dtype is not None
+                       else dtype)
 
-    def exchanged(depth_y: int, depth_x: int) -> int:
+    def exchanged(n_ops: int, depth_y: int, depth_x: int) -> int:
         hi_lo = 2                             # both directions
-        y = ops * nz * depth_y * lx * b * hi_lo
-        x = ops * nz * depth_x * (ly + 2 * depth_y) * b * hi_lo
+        y = n_ops * nz * depth_y * lx * b * hi_lo
+        x = n_ops * nz * depth_x * (ly + 2 * depth_y) * b * hi_lo
         return int(y + x)
 
-    hy, hx = k * halo, k * halo + 1
-    if hy > ly or hx > lx:
+    def round_bytes(kk: int):
+        """(field bytes, wcon bytes) of one depth-kk packed exchange."""
+        dy, dx = kk * halo, kk * halo
+        fields_b = exchanged(3 * n_fields, dy, dx)
+        wcon_b = exchanged(1, dy, dx + 1)     # the +1 staggering column
+        return fields_b, wcon_b
+
+    hy, hx = k * halo, k * halo
+    if hy > ly or hx + 1 > lx:
         raise ValueError(
-            f"k={k} needs a ({hy}, {hx})-deep halo; local slab ({ly}, {lx})")
-    bytes_kstep = exchanged(hy, hx)
-    bytes_seq = k * exchanged(halo, halo + 1)
+            f"k={k} needs a ({hy}, {hx + 1})-deep halo; local slab "
+            f"({ly}, {lx})")
+    fields_b, wcon_b = round_bytes(k)
+    bytes_kstep = fields_b + wcon_b
+    bytes_seq = k * sum(round_bytes(1))
     padded = (ly + 2 * hy) * (lx + 2 * hx)
     return {
         "bytes_kstep": bytes_kstep,
         "bytes_sequential": bytes_seq,
+        "bytes_wcon": wcon_b,
         "bytes_ratio": bytes_kstep / max(bytes_seq, 1),
         "rounds_kstep": 2,
         "rounds_sequential": 2 * k,

@@ -28,10 +28,18 @@ class OpSpec:
     fractional when a stream is shared/amortized across an outer batch axis
     (dycore_whole_state: the `w` slab is read once per field group).
     `halo`: per-axis one-sided halo the stencil needs (hdiff: (0,2,2)).
+    `halo_tiles`: additional per-axis one-sided halo measured in multiples
+    of the tile extent itself (dycore_kstep: (0,1,0) — the working window
+    is the tile plus a whole aliased window per side).
     `seq_axes`: axes that must stay whole inside a tile because the op is
     sequential along them (vadvc: z; lru_scan: t).
     `flops_per_point`: useful FLOPs per output grid point.
-    `scratch_fields`: number of tile-shaped temporaries (vadvc: ccol,dcol).
+    `scratch_fields`: number of tile-shaped temporaries (vadvc: ccol,dcol);
+    sized to the padded window when `scratch_padded` (dycore_kstep carries
+    the whole working window per temporary).
+    `extra_vmem_buffers`: padded-window-sized dtype-width buffers the kernel
+    allocates beyond the streamed fields and fp32 scratch (dycore_kstep: 2,
+    the double-buffered `w` prefetch slots).
     """
 
     name: str
@@ -42,6 +50,9 @@ class OpSpec:
     flops_per_point: float
     scratch_fields: int = 0
     parallel_axes: Tuple[int, ...] = ()
+    halo_tiles: Tuple[int, int, int] = (0, 0, 0)
+    scratch_padded: bool = False
+    extra_vmem_buffers: float = 0.0
 
     @property
     def bytes_moved_per_point(self) -> float:
@@ -120,6 +131,41 @@ def dycore_whole_state_spec(n_fields: int = 4) -> OpSpec:
 DYCORE_WHOLE_STATE = dycore_whole_state_spec()
 
 
+def dycore_kstep_spec(n_fields: int = 4, k_steps: int = 2) -> OpSpec:
+    """Tile space of the k-step fused dycore round (one `pallas_call` runs
+    the whole communication-avoiding round: `k_steps` local steps per grid
+    cell with the prognostic state held in VMEM between steps).
+
+    Geometry: each grid cell stages a THREE-window working slab (the k-step
+    halo is up to a whole `ty` per side — `halo_tiles=(0,1,0)`), and every
+    one of the 8 pipeline temporaries (fwork/wwork/twork/swork/rhs/ccol/
+    dcol/stage) spans that padded window (`scratch_padded`).  The explicit
+    double-buffered `w` prefetch adds 2 padded dtype-width buffers on top
+    (`extra_vmem_buffers=2`) — the VMEM budget must clear ALL of that, which
+    is why the k-step space is registered separately: its legal-tile set is
+    much tighter than the whole-state one.
+
+    HBM traffic per ROUND: the same `3 + 1/n_fields` input streams as the
+    whole-state step (state+tendencies once, shared `w` amortized over the
+    field axis) and 2 output streams — but the round advances `k_steps`
+    timesteps, so `flops_per_point` scales with k while the byte terms do
+    not: arithmetic intensity grows ~k-fold (NERO's keep-it-on-fabric
+    argument applied across time).
+    """
+    if n_fields < 1:
+        raise ValueError(f"n_fields={n_fields} must be >= 1")
+    if k_steps < 1:
+        raise ValueError(f"k_steps={k_steps} must be >= 1")
+    return OpSpec(
+        name="dycore_kstep", fields_in=3 + 1.0 / n_fields, fields_out=2,
+        halo=(0, 0, 0), halo_tiles=(0, 1, 0), seq_axes=(0, 2),
+        parallel_axes=(1,), flops_per_point=61.0 * k_steps,
+        scratch_fields=8, scratch_padded=True, extra_vmem_buffers=2.0)
+
+
+DYCORE_KSTEP = dycore_kstep_spec()
+
+
 @dataclasses.dataclass(frozen=True)
 class TilePlan:
     """A concrete 3-D window choice for an OpSpec on a grid."""
@@ -137,8 +183,10 @@ class TilePlan:
 
     @property
     def padded_tile(self) -> Tuple[int, int, int]:
-        """Window + halos actually staged into VMEM."""
-        return tuple(t + 2 * h for t, h in zip(self.tile, self.op.halo))
+        """Window + halos actually staged into VMEM (tile-multiple halos,
+        e.g. the k-step kernel's whole aliased window per side, included)."""
+        return tuple(t + 2 * h + 2 * ht * t for t, h, ht in
+                     zip(self.tile, self.op.halo, self.op.halo_tiles))
 
     @property
     def num_tiles(self) -> int:
@@ -149,12 +197,17 @@ class TilePlan:
     @property
     def vmem_bytes(self) -> int:
         """NERO's "resource utilization" axis: bytes of near-memory the plan
-        claims, with pipeline double-buffering on the streamed fields."""
+        claims, with pipeline double-buffering on the streamed fields, the
+        op's explicit extra buffers (e.g. the k-step kernel's double-buffered
+        `w` prefetch slots), and padded-window scratch where the op keeps
+        whole working windows as temporaries."""
         b = hw.dtype_bytes(self.dtype)
         pt = math.prod(self.padded_tile)
         streamed = (self.op.fields_in + self.op.fields_out) * pt * b
-        scratch = self.op.scratch_fields * self.tile_points * max(b, 4)
-        return int(streamed * self.pipeline_depth + scratch)
+        scratch_pts = pt if self.op.scratch_padded else self.tile_points
+        scratch = self.op.scratch_fields * scratch_pts * max(b, 4)
+        extra = self.op.extra_vmem_buffers * pt * b
+        return int(streamed * self.pipeline_depth + scratch + extra)
 
     def fits(self, hier: hw.Hierarchy) -> bool:
         return self.vmem_bytes <= hier.vmem.capacity_bytes

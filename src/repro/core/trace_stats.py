@@ -40,6 +40,32 @@ def count_primitive(jaxpr, name: str) -> int:
     return n
 
 
+def launch_and_collective_counts(jaxpr) -> Dict[str, int]:
+    """The two structural costs of a distributed dycore round: Pallas
+    launches and ppermute collectives in the traced program (scan bodies
+    counted once — i.e. per-round cost)."""
+    return {"pallas_call": count_primitive(jaxpr, "pallas_call"),
+            "ppermute": count_primitive(jaxpr, "ppermute")}
+
+
+def assert_kstep_structure(jaxpr, *, pallas_calls: int = 1,
+                           collectives: int = 4) -> Dict[str, int]:
+    """Assert the k-step round's structural win: exactly ONE `pallas_call`
+    (the in-kernel k-step scan — no launch per local step) and one
+    `ppermute` pair per mesh direction (4 collectives) per round.  Returns
+    the counts; raises AssertionError naming the violated invariant."""
+    counts = launch_and_collective_counts(jaxpr)
+    if counts["pallas_call"] != pallas_calls:
+        raise AssertionError(
+            f"k-step round launches {counts['pallas_call']} Pallas kernels, "
+            f"expected {pallas_calls} (the round must be ONE launch)")
+    if counts["ppermute"] != collectives:
+        raise AssertionError(
+            f"k-step round issues {counts['ppermute']} ppermutes, expected "
+            f"{collectives} (one pair per mesh direction per round)")
+    return counts
+
+
 def primitive_counts(jaxpr) -> Dict[str, int]:
     """Histogram of every primitive in `jaxpr` (recursive, scan bodies
     counted once)."""

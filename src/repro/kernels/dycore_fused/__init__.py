@@ -1,9 +1,18 @@
 """Fused compound dycore step: vadvc -> point-wise update -> hdiff in one
 Pallas dataflow pipeline (NERO's in-fabric fusion, arxiv 2107.08716 §3)."""
 
-from repro.kernels.dycore_fused.fused import fused_dycore_pallas
-from repro.kernels.dycore_fused.ops import fused_step, plan_tile, snap_ty
+from repro.kernels.dycore_fused.fused import (fused_dycore_kstep_pallas,
+                                              fused_dycore_pallas,
+                                              fused_dycore_whole_state_pallas)
+from repro.kernels.dycore_fused.ops import (fused_step, fused_step_kstep,
+                                            fused_step_whole_state,
+                                            plan_tile, plan_tile_kstep,
+                                            plan_tile_whole_state, snap_ty,
+                                            snap_ty_kstep)
 from repro.kernels.dycore_fused.ref import fused_step_ref
 
-__all__ = ["fused_dycore_pallas", "fused_step", "fused_step_ref",
-           "plan_tile", "snap_ty"]
+__all__ = ["fused_dycore_pallas", "fused_dycore_whole_state_pallas",
+           "fused_dycore_kstep_pallas", "fused_step", "fused_step_kstep",
+           "fused_step_whole_state", "fused_step_ref", "plan_tile",
+           "plan_tile_kstep", "plan_tile_whole_state", "snap_ty",
+           "snap_ty_kstep"]

@@ -48,28 +48,14 @@ from repro.kernels.vadvc.ref import BET_M, BET_P, DTR_STAGE
 HALO = 2   # y/x halo depth of the compound hdiff stage
 
 
-def _fused_kernel(f_prev, f_cur, f_next,
-                  w_prev, w_cur, w_next,
-                  t_prev, t_cur, t_next,
-                  s_prev, s_cur, s_next,
-                  outf_ref, outs_ref,
-                  fwork, wwork, rhs, ccol, dcol, stage,
-                  *, nz: int, ty: int, dt: float, coeff: float):
-    f32 = jnp.float32
-
-    def asm(prev, cur, nxt):
-        """Assemble the (nz, ty+4, nx) fp32 working window: cur plus a 2-row
-        halo taken from the periodic prev/next windows."""
-        return jnp.concatenate(
-            [prev[0][:, -HALO:], cur[0], nxt[0][:, :HALO]],
-            axis=1).astype(f32)
-
-    fwork[...] = asm(f_prev, f_cur, f_next)
-    wwork[...] = asm(w_prev, w_cur, w_next)
-    # u_pos == u_stage == f in the dycore step, so the static part of the
-    # tridiagonal RHS is precomputed once per window.
-    rhs[...] = (DTR_STAGE * fwork[...] + asm(t_prev, t_cur, t_next)
-                + asm(s_prev, s_cur, s_next))
+def _window_step(fwork, wwork, rhs, ccol, dcol, stage,
+                 *, nz: int, dt: float, coeff: float):
+    """One full dycore step on the (nz, R, nx) fp32 working window held in
+    VMEM scratch refs: Thomas solve -> stage tendency (written into `stage`),
+    point-wise update, compound hdiff with periodic in-window wrap in both y
+    and x.  Returns the diffused field as a (nz, R, nx) array; rows within
+    HALO of a window edge whose wrap is not truly periodic come out garbage
+    (callers crop / shrink validity accordingly)."""
 
     def ld(ref, k):
         return ref[pl.ds(k, 1)][0]
@@ -131,14 +117,14 @@ def _fused_kernel(f_prev, f_cur, f_next,
     jax.lax.fori_loop(0, nz - 1, bwd_body, dlast)
 
     # ---- point-wise explicit update (still in VMEM) ------------------------
-    stg = stage[...]                       # (nz, ty+4, nx)
-    fup = fwork[...] + dt * stg
+    fup = fwork[...] + dt * stage[...]
 
     # ---- compound hdiff on the updated field -------------------------------
-    # y shifts index into the halo'd working window; x shifts are periodic
-    # lane rolls (the full x extent lives in the window).
+    # Both y and x shifts are periodic VMEM rolls over the working window;
+    # at window edges whose wrap is not truly periodic this writes garbage
+    # that stays within HALO rows/cols of the edge.
     def s(dj: int, di: int) -> jnp.ndarray:
-        win = fup[:, HALO + dj: HALO + dj + ty, :]
+        win = jnp.roll(fup, -dj, axis=1) if dj else fup
         return jnp.roll(win, -di, axis=2) if di else win
 
     def lap(dj: int, di: int) -> jnp.ndarray:
@@ -160,9 +146,36 @@ def _fused_kernel(f_prev, f_cur, f_next,
     fly = jnp.where(fly * (s(1, 0) - s(0, 0)) > 0.0, 0.0, fly)
     fly_m = jnp.where(fly_m * (s(0, 0) - s(-1, 0)) > 0.0, 0.0, fly_m)
 
-    out = s(0, 0) - coeff * ((flx - flx_m) + (fly - fly_m))
-    outf_ref[0] = out.astype(outf_ref.dtype)
-    outs_ref[0] = stg[:, HALO:HALO + ty, :].astype(outs_ref.dtype)
+    return s(0, 0) - coeff * ((flx - flx_m) + (fly - fly_m))
+
+
+def _fused_kernel(f_prev, f_cur, f_next,
+                  w_prev, w_cur, w_next,
+                  t_prev, t_cur, t_next,
+                  s_prev, s_cur, s_next,
+                  outf_ref, outs_ref,
+                  fwork, wwork, rhs, ccol, dcol, stage,
+                  *, nz: int, ty: int, dt: float, coeff: float):
+    f32 = jnp.float32
+
+    def asm(prev, cur, nxt):
+        """Assemble the (nz, ty+4, nx) fp32 working window: cur plus a 2-row
+        halo taken from the periodic prev/next windows."""
+        return jnp.concatenate(
+            [prev[0][:, -HALO:], cur[0], nxt[0][:, :HALO]],
+            axis=1).astype(f32)
+
+    fwork[...] = asm(f_prev, f_cur, f_next)
+    wwork[...] = asm(w_prev, w_cur, w_next)
+    # u_pos == u_stage == f in the dycore step, so the static part of the
+    # tridiagonal RHS is precomputed once per window.
+    rhs[...] = (DTR_STAGE * fwork[...] + asm(t_prev, t_cur, t_next)
+                + asm(s_prev, s_cur, s_next))
+
+    out = _window_step(fwork, wwork, rhs, ccol, dcol, stage,
+                       nz=nz, dt=dt, coeff=coeff)
+    outf_ref[0] = out[:, HALO:HALO + ty, :].astype(outf_ref.dtype)
+    outs_ref[0] = stage[:, HALO:HALO + ty, :].astype(outs_ref.dtype)
 
 
 def fused_dycore_pallas(f: jnp.ndarray, w: jnp.ndarray, utens: jnp.ndarray,
@@ -216,6 +229,50 @@ def fused_dycore_pallas(f: jnp.ndarray, w: jnp.ndarray, utens: jnp.ndarray,
     return f_new.reshape(shape), stage.reshape(shape)
 
 
+class _StackedLayout:
+    """Validated geometry + BlockSpec pieces of the (batch, ny/ty, field)
+    grid shared by the whole-state and k-step wrappers: per-field operands
+    flattened to `batch*nf` with periodic prev/cur/next y-windows, the
+    shared `w` keeping its un-stacked layout and a field-collapsing index
+    map."""
+
+    def __init__(self, fs: jnp.ndarray, w: jnp.ndarray, ty: int):
+        shape = fs.shape
+        if len(shape) < 4:
+            raise ValueError(f"fs must be (..., nf, nz, ny, nx), got {shape}")
+        nf, nz, ny, nx = shape[-4:]
+        if ny % ty or ty < 2:
+            raise ValueError(f"ny={ny} must be divisible by ty={ty} >= 2")
+        if nz < 2:
+            raise ValueError(f"nz={nz} must be >= 2 (staggered vertical "
+                             f"sweep)")
+        if w.shape[-3:] != (nz, ny, nx):
+            raise ValueError(f"w shape {w.shape} != fields grid "
+                             f"{(nz, ny, nx)}")
+        self.nf, self.nz, self.ny, self.nx = nf, nz, ny, nx
+        self.nyb = ny // ty
+        batch = math.prod(shape[:-4]) if len(shape) > 4 else 1
+        self.batch = batch
+        self.grid = (batch, self.nyb, nf)
+        self.fshape = (batch * nf, nz, ny, nx)
+        self.wshape = (batch, nz, ny, nx)
+        spec = functools.partial(pl.BlockSpec, (1, nz, ty, nx))
+        nyb = self.nyb
+
+        def fmap(dj: int):
+            return lambda b, j, k: (b * nf + k, 0, (j + dj) % nyb, 0)
+
+        def wmap(dj: int):
+            # Shared operand: the field grid index k is collapsed — the
+            # block index repeats across the nf innermost iterations, so
+            # the slab is fetched once per (b, j).
+            return lambda b, j, k: (b, 0, (j + dj) % nyb, 0)
+
+        self.fwin = [spec(fmap(nyb - 1)), spec(fmap(0)), spec(fmap(1))]
+        self.wwin = [spec(wmap(nyb - 1)), spec(wmap(0)), spec(wmap(1))]
+        self.out_spec = spec(lambda b, j, k: (b * nf + k, 0, j, 0))
+
+
 def fused_dycore_whole_state_pallas(fs: jnp.ndarray, w: jnp.ndarray,
                                     utens: jnp.ndarray,
                                     utens_stage: jnp.ndarray, *,
@@ -239,46 +296,17 @@ def fused_dycore_whole_state_pallas(fs: jnp.ndarray, w: jnp.ndarray,
     Returns `(f_new, stage)` shaped/typed like `fs`.
     """
     shape = fs.shape
-    if len(shape) < 4:
-        raise ValueError(f"fs must be (..., nf, nz, ny, nx), got {shape}")
-    nf, nz, ny, nx = shape[-4:]
-    if ny % ty or ty < 2:
-        raise ValueError(f"ny={ny} must be divisible by ty={ty} >= 2")
-    if nz < 2:
-        raise ValueError(f"nz={nz} must be >= 2 (staggered vertical sweep)")
-    if w.shape[-3:] != (nz, ny, nx):
-        raise ValueError(f"w shape {w.shape} != fields grid {(nz, ny, nx)}")
-    nyb = ny // ty
-    batch = math.prod(shape[:-4]) if len(shape) > 4 else 1
+    lay = _StackedLayout(fs, w, ty)
 
-    spec = functools.partial(pl.BlockSpec, (1, nz, ty, nx))
-
-    def fmap(dj: int):
-        # Per-field operand: flattened (batch*nf) leading axis, periodic
-        # y-window offset dj.
-        return lambda b, j, k: (b * nf + k, 0, (j + dj) % nyb, 0)
-
-    def wmap(dj: int):
-        # Shared operand: the field grid index k is collapsed — the block
-        # index repeats across the nf innermost iterations, so the slab is
-        # fetched once per (b, j).
-        return lambda b, j, k: (b, 0, (j + dj) % nyb, 0)
-
-    fwin = [spec(fmap(nyb - 1)), spec(fmap(0)), spec(fmap(1))]
-    wwin = [spec(wmap(nyb - 1)), spec(wmap(0)), spec(wmap(1))]
-    out_spec = spec(lambda b, j, k: (b * nf + k, 0, j, 0))
-
-    kernel = functools.partial(_fused_kernel, nz=nz, ty=ty, dt=dt,
+    kernel = functools.partial(_fused_kernel, nz=lay.nz, ty=ty, dt=dt,
                                coeff=coeff)
-    fshape = (batch * nf, nz, ny, nx)
-    wshape = (batch, nz, ny, nx)
-    scratch = pltpu.VMEM((nz, ty + 2 * HALO, nx), jnp.float32)
+    scratch = pltpu.VMEM((lay.nz, ty + 2 * HALO, lay.nx), jnp.float32)
     fn = pl.pallas_call(
         kernel,
-        grid=(batch, nyb, nf),
-        in_specs=fwin + wwin + fwin + fwin,
-        out_specs=[out_spec, out_spec],
-        out_shape=[jax.ShapeDtypeStruct(fshape, fs.dtype)] * 2,
+        grid=lay.grid,
+        in_specs=lay.fwin + lay.wwin + lay.fwin + lay.fwin,
+        out_specs=[lay.out_spec, lay.out_spec],
+        out_shape=[jax.ShapeDtypeStruct(lay.fshape, fs.dtype)] * 2,
         scratch_shapes=[scratch] * 6,   # fwork, wwork, rhs, ccol, dcol, stage
         compiler_params=CompilerParams(
             dimension_semantics=("parallel", "arbitrary", "arbitrary")),
@@ -286,9 +314,196 @@ def fused_dycore_whole_state_pallas(fs: jnp.ndarray, w: jnp.ndarray,
         name="nero_dycore_whole_state",
     )
     args = []
-    for a, s in ((fs, fshape), (w, wshape), (utens, fshape),
-                 (utens_stage, fshape)):
+    for a, s in ((fs, lay.fshape), (w, lay.wshape), (utens, lay.fshape),
+                 (utens_stage, lay.fshape)):
         a = a.reshape(s)
+        args += [a, a, a]
+    f_new, stage = fn(*args)
+    return f_new.reshape(shape), stage.reshape(shape)
+
+
+# ---------------------------------------------------------------------------
+# k-step kernel: the whole communication-avoiding round in ONE launch.
+# ---------------------------------------------------------------------------
+
+def _kstep_body(outf_ref, outs_ref,
+                fwork, wwork, twork, swork, rhs, ccol, dcol, stage,
+                *, nz: int, ty: int, k_steps: int, dt: float, coeff: float):
+    """Run the k-step time loop on the (nz, 3*ty, nx) working window already
+    assembled into scratch.  Prognostic state (field + stage tendency) lives
+    in `fwork`/`swork` between local steps — it never round-trips HBM.  Each
+    step's in-window wrap garbage advances HALO rows per step from the window
+    edges; `ty >= k_steps*HALO` keeps the central `ty` rows valid."""
+
+    def body(_, carry):
+        # u_pos == u_stage == f; the tridiagonal RHS is rebuilt each step
+        # from the carried state and the constant slow tendency.
+        rhs[...] = DTR_STAGE * fwork[...] + twork[...] + swork[...]
+        out = _window_step(fwork, wwork, rhs, ccol, dcol, stage,
+                           nz=nz, dt=dt, coeff=coeff)
+        fwork[...] = out
+        swork[...] = stage[...]
+        return carry
+
+    jax.lax.fori_loop(0, k_steps, body, 0)
+    outf_ref[0] = fwork[:, ty:2 * ty, :].astype(outf_ref.dtype)
+    outs_ref[0] = swork[:, ty:2 * ty, :].astype(outs_ref.dtype)
+
+
+def _asm_full(prev, cur, nxt, dtype=jnp.float32):
+    """Assemble the full (nz, 3*ty, nx) working window from three whole
+    aliased windows (the k-step halo is up to ty deep per side)."""
+    return jnp.concatenate([prev[0], cur[0], nxt[0]], axis=1).astype(dtype)
+
+
+def _kstep_kernel_windows(f_prev, f_cur, f_next,
+                          w_prev, w_cur, w_next,
+                          t_prev, t_cur, t_next,
+                          s_prev, s_cur, s_next,
+                          outf_ref, outs_ref,
+                          fwork, wwork, twork, swork, rhs, ccol, dcol, stage,
+                          *, nz: int, ty: int, k_steps: int, dt: float,
+                          coeff: float):
+    """Interpreter-safe k-step kernel: `w` arrives as three aliased BlockSpec
+    windows (index map collapses the field axis, so Pallas elides the
+    re-fetch across the nf innermost iterations)."""
+    fwork[...] = _asm_full(f_prev, f_cur, f_next)
+    wwork[...] = _asm_full(w_prev, w_cur, w_next)
+    twork[...] = _asm_full(t_prev, t_cur, t_next)
+    swork[...] = _asm_full(s_prev, s_cur, s_next)
+    _kstep_body(outf_ref, outs_ref, fwork, wwork, twork, swork, rhs, ccol,
+                dcol, stage, nz=nz, ty=ty, k_steps=k_steps, dt=dt,
+                coeff=coeff)
+
+
+def _kstep_kernel_prefetch(f_prev, f_cur, f_next,
+                           w_hbm,
+                           t_prev, t_cur, t_next,
+                           s_prev, s_cur, s_next,
+                           outf_ref, outs_ref,
+                           fwork, wwork, twork, swork, rhs, ccol, dcol,
+                           stage, wbuf, wsem,
+                           *, nz: int, ty: int, k_steps: int, dt: float,
+                           coeff: float, nyb: int):
+    """k-step kernel with explicit double-buffered `w` prefetch: `w` stays in
+    HBM (`memory_space=ANY`) and is DMA'd by hand with `make_async_copy`.
+    While window j iterates its nf fields and k local steps, window j+1's
+    three `w` sections are already in flight into the other buffer slot, so
+    the shared-slab fetch overlaps compute instead of serializing at the
+    window boundary."""
+    b = pl.program_id(0)
+    j = pl.program_id(1)
+    kf = pl.program_id(2)
+
+    def dma(slot, jj, sec):
+        # Section `sec` (0/1/2 = prev/cur/next) of window jj, periodic in y.
+        row = jax.lax.rem(jj + (sec - 1) + nyb, nyb) * ty
+        return pltpu.make_async_copy(
+            w_hbm.at[b, :, pl.ds(row, ty), :],
+            wbuf.at[slot, :, pl.ds(sec * ty, ty), :],
+            wsem.at[slot, sec])
+
+    slot = jax.lax.rem(j, 2)
+
+    @pl.when(kf == 0)
+    def _fetch():
+        # Warm-up: the first window of each batch row starts its own copies
+        # (nothing was in flight for it).
+        @pl.when(j == 0)
+        def _warm():
+            for sec in range(3):
+                dma(0, 0, sec).start()
+        for sec in range(3):
+            dma(slot, j, sec).wait()
+        # Prefetch the NEXT window's w into the other slot while this
+        # window's nf fields x k steps compute.
+        @pl.when(j + 1 < nyb)
+        def _ahead():
+            for sec in range(3):
+                dma(jax.lax.rem(j + 1, 2), j + 1, sec).start()
+        wwork[...] = wbuf[slot].astype(jnp.float32)
+
+    fwork[...] = _asm_full(f_prev, f_cur, f_next)
+    twork[...] = _asm_full(t_prev, t_cur, t_next)
+    swork[...] = _asm_full(s_prev, s_cur, s_next)
+    _kstep_body(outf_ref, outs_ref, fwork, wwork, twork, swork, rhs, ccol,
+                dcol, stage, nz=nz, ty=ty, k_steps=k_steps, dt=dt,
+                coeff=coeff)
+
+
+def fused_dycore_kstep_pallas(fs: jnp.ndarray, w: jnp.ndarray,
+                              utens: jnp.ndarray, utens_stage: jnp.ndarray,
+                              *, k_steps: int, coeff: float = DEFAULT_COEFF,
+                              dt: float = 0.1, ty: int = 8,
+                              interpret: bool = False,
+                              prefetch_w: bool | None = None):
+    """The whole communication-avoiding round in ONE `pallas_call`: grid
+    `(ensemble, ny/ty, field)`, and the kernel body runs the `k_steps` time
+    loop internally (`lax.fori_loop` over Thomas solve + update + hdiff),
+    so the prognostic state between local steps lives in VMEM scratch
+    instead of round-tripping HBM k times.
+
+    Shapes as `fused_dycore_whole_state_pallas`: `fs`/`utens`/`utens_stage`
+    field-stacked `(..., nf, nz, ny, nx)`, shared staggered velocity `w`
+    `(..., nz, ny, nx)`, doubly periodic in (y, x).  Each grid cell stages a
+    3-window (`3*ty`-row) y-slab and shrinks its valid region by HALO per
+    local step, so `ty >= k_steps * HALO` is required (the redundant
+    halo-ring flops are the communication-avoiding price).
+
+    `prefetch_w=True` (default outside interpret mode) streams the shared
+    `w` slab with an explicit double-buffered `pltpu.make_async_copy`
+    pipeline: window j+1's slab is DMA'd while window j computes.
+    `prefetch_w=False` is the interpreter-safe fallback (three aliased
+    BlockSpec windows with a field-collapsing index map, fetch elided
+    across the field axis).  Both paths are bit-identical.
+
+    Returns `(f_new, stage)` shaped/typed like `fs` — the state after
+    `k_steps` timesteps and the last step's stage tendency.
+    """
+    shape = fs.shape
+    if k_steps < 1:
+        raise ValueError(f"k_steps={k_steps} must be >= 1")
+    lay = _StackedLayout(fs, w, ty)
+    if ty < k_steps * HALO:
+        raise ValueError(
+            f"ty={ty} must be >= k_steps*HALO={k_steps * HALO}: each local "
+            f"step consumes a {HALO}-row ring of window validity")
+    if prefetch_w is None:
+        prefetch_w = not interpret
+    nz, nx = lay.nz, lay.nx
+
+    window = pltpu.VMEM((nz, 3 * ty, nx), jnp.float32)
+    # fwork, wwork, twork, swork, rhs, ccol, dcol, stage
+    scratch = [window] * 8
+    if prefetch_w:
+        kernel = functools.partial(_kstep_kernel_prefetch, nz=nz, ty=ty,
+                                   k_steps=k_steps, dt=dt, coeff=coeff,
+                                   nyb=lay.nyb)
+        wspec = [pl.BlockSpec(memory_space=pltpu.ANY)]
+        scratch = scratch + [pltpu.VMEM((2, nz, 3 * ty, nx), w.dtype),
+                             pltpu.SemaphoreType.DMA((2, 3))]
+    else:
+        kernel = functools.partial(_kstep_kernel_windows, nz=nz, ty=ty,
+                                   k_steps=k_steps, dt=dt, coeff=coeff)
+        wspec = lay.wwin
+
+    fn = pl.pallas_call(
+        kernel,
+        grid=lay.grid,
+        in_specs=lay.fwin + wspec + lay.fwin + lay.fwin,
+        out_specs=[lay.out_spec, lay.out_spec],
+        out_shape=[jax.ShapeDtypeStruct(lay.fshape, fs.dtype)] * 2,
+        scratch_shapes=scratch,
+        compiler_params=CompilerParams(
+            dimension_semantics=("parallel", "arbitrary", "arbitrary")),
+        interpret=interpret,
+        name="nero_dycore_kstep",
+    )
+    args = [a.reshape(lay.fshape) for a in (fs, fs, fs)]
+    wa = w.reshape(lay.wshape)
+    args += [wa] if prefetch_w else [wa, wa, wa]
+    for a in (utens, utens_stage):
+        a = a.reshape(lay.fshape)
         args += [a, a, a]
     f_new, stage = fn(*args)
     return f_new.reshape(shape), stage.reshape(shape)

@@ -12,6 +12,13 @@ Two granularities:
   slab is DMA'd once per (ensemble, y-window) instead of once per field, and
   the launch cost is amortized nf×.  This is the default hot path of
   `weather/dycore.py::dycore_step`.
+* `fused_step_kstep(...)` — the whole k-step round in ONE `pallas_call`: the
+  kernel body runs the k local steps internally, prognostic state between
+  steps lives in VMEM scratch, and the shared `w` slab is double-buffer
+  prefetched across y-windows (`kernels/dycore_fused/fused.py::
+  fused_dycore_kstep_pallas`).  The hot path of `weather/dycore.py::run`
+  with `k_steps > 1` and of `weather/domain.py::make_distributed_step`'s
+  communication-avoiding mode.
 
 Both default `interpret=None`, resolved via `_auto_interpret()`: native
 Pallas on TPU, interpreter everywhere else.
@@ -24,9 +31,11 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.core import autotune, tiling
+from repro.core import autotune, hierarchy as hw, tiling
 from repro.kernels.dycore_fused import ref as _ref
-from repro.kernels.dycore_fused.fused import (fused_dycore_pallas,
+from repro.kernels.dycore_fused.fused import (HALO,
+                                              fused_dycore_kstep_pallas,
+                                              fused_dycore_pallas,
                                               fused_dycore_whole_state_pallas)
 
 DEFAULT_COEFF = _ref.DEFAULT_COEFF
@@ -51,6 +60,50 @@ def plan_tile(grid_shape, dtype) -> int:
     """Auto-tuned y-window for the fused kernel (paper Fig. 6 stage)."""
     tuned = autotune.tune_named("dycore_fused", grid_shape, dtype)
     return snap_ty(tuned.plan.tile[1], grid_shape[1])
+
+
+def snap_ty_kstep(ty: int, ny: int, k_steps: int) -> int:
+    """Legal k-step y-window: a divisor of `ny` that is at least
+    `k_steps * HALO` (each local step consumes a HALO-deep ring of window
+    validity).  Prefers the largest legal divisor <= `ty`; falls back to the
+    smallest legal divisor (possibly ny itself) when `ty` is too small."""
+    lo = max(2, k_steps * HALO)
+    if ny < lo:
+        raise ValueError(
+            f"ny={ny} < k_steps*HALO={lo}: no window can hold the k-step "
+            f"validity front; use a bigger grid or a smaller k_steps")
+    divisors = [d for d in range(lo, ny + 1) if ny % d == 0]
+    at_most = [d for d in divisors if d <= ty]
+    return at_most[-1] if at_most else divisors[0]
+
+
+def plan_tile_kstep(grid_shape, dtype, n_fields: int, k_steps: int,
+                    hier=None) -> int:
+    """Auto-tuned y-window for the k-step kernel.
+
+    The k-step tile space (`tiling.dycore_kstep_spec`) is far tighter than
+    the whole-state one: every grid cell stages a 3-window working slab, all
+    8 pipeline temporaries span it, and the double-buffered `w` prefetch
+    adds two more padded buffers.  After the Pareto pick the window is
+    snapped to a divisor of ny that clears the `ty >= k_steps*HALO`
+    validity-front bound, and the snapped plan is re-checked against the
+    VMEM budget — plans that do not fit the double buffer are rejected
+    loudly instead of silently spilling."""
+    hier = hier or hw.tpu_v5e()
+    spec = tiling.dycore_kstep_spec(n_fields, k_steps)
+    tuned = autotune.tune(spec, grid_shape, dtype, hier=hier)
+    ty = snap_ty_kstep(tuned.plan.tile[1], grid_shape[1], k_steps)
+    plan = tiling.TilePlan(op=spec, grid_shape=tuple(grid_shape),
+                           tile=(grid_shape[0], ty, grid_shape[2]),
+                           dtype=str(jnp.dtype(dtype)))
+    if not plan.fits(hier):
+        raise ValueError(
+            f"k-step tile plan ty={ty} for grid={tuple(grid_shape)} "
+            f"k_steps={k_steps} needs {plan.vmem_bytes / 2**20:.1f} MiB of "
+            f"VMEM (3-window scratch + double-buffered w prefetch) but only "
+            f"{hier.vmem.capacity_bytes / 2**20:.1f} MiB fit; use a smaller "
+            f"k_steps or grid")
+    return ty
 
 
 def plan_tile_whole_state(grid_shape, dtype, n_fields: int) -> int:
@@ -116,3 +169,31 @@ def fused_step_whole_state(fs: jnp.ndarray, wcon: jnp.ndarray,
     return fused_dycore_whole_state_pallas(fs, w, utens, utens_stage,
                                            coeff=coeff, dt=dt, ty=ty,
                                            interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("k_steps", "coeff", "dt", "ty",
+                                             "interpret", "prefetch_w"))
+def fused_step_kstep(fs: jnp.ndarray, wcon: jnp.ndarray,
+                     utens: jnp.ndarray, utens_stage: jnp.ndarray,
+                     k_steps: int = 2, coeff: float = DEFAULT_COEFF,
+                     dt: float = DEFAULT_DT, ty: int = 0,
+                     interpret: bool | None = None,
+                     prefetch_w: bool | None = None):
+    """Advance the whole stacked state `k_steps` timesteps in ONE
+    `pallas_call` (`fused_dycore_kstep_pallas`): the k-step time loop runs
+    inside the kernel, state between local steps stays in VMEM, and the
+    shared staggered-velocity slab is double-buffer-prefetched across
+    y-windows (`prefetch_w`, default on outside interpret mode).
+
+    Shapes as `fused_step_whole_state`; doubly periodic domain.  Returns
+    `(f_new, stage)` after `k_steps` steps."""
+    if interpret is None:
+        interpret = _auto_interpret()
+    nf, _, ny, _ = fs.shape[-4:]
+    ty = (snap_ty_kstep(ty, ny, k_steps) if ty
+          else plan_tile_kstep(fs.shape[-3:], fs.dtype, nf, k_steps))
+    w = wcon + jnp.roll(wcon, -1, axis=-1)   # wcon_i + wcon_{i+1}, periodic
+    return fused_dycore_kstep_pallas(fs, w, utens, utens_stage,
+                                     k_steps=k_steps, coeff=coeff, dt=dt,
+                                     ty=ty, interpret=interpret,
+                                     prefetch_w=prefetch_w)

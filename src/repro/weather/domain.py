@@ -22,14 +22,27 @@ same kernel serves both the periodic single-chip domain and the
 halo-exchanged shard.
 
 `k_steps > 1` is the **communication-avoiding multi-step** mode: the
-stacked exchange is made `k·HALO` deep (`k·HALO + 1` in x, for the
-staggered velocity), `k` whole-state fused steps run back-to-back on the
-padded slab with NO collectives in between, and the interior is cropped
-once at the end — trading redundant halo-ring flops for k× fewer collective
-rounds.  Each local step pollutes at most HALO cells inward from the pad
-edge, so after k steps the garbage front has consumed exactly the pad and
-the interior is untouched (bit-identical arithmetic to k sequential
-exchanged steps).
+stacked exchange is made `k·HALO` deep and the whole round — all k local
+steps — runs as ONE Pallas launch (`fused_dycore_kstep_pallas`) whose
+kernel body iterates the k steps with the prognostic state held in VMEM
+scratch, then the interior is cropped — trading redundant halo-ring flops
+for k× fewer collective rounds AND k× fewer launches/HBM state round-trips.
+Each local step pollutes at most HALO cells inward from the pad edge, so
+after k steps the garbage front has consumed exactly the pad and the
+interior is untouched (fp32-rounding-identical to k sequential exchanged
+steps).  `k_steps="auto"` picks k per (grid, mesh) from the exchange model
+(`core/autotune.py::plan_k_steps`).
+
+The stacked exchange is *ragged*: the 3·nf field operands ship at depth
+`k·HALO` in both directions, while `wcon` — whose x-staggering needs one
+extra column (`w[c] = wcon[c] + wcon[c+1]`) — ships at `k·HALO + 1` in x
+ALONE, instead of forcing the whole stack one column deeper.  Both rides
+share one flattened wire buffer per direction, so the collective count
+stays at one `ppermute` pair per direction per round (4 total).  With
+`exchange_dtype="bfloat16"` the wire buffer is cast to bf16 before the
+`ppermute` pair and restored after — the paper's half-precision mode
+applied to communication: half the wire bytes for bf16 rounding confined
+to the halo ring.
 
 `whole_state=False` keeps the per-field fused pipeline with per-operand
 exchanges (the communication-granularity oracle); `fused=False` keeps the
@@ -49,8 +62,10 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.compat import shard_map as _shard_map
 
+from repro.core import autotune
 from repro.kernels.dycore_fused import ops as fused_ops
-from repro.kernels.dycore_fused.fused import (fused_dycore_pallas,
+from repro.kernels.dycore_fused.fused import (fused_dycore_kstep_pallas,
+                                              fused_dycore_pallas,
                                               fused_dycore_whole_state_pallas)
 from repro.kernels.hdiff import ref as hdiff_ref
 from repro.kernels.vadvc import ref as vadvc_ref
@@ -81,6 +96,55 @@ def _exchange(f: jnp.ndarray, axis_name: str, n: int, halo: int,
         top = jax.lax.ppermute(hi, axis_name, perm=fwd)   # from rank-1
         bot = jax.lax.ppermute(lo, axis_name, perm=bwd)   # from rank+1
     return jnp.concatenate([top, f, bot], axis=dim)
+
+
+def _exchange_packed(parts, axis_name: str, n: int, dim: int,
+                     wire_dtype=None):
+    """Circular halo exchange along `dim` for several tensors with
+    PER-TENSOR halo depths, packed into one flattened wire buffer per
+    direction — exactly one `ppermute` pair regardless of operand count or
+    depth raggedness.  This is how `wcon` ships its extra staggering column
+    without forcing the whole stacked exchange one column deeper.
+
+    `wire_dtype` (e.g. bf16) casts the packed buffer before the `ppermute`
+    pair and restores each tensor's dtype on arrival — half the wire bytes,
+    rounding confined to the received halo ring.
+
+    `parts` is a sequence of `(tensor, depth)` with `depth >= 1`; returns
+    the tensors extended by their own depth on both sides of `dim`.  With
+    n == 1 this degenerates to periodic wrap-padding (no communication,
+    no cast)."""
+    def take(a, sl):
+        idx = [slice(None)] * a.ndim
+        idx[dim] = sl
+        return a[tuple(idx)]
+
+    for _, h in parts:
+        if h < 1:
+            raise ValueError(f"packed-exchange depth {h} must be >= 1")
+    lo_parts = [take(t, slice(0, h)) for t, h in parts]
+    hi_parts = [take(t, slice(-h, None)) for t, h in parts]
+    if n == 1:
+        top, bot = hi_parts, lo_parts
+    else:
+        def pack(xs):
+            buf = jnp.concatenate([x.reshape(-1) for x in xs])
+            return buf.astype(wire_dtype) if wire_dtype is not None else buf
+
+        def unpack(buf):
+            out, off = [], 0
+            for x in lo_parts:
+                seg = buf[off:off + x.size]
+                out.append(seg.reshape(x.shape).astype(x.dtype))
+                off += x.size
+            return out
+
+        fwd = [(i, (i + 1) % n) for i in range(n)]
+        bwd = [(i, (i - 1) % n) for i in range(n)]
+        top = unpack(jax.lax.ppermute(pack(hi_parts), axis_name, perm=fwd))
+        bot = unpack(jax.lax.ppermute(pack(lo_parts), axis_name, perm=bwd))
+    return [jnp.concatenate([t_, t, b_], axis=dim)
+            for (t, _), t_, b_ in zip(parts, top, bot)]
 
 
 def _right_column(wcon: jnp.ndarray, ax_x: str, nx_shards: int) -> jnp.ndarray:
@@ -124,25 +188,38 @@ def make_distributed_step(mesh: Mesh, *, coeff: float = 0.025,
                           dt: float = 0.1, ax_e: str | None = "pod",
                           ax_y: str = "data", ax_x: str = "model",
                           fused: bool = True, whole_state: bool = True,
-                          k_steps: int = 1,
+                          k_steps: int | str = 1,
+                          exchange_dtype=None,
+                          prefetch_w: bool | None = None,
                           interpret: bool | None = None):
     """Build the jitted distributed dycore step for `mesh`.
 
     Sharding: ensemble over `ax_e` (if present in the mesh), y over `ax_y`,
     x over `ax_x`; z always chip-local.  `fused`/`whole_state` select the
     chip-local compute path (module docstring); `k_steps` advances the state
-    by k timesteps per call with ONE stacked halo exchange (the
-    communication-avoiding mode; requires the default fused whole-state
-    path).  The returned `step` always advances `k_steps` timesteps."""
+    by k timesteps per call with ONE stacked halo exchange and ONE Pallas
+    launch per round (the communication-avoiding mode; requires the default
+    fused whole-state path).  `k_steps="auto"` resolves k per (grid, mesh)
+    from the exchange model on the first call (`autotune.plan_k_steps`,
+    clamped to what the VMEM budget fits).  `exchange_dtype` (e.g.
+    "bfloat16") halves the stacked-exchange wire bytes; `prefetch_w`
+    forwards to the k-step kernel's double-buffered `w` DMA pipeline
+    (default: on outside interpret mode).  The returned `step` always
+    advances `k_steps` timesteps."""
     have_e = ax_e is not None and ax_e in mesh.axis_names
     e_spec = ax_e if have_e else None
     spec = P(e_spec, None, ax_y, ax_x)
     ny_shards = mesh.shape[ax_y]
     nx_shards = mesh.shape[ax_x]
-    if k_steps < 1:
-        raise ValueError(f"k_steps={k_steps} must be >= 1")
-    if k_steps > 1 and not (fused and whole_state):
+    auto_k = k_steps == "auto"
+    if not auto_k and (not isinstance(k_steps, int) or k_steps < 1):
+        raise ValueError(f"k_steps={k_steps!r} must be a positive int "
+                         f"or 'auto'")
+    if (auto_k or k_steps > 1) and not (fused and whole_state):
         raise ValueError("k_steps > 1 requires the fused whole-state path")
+    if exchange_dtype is not None and not (fused and whole_state):
+        raise ValueError("exchange_dtype requires the stacked (whole-state) "
+                         "exchange path")
     if interpret is None:
         interpret = _auto_interpret()
     nf = len(PROGNOSTIC)
@@ -184,68 +261,113 @@ def make_distributed_step(mesh: Mesh, *, coeff: float = 0.025,
             new_stage[name] = crop(stage)
         return new_fields, new_stage
 
-    def local_step_whole_state(fields, wcon, tens, stage_tens):
-        e, nz, ly, lx = wcon.shape
-        hy = k_steps * HALO
-        # +1 in x: the staggered velocity is built locally from the padded
-        # raw wcon (w[c] = wcon[c] + wcon[c+1]), which loses the outermost
-        # right column to garbage; one spare column keeps the k-step
-        # validity front clear of the interior.
-        hx = k_steps * HALO + 1
-        if hy > ly or hx > lx:
-            raise ValueError(
-                f"k_steps={k_steps} needs a ({hy}, {hx})-deep halo but the "
-                f"local slab is only ({ly}, {lx}); use fewer shards, a "
-                f"bigger grid, or a smaller k_steps")
-        # ONE stacked exchange per direction covers every operand: fields,
-        # slow tendencies, stage tendencies, raw wcon.
-        stacked = jnp.stack(
-            [fields[n] for n in PROGNOSTIC]
-            + [tens[n] for n in PROGNOSTIC]
-            + [stage_tens[n] for n in PROGNOSTIC] + [wcon], axis=1)
-        g = _exchange(stacked, ax_y, ny_shards, hy, dim=3)
-        g = _exchange(g, ax_x, nx_shards, hx, dim=4)
-        fs, ts, ss = g[:, :nf], g[:, nf:2 * nf], g[:, 2 * nf:3 * nf]
-        # Staggered velocity on the padded slab; the wrapped last column is
-        # garbage (absorbed by the +1 x-halo).
-        wconp = g[:, -1]
-        w = wconp + jnp.roll(wconp, -1, axis=-1)
+    def make_local_step_whole_state(k: int):
+        def local_step_whole_state(fields, wcon, tens, stage_tens):
+            e, nz, ly, lx = wcon.shape
+            hy = k * HALO
+            # The field operands need exactly the k-step stencil reach; only
+            # wcon ships one extra x-column for the staggering
+            # w[c] = wcon[c] + wcon[c+1] (the ragged stacked exchange).
+            hx = k * HALO
+            wx = hx + 1
+            if hy > ly or wx > lx:
+                raise ValueError(
+                    f"k_steps={k} needs a ({hy}, {wx})-deep halo but the "
+                    f"local slab is only ({ly}, {lx}); use fewer shards, a "
+                    f"bigger grid, or a smaller k_steps")
+            # ONE packed exchange per direction covers every operand:
+            # fields, slow tendencies, stage tendencies at the field depth
+            # and raw wcon at its own (deeper-x) depth, sharing the wire.
+            stacked = jnp.stack(
+                [fields[n] for n in PROGNOSTIC]
+                + [tens[n] for n in PROGNOSTIC]
+                + [stage_tens[n] for n in PROGNOSTIC], axis=1)
+            stacked, wconp = _exchange_packed(
+                [(stacked, hy), (wcon, hy)], ax_y, ny_shards, dim=-2,
+                wire_dtype=exchange_dtype)
+            stacked, wconp = _exchange_packed(
+                [(stacked, hx), (wconp, wx)], ax_x, nx_shards, dim=-1,
+                wire_dtype=exchange_dtype)
+            fs, ts, ss = (stacked[:, :nf], stacked[:, nf:2 * nf],
+                          stacked[:, 2 * nf:])
+            # Staggered velocity on the padded slab — valid everywhere: the
+            # +1 wcon column supplies the outermost right neighbor.
+            w = wconp[..., 1:-1] + wconp[..., 2:]
 
-        ty = fused_ops.plan_tile_whole_state(
-            (nz, ly + 2 * hy, lx + 2 * hx), wcon.dtype, nf)
+            grid = (nz, ly + 2 * hy, lx + 2 * hx)
+            if k == 1:
+                ty = fused_ops.plan_tile_whole_state(grid, wcon.dtype, nf)
+                fs, ss = fused_dycore_whole_state_pallas(
+                    fs, w, ts, ss, coeff=coeff, dt=dt, ty=ty,
+                    interpret=interpret)
+            else:
+                # The WHOLE round in one launch: the kernel iterates the k
+                # local steps with state held in VMEM (no scan of launches,
+                # no HBM state round-trips between steps).
+                ty = fused_ops.plan_tile_kstep(grid, wcon.dtype, nf, k)
+                fs, ss = fused_dycore_kstep_pallas(
+                    fs, w, ts, ss, k_steps=k, coeff=coeff, dt=dt, ty=ty,
+                    interpret=interpret, prefetch_w=prefetch_w)
+            crop = lambda a: a[..., hy:hy + ly, hx:hx + lx]
+            new_fields = {n: crop(fs[:, i]) for i, n in enumerate(PROGNOSTIC)}
+            new_stage = {n: crop(ss[:, i]) for i, n in enumerate(PROGNOSTIC)}
+            return new_fields, new_stage
 
-        def body(carry, _):
-            fsk, ssk = carry
-            f_new, s_new = fused_dycore_whole_state_pallas(
-                fsk, w, ts, ssk, coeff=coeff, dt=dt, ty=ty,
-                interpret=interpret)
-            return (f_new, s_new), ()
+        return local_step_whole_state
 
-        (fs, ss), _ = jax.lax.scan(body, (fs, ss), (), length=k_steps)
-        crop = lambda a: a[..., hy:hy + ly, hx:hx + lx]
-        new_fields = {n: crop(fs[:, i]) for i, n in enumerate(PROGNOSTIC)}
-        new_stage = {n: crop(ss[:, i]) for i, n in enumerate(PROGNOSTIC)}
-        return new_fields, new_stage
+    def build(k: int):
+        if fused and whole_state:
+            local_step = make_local_step_whole_state(k)
+        elif fused:
+            local_step = local_step_fused
+        else:
+            local_step = local_step_unfused
+        sharded = _shard_map(
+            local_step, mesh,
+            in_specs=(spec, spec, spec, spec),
+            out_specs=(spec, spec))
 
-    if fused and whole_state:
-        local_step = local_step_whole_state
-    elif fused:
-        local_step = local_step_fused
-    else:
-        local_step = local_step_unfused
-    sharded = _shard_map(
-        local_step, mesh,
-        in_specs=(spec, spec, spec, spec),
-        out_specs=(spec, spec))
+        @jax.jit
+        def step(state: WeatherState) -> WeatherState:
+            new_fields, new_stage = sharded(state.fields, state.wcon,
+                                            state.tens, state.stage_tens)
+            return WeatherState(fields=new_fields, wcon=state.wcon,
+                                tens=state.tens, stage_tens=new_stage)
 
-    @jax.jit
-    def step(state: WeatherState) -> WeatherState:
-        new_fields, new_stage = sharded(state.fields, state.wcon, state.tens,
-                                        state.stage_tens)
-        return WeatherState(fields=new_fields, wcon=state.wcon,
-                            tens=state.tens, stage_tens=new_stage)
+        return step
 
-    return step, spec
+    if not auto_k:
+        return build(k_steps), spec
+
+    # k_steps="auto": the grid is only known from the state, so resolve k
+    # (and build the jitted step) lazily per (grid, dtype) — a cached k for
+    # one grid may be invalid for another.
+    cache: dict = {}
+    last_key: list = []
+
+    def auto_step(state: WeatherState) -> WeatherState:
+        grid = state.grid_shape
+        key = (grid, str(state.wcon.dtype))
+        if key not in cache:
+            k = autotune.plan_k_steps(grid, state.wcon.dtype,
+                                      (ny_shards, nx_shards), n_fields=nf,
+                                      halo=HALO)
+            while k > 1:   # clamp to what the VMEM budget fits
+                try:
+                    fused_ops.plan_tile_kstep(
+                        (grid[0], grid[1] // ny_shards + 2 * k * HALO,
+                         grid[2] // nx_shards + 2 * k * HALO),
+                        state.wcon.dtype, nf, k)
+                    break
+                except ValueError:
+                    k -= 1
+            cache[key] = (k, build(k))
+        last_key[:] = [key]
+        return cache[key][1](state)
+
+    auto_step.resolved_k = lambda: (cache[last_key[0]][0] if last_key
+                                    else None)
+    return auto_step, spec
 
 
 def shard_state(state: WeatherState, mesh: Mesh, spec: P) -> WeatherState:

@@ -130,10 +130,37 @@ def dycore_step(state: WeatherState, coeff: float = 0.025,
 
 def run(state: WeatherState, steps: int, coeff: float = 0.025,
         dt: float = 0.1, fused: bool = True,
-        whole_state: bool = True) -> WeatherState:
+        whole_state: bool = True, k_steps: int = 1,
+        interpret: bool | None = None) -> WeatherState:
+    """Advance `steps` timesteps.  With `k_steps > 1` (requires the fused
+    whole-state path and `steps % k_steps == 0`) the trajectory runs as
+    `steps / k_steps` k-step rounds, each ONE Pallas launch whose kernel
+    iterates the k local steps with the prognostic state held in VMEM
+    (`kernels/dycore_fused/ops.py::fused_step_kstep`) — the single-chip
+    face of the distributed communication-avoiding mode."""
+    if k_steps < 1:
+        raise ValueError(f"k_steps={k_steps} must be >= 1")
+    if k_steps > 1 and not (fused and whole_state):
+        raise ValueError("k_steps > 1 requires the fused whole-state path")
+    if steps % k_steps:
+        raise ValueError(f"steps={steps} must be a multiple of "
+                         f"k_steps={k_steps}")
+    if k_steps > 1:
+        def body(s, _):
+            f_new, stage = fused_ops.fused_step_kstep(
+                stack_state(s.fields), s.wcon, stack_state(s.tens),
+                stack_state(s.stage_tens), k_steps=k_steps, coeff=coeff,
+                dt=dt, interpret=interpret)
+            return WeatherState(fields=unstack_state(f_new), wcon=s.wcon,
+                                tens=s.tens,
+                                stage_tens=unstack_state(stage)), ()
+
+        final, _ = jax.lax.scan(body, state, (), length=steps // k_steps)
+        return final
+
     def body(s, _):
         return dycore_step(s, coeff=coeff, dt=dt, fused=fused,
-                           whole_state=whole_state), ()
+                           whole_state=whole_state, interpret=interpret), ()
 
     final, _ = jax.lax.scan(body, state, (), length=steps)
     return final
