@@ -3,17 +3,19 @@
 Paper §3 (arxiv 2107.08716): the CPU/GPU baseline round-trips every
 intermediate through main memory; the in-fabric pipeline streams each field
 once.  This benchmark reports that claim three ways for one full dycore step
-(4 prognostic fields):
+(4 prognostic fields), going EXCLUSIVELY through the declarative plan API
+(`weather/program.py::compile_dycore`) — exactly ONE `ExecutionPlan` per
+measured configuration, and any use of a deprecated flag-soup entry point
+fails the run (DeprecationWarnings from our shims are promoted to errors):
 
-  * measured wall-clock of `dycore_step` on its three paths — unfused
-    oracle, per-field fused (4 Pallas launches), whole-state fused (ONE
-    launch, shared staggered-velocity slab).  (CPU note: without a TPU the
-    fused kernels run in the Pallas *interpreter*, so their wall-clock here
-    validates the pipelines, it does not demonstrate the speedup — the
-    modeled rows do);
-  * modeled HBM traffic per step from core/memmodel.dycore_step_traffic
-    (array-level reads/writes each pipeline materializes), with the fused
-    y-window halo re-read overhead from the auto-tuned TilePlan;
+  * measured wall-clock of the four execution variants — unfused oracle,
+    per-field fused (4 Pallas launches), whole-state fused (ONE launch),
+    and the k-step round (K timesteps in ONE launch).  (CPU note: without
+    a TPU the fused kernels run in the Pallas *interpreter*, so their
+    wall-clock here validates the pipelines, it does not demonstrate the
+    speedup — the modeled rows do);
+  * modeled HBM traffic per step from the model-grid plan's `report()`
+    (`core/memmodel.dycore_step_traffic` with the plan's auto-tuned tile);
   * modeled TPU time/energy for the fused plan from core/perfmodel, and the
     k-step communication-avoiding exchange model
     (core/memmodel.kstep_exchange_model).
@@ -24,7 +26,8 @@ Emitted metric names (docs/benchmarks.md):
   dycore_fused/model_{fused}                         modeled TPU time
   dycore_fused/kstep_k<k>                            k-step exchange model
 
-Also writes BENCH_dycore.json (walltime, modeled HBM bytes, steps/s) for
+Also writes BENCH_dycore.json (walltime, modeled HBM bytes, steps/s, and
+the distributed k-step plan's `report()` embedded verbatim as "plan") for
 cross-PR perf tracking.
 """
 
@@ -34,15 +37,15 @@ import json
 import os
 import subprocess
 import sys
+import warnings
 
 import jax
-import jax.numpy as jnp
 
 from benchmarks.common import emit, smoke_mode, time_fn, write_json
 from repro.core import hierarchy as hw
 from repro.core import memmodel, perfmodel, tiling, trace_stats
-from repro.kernels.dycore_fused import ops as fused_ops
-from repro.weather import dycore, fields
+from repro.weather import fields
+from repro.weather.program import DycoreProgram, compile_dycore
 
 # Measured grid: deliberately small.  The Pallas interpreter's grid loop
 # carries the full output state per iteration (O(grid_steps x state) copy
@@ -58,38 +61,58 @@ SMOKE_GRID = (4, 16, 16)     # CI smoke job (tiny, interpret mode)
 KSTEP_K = 2                  # depth of the measured/traced k-step round
 
 
-# Structural counts of the distributed k-step round need >1 shard per mesh
-# axis, so they are traced in a subprocess with forced host devices (same
-# trick as tests/test_weather.py) and read back as JSON.
+# Structural counts + plan report of the distributed k-step round need >1
+# shard per mesh axis, so they are produced in a subprocess with forced
+# host devices (same trick as tests/test_program.py) and read back as JSON.
 _STRUCT_SNIPPET = r"""
 import json, jax
 from repro.core import trace_stats
-from repro.weather import domain, fields
+from repro.weather import fields
+from repro.weather.program import DycoreProgram, compile_dycore
 st = fields.initial_state(jax.random.PRNGKey(0), (4, 16, 16), ensemble=1)
 kw = ({"axis_types": (jax.sharding.AxisType.Auto,) * 2}
       if hasattr(jax.sharding, "AxisType") else {})
 mesh = jax.make_mesh((2, 2), ("data", "model"), **kw)
-step, _ = domain.make_distributed_step(mesh, k_steps=%d)
-j = jax.make_jaxpr(step)(st)
-print("STRUCT=" + json.dumps(trace_stats.launch_and_collective_counts(j)))
+plan = compile_dycore(DycoreProgram(grid_shape=(4, 16, 16),
+                                    variant="kstep", k_steps=%d), mesh=mesh)
+rep = plan.report()
+j = jax.make_jaxpr(plan.step)(st)
+counts = trace_stats.assert_plan_structure(j, rep)   # report == trace
+print("STRUCT=" + json.dumps(counts))
+print("PLAN=" + json.dumps(rep))
 """
 
 
-def _kstep_round_structure(k: int) -> dict:
-    """Trace the distributed k-step round on a forced 4-device CPU mesh and
-    return {"pallas_call": ..., "ppermute": ...} per round."""
+def _kstep_round_structure(k: int) -> tuple:
+    """Trace the distributed k-step plan on a forced 4-device CPU mesh and
+    return ({"pallas_call": ..., "ppermute": ...}, plan.report())."""
     env = {k_: v for k_, v in os.environ.items() if k_ != "XLA_FLAGS"}
     env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
     env.setdefault("PYTHONPATH", "src")
     r = subprocess.run([sys.executable, "-c", _STRUCT_SNIPPET % k], env=env,
                        capture_output=True, text=True, timeout=600)
+    struct = plan_rep = None
     for line in r.stdout.splitlines():
         if line.startswith("STRUCT="):
-            return json.loads(line[len("STRUCT="):])
-    raise RuntimeError(f"k-step structure trace failed: {r.stderr[-2000:]}")
+            struct = json.loads(line[len("STRUCT="):])
+        elif line.startswith("PLAN="):
+            plan_rep = json.loads(line[len("PLAN="):])
+    if struct is None or plan_rep is None:
+        raise RuntimeError(f"k-step structure trace failed: "
+                           f"{r.stderr[-2000:]}")
+    return struct, plan_rep
 
 
 def run():
+    # Any deprecated flag-soup call (our shims name compile_dycore in the
+    # warning) fails the benchmark loudly: every entry point below must go
+    # through an ExecutionPlan.
+    with warnings.catch_warnings():
+        warnings.filterwarnings("error", message=r".*compile_dycore.*")
+        _run()
+
+
+def _run():
     smoke = smoke_mode()
     grid = SMOKE_GRID if smoke else GRID
     iters, warmup = (1, 1) if smoke else (7, 2)
@@ -100,22 +123,30 @@ def run():
     interp_note = ("" if backend == "tpu"
                    else " (Pallas interpreter — validates, not representative)")
 
+    # ONE ExecutionPlan per measured configuration.
+    def plan_for(variant, k=1):
+        return compile_dycore(DycoreProgram(
+            grid_shape=grid, ensemble=ENSEMBLE, variant=variant, k_steps=k))
+
+    plans = {"unfused": plan_for("unfused"),
+             "fused_per_field": plan_for("per_field"),
+             "fused_whole_state": plan_for("whole_state"),
+             "kstep_round": plan_for("kstep", k=KSTEP_K)}
+
     walltime = {}
-    t_unfused = time_fn(lambda s: dycore.dycore_step(s, fused=False), st,
-                        iters=iters, warmup=warmup)
+    t_unfused = time_fn(plans["unfused"].step, st, iters=iters,
+                        warmup=warmup)
     walltime["unfused"] = t_unfused
     emit("dycore_fused/walltime_unfused", t_unfused,
          f"grid={grid} ensemble={ENSEMBLE}")
-    t_fused = time_fn(
-        lambda s: dycore.dycore_step(s, fused=True, whole_state=False), st,
-        iters=iters, warmup=warmup)
+    t_fused = time_fn(plans["fused_per_field"].step, st, iters=iters,
+                      warmup=warmup)
     walltime["fused_per_field"] = t_fused
     emit("dycore_fused/walltime_fused", t_fused,
          f"grid={grid} ensemble={ENSEMBLE} backend={backend}"
          f" 4 launches{interp_note}")
-    t_whole = time_fn(
-        lambda s: dycore.dycore_step(s, fused=True, whole_state=True), st,
-        iters=iters, warmup=warmup)
+    t_whole = time_fn(plans["fused_whole_state"].step, st, iters=iters,
+                      warmup=warmup)
     walltime["fused_whole_state"] = t_whole
     emit("dycore_fused/walltime_whole_state", t_whole,
          f"grid={grid} ensemble={ENSEMBLE} backend={backend}"
@@ -123,11 +154,10 @@ def run():
          f"vs_per_field={t_fused / max(t_whole, 1e-9):.2f}x")
     # The k-step round: KSTEP_K timesteps in ONE launch (in-kernel scan,
     # state in VMEM between local steps) vs KSTEP_K whole-state launches.
-    t_kstep = time_fn(
-        lambda s: dycore.run(s, steps=KSTEP_K, k_steps=KSTEP_K), st,
-        iters=iters, warmup=warmup)
+    t_kstep = time_fn(plans["kstep_round"].step, st, iters=iters,
+                      warmup=warmup)
     t_kseq = time_fn(
-        lambda s: dycore.run(s, steps=KSTEP_K), st,
+        lambda s: plans["fused_whole_state"].run(s, KSTEP_K), st,
         iters=iters, warmup=warmup)
     walltime["kstep_round"] = t_kstep
     walltime["kstep_scan_of_launches"] = t_kseq
@@ -135,14 +165,18 @@ def run():
          f"grid={grid} k={KSTEP_K} backend={backend} 1 launch/round"
          f"{interp_note} vs_scan={t_kseq / max(t_kstep, 1e-9):.2f}x")
 
-    # Modeled HBM traffic at the paper's domain, auto-tuned fused window.
+    # Modeled HBM traffic at the paper's domain: ONE model-grid plan per
+    # dtype; its report() embeds the memmodel accounting at the plan's own
+    # auto-tuned tile.
     model_grid = grid if smoke else MODEL_GRID
     traffic = {}
     for dtype in ("float32", "bfloat16"):
-        ty = fused_ops.plan_tile(model_grid, jnp.dtype(dtype))
-        t = memmodel.dycore_step_traffic(model_grid, dtype,
-                                         n_fields=n_fields, ty=ty,
-                                         k_steps=KSTEP_K)
+        model_plan = compile_dycore(DycoreProgram(
+            grid_shape=model_grid, ensemble=ENSEMBLE, dtype=dtype,
+            variant="kstep", k_steps=KSTEP_K))
+        rep = model_plan.report()
+        t = rep["traffic"]
+        ty = rep["tile"]["ty"]
         traffic[dtype] = {
             "unfused": t["unfused"]["total"],
             "fused_per_field": t["fused"]["total"],
@@ -193,7 +227,7 @@ def run():
              f"bottleneck={est.bottleneck} gflops={est.gflops:.0f} "
              f"vmem={100.0 * plan.vmem_bytes / hw.tpu_v5e().vmem.capacity_bytes:.0f}%")
 
-    # Communication-avoiding k-step exchange model (weather/domain.py).
+    # Communication-avoiding k-step exchange model (weather/program.py).
     kstep = {}
     for k in (1, 2, 4):
         try:
@@ -210,17 +244,22 @@ def run():
     # Structural counts of the k-step round — the regression guard that is
     # immune to interpreter-walltime noise: the single-chip round must be
     # ONE pallas_call; the distributed round additionally one ppermute pair
-    # per mesh direction (traced on a forced 4-device mesh in a subprocess).
+    # per mesh direction — and the plan's own report() must agree with the
+    # trace (asserted in the subprocess via assert_plan_structure).
+    local_kplan = compile_dycore(DycoreProgram(
+        grid_shape=SMOKE_GRID, variant="kstep", k_steps=KSTEP_K),
+        interpret=True)
     st_small = fields.initial_state(jax.random.PRNGKey(0), SMOKE_GRID)
-    j = jax.make_jaxpr(
-        lambda s: dycore.run(s, steps=KSTEP_K, k_steps=KSTEP_K,
-                             interpret=True))(st_small)
+    j = jax.make_jaxpr(lambda s: local_kplan.run(s, KSTEP_K))(st_small)
     calls_local = trace_stats.count_primitive(j, "pallas_call")
     try:
-        struct = _kstep_round_structure(KSTEP_K)
+        struct, plan_rep = _kstep_round_structure(KSTEP_K)
+        plan_source = "distributed_subprocess"
     except (RuntimeError, subprocess.SubprocessError) as e:
         print(f"# distributed structure trace unavailable: {e}")
         struct = {"pallas_call": calls_local, "ppermute": None}
+        plan_rep = local_kplan.report()
+        plan_source = "local_fallback"
     calls_round = max(calls_local, struct["pallas_call"])
     emit("dycore_fused/kstep_structure", 0.0,
          f"pallas_calls_per_round={calls_round} "
@@ -234,6 +273,16 @@ def run():
         "k_steps": KSTEP_K,
         "pallas_calls_per_round": calls_round,
         "collectives_per_round": struct["ppermute"],
+        # The distributed k-step plan's full report(), embedded VERBATIM —
+        # variant, tile, k_steps, exchange schedule (incl. wire dtype),
+        # structural counts, modeled traffic.  plan_source says whether it
+        # really came from the forced-4-device trace or the single-chip
+        # fallback (exchange=None) when that subprocess was unavailable —
+        # cross-PR diffs must not mix the two silently.
+        "plan": plan_rep,
+        "plan_source": plan_source,
+        # One report per measured single-chip configuration.
+        "plans": {name: p.report() for name, p in plans.items()},
         "walltime_us": walltime,
         # steps_per_s counts SIMULATED timesteps: the kstep entries' walltime
         # covers a whole KSTEP_K-step round, the others a single step.

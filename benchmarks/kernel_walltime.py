@@ -31,10 +31,12 @@ def run():
     emit("wall/vadvc_jnp_16x32x32",
          time_fn(jax.jit(vref.vadvc), us, wcon, up, ut, uts))
 
-    # weather dycore step
-    from repro.weather import dycore, fields
+    # weather dycore step — ONE ExecutionPlan for the configuration
+    from repro.weather import fields
+    from repro.weather.program import DycoreProgram, compile_dycore
     st = fields.initial_state(jax.random.PRNGKey(0), (16, 64, 64))
-    emit("wall/dycore_step_16x64x64", time_fn(dycore.dycore_step, st))
+    plan = compile_dycore(DycoreProgram(grid_shape=(16, 64, 64)))
+    emit("wall/dycore_step_16x64x64", time_fn(plan.step, st))
 
     # reduced-config LM train + decode
     from repro.configs import registry

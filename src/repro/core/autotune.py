@@ -168,3 +168,34 @@ def plan_k_steps(grid_shape: Sequence[int], dtype, mesh_shape,
         if best_cost is None or cost < best_cost:
             best_k, best_cost = k, cost
     return best_k
+
+
+def resolve_k_steps(grid_shape: Sequence[int], dtype, mesh_shape,
+                    *, n_fields: int = 4, halo: int = 2, max_k: int = 8,
+                    hier: Optional[hw.Hierarchy] = None,
+                    latency_s: float = COLLECTIVE_LATENCY_S,
+                    utilization: float = 0.85) -> int:
+    """`plan_k_steps` clamped to what the VMEM budget actually fits.
+
+    The exchange model's argmin can ask for a k whose 3-window working
+    slab + double-buffered `w` prefetch overflow VMEM on the padded local
+    grid; this resolver (the planner's steps-per-round entry,
+    `weather/program.py::compile_dycore(k_steps="auto")`) walks k down
+    until `plan_tile_kstep` accepts the plan."""
+    k = plan_k_steps(grid_shape, dtype, mesh_shape, n_fields=n_fields,
+                     halo=halo, max_k=max_k, hier=hier, latency_s=latency_s,
+                     utilization=utilization)
+    # Local import: the kernel package imports this module at load time.
+    from repro.kernels.dycore_fused import ops as fused_ops
+
+    nz, ny, nx = (int(g) for g in grid_shape)
+    py, px = (int(s) for s in mesh_shape)
+    while k > 1:
+        try:
+            fused_ops.plan_tile_kstep(
+                (nz, ny // py + 2 * k * halo, nx // px + 2 * k * halo),
+                dtype, n_fields, k)
+            break
+        except ValueError:
+            k -= 1
+    return k

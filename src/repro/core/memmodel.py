@@ -233,9 +233,12 @@ def kstep_exchange_model(grid_shape, dtype, *, n_fields: int = 4,
     """Communication-avoiding k-step accounting (weather/domain.py
     `k_steps`): one RAGGED stacked halo exchange — the `3*n_fields` field
     operands at depth `k*halo` in both directions, `wcon` alone one column
-    deeper in x for its staggering (`w[c] = wcon[c] + wcon[c+1]`) — buys k
-    fused steps in one launch with no collectives, at the price of
-    redundant halo-ring compute.
+    deeper in x for its staggering (`w[c] = wcon[c] + wcon[c+1]`), and
+    ASYMMETRICALLY so: the extra column is needed from the RIGHT neighbor
+    only, so wcon's x-ride is `k*halo` toward the left pad and `k*halo+1`
+    toward the right (the old symmetric `k*halo+1` shipped one never-read
+    column per round) — buys k fused steps in one launch with no
+    collectives, at the price of redundant halo-ring compute.
 
     `exchange_dtype` models the wire cast (`make_distributed_step(...,
     exchange_dtype="bfloat16")`): halo bytes are counted at the wire dtype
@@ -247,7 +250,8 @@ def kstep_exchange_model(grid_shape, dtype, *, n_fields: int = 4,
       bytes_sequential — bytes ppermuted by k rounds of the depth-(halo,
                          halo / halo+1 for wcon) exchange (the k_steps=1
                          path at the same wire dtype)
-      bytes_wcon       — wcon's share of bytes_kstep (the ragged ride)
+      bytes_wcon       — wcon's share of bytes_kstep (the ragged,
+                         right-only-staggered ride)
       rounds_kstep / rounds_sequential — collective rounds (2 vs 2k)
       redundant_flops_frac — extra stencil work on the halo rings relative
                              to the interior (grows with k; the knob's cost)
@@ -269,7 +273,12 @@ def kstep_exchange_model(grid_shape, dtype, *, n_fields: int = 4,
         """(field bytes, wcon bytes) of one depth-kk packed exchange."""
         dy, dx = kk * halo, kk * halo
         fields_b = exchanged(3 * n_fields, dy, dx)
-        wcon_b = exchanged(1, dy, dx + 1)     # the +1 staggering column
+        # wcon's ragged ride: symmetric dy in y; in x the +1 staggering
+        # column is RIGHT-only — depth dx toward the left pad, dx+1 toward
+        # the right — so the x legs ship (2*dx + 1) columns, not 2*(dx+1).
+        wcon_y = 2 * nz * dy * lx * b
+        wcon_x = nz * (2 * dx + 1) * (ly + 2 * dy) * b
+        wcon_b = int(wcon_y + wcon_x)
         return fields_b, wcon_b
 
     hy, hx = k * halo, k * halo

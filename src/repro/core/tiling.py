@@ -243,6 +243,20 @@ class TilePlan:
     def flops_total(self) -> float:
         return self.op.flops_per_point * math.prod(self.grid_shape)
 
+    def describe(self) -> dict:
+        """JSON-serializable summary — embedded by
+        `weather/program.py::ExecutionPlan.report()` and hence by the
+        `BENCH_dycore.json` plan block."""
+        return {"op": self.op.name,
+                "grid": list(self.grid_shape),
+                "tile": list(self.tile),
+                "padded_tile": list(self.padded_tile),
+                "dtype": self.dtype,
+                "vmem_bytes": int(self.vmem_bytes),
+                "lane_aligned": bool(self.lane_aligned),
+                "hbm_bytes_total": int(self.hbm_bytes_total),
+                "halo_overhead": float(self.halo_overhead)}
+
 
 def candidate_tiles(op: OpSpec,
                     grid_shape: Sequence[int],

@@ -66,6 +66,22 @@ def assert_kstep_structure(jaxpr, *, pallas_calls: int = 1,
     return counts
 
 
+def assert_plan_structure(jaxpr, report: Dict[str, Any]) -> Dict[str, int]:
+    """Assert a traced plan round matches the plan's OWN `report()`: the
+    modeled `pallas_calls_per_round` / `collectives_per_round` must be the
+    program text's actual primitive counts (a plan whose report lies about
+    its structure is a planner bug).  Returns the counts."""
+    counts = launch_and_collective_counts(jaxpr)
+    for key, prim in (("pallas_calls_per_round", "pallas_call"),
+                      ("collectives_per_round", "ppermute")):
+        want = report.get(key)
+        if want is not None and counts[prim] != want:
+            raise AssertionError(
+                f"plan.report()[{key!r}] = {want} but the traced round "
+                f"contains {counts[prim]} {prim} eqns")
+    return counts
+
+
 def primitive_counts(jaxpr) -> Dict[str, int]:
     """Histogram of every primitive in `jaxpr` (recursive, scan bodies
     counted once)."""

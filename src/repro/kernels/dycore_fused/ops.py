@@ -106,6 +106,25 @@ def plan_tile_kstep(grid_shape, dtype, n_fields: int, k_steps: int,
     return ty
 
 
+def resolve_tile(variant: str, grid_shape, dtype, n_fields: int,
+                 k_steps: int = 1, hier=None):
+    """ONE tile resolver for every fused-dycore execution variant — the
+    planner entry `weather/program.py::compile_dycore` calls instead of
+    picking among the three `plan_tile*` paths itself.  Returns the
+    auto-tuned, snapped y-window, or None for the unfused oracle (which
+    has no Pallas tile to plan)."""
+    if variant == "unfused":
+        return None
+    if variant == "per_field":
+        return plan_tile(grid_shape, dtype)
+    if variant == "whole_state":
+        return plan_tile_whole_state(grid_shape, dtype, n_fields)
+    if variant == "kstep":
+        return plan_tile_kstep(grid_shape, dtype, n_fields, k_steps,
+                               hier=hier)
+    raise ValueError(f"unknown dycore variant {variant!r}")
+
+
 def plan_tile_whole_state(grid_shape, dtype, n_fields: int) -> int:
     """Auto-tuned y-window for the whole-state kernel.
 

@@ -1,4 +1,4 @@
-"""Distributed dycore: spatial domain decomposition + halo exchange.
+"""Distributed dycore primitives: halo exchange + sharding utilities.
 
 This is NERO's scale-out story made real (paper §5: "HBM provides an
 attractive solution for scale-out computation" with one memory channel per
@@ -8,69 +8,43 @@ communication is a circular halo exchange (`jax.lax.ppermute` over the mesh
 axes).  Vertical columns are never split (vadvc's z dependency), matching
 the paper's PE design.
 
-With `fused=True, whole_state=True` (default) the communication is **one
-stacked halo exchange**: every exchanged operand — all prognostic fields,
-their slow tendencies, the stage tendencies, and the raw `wcon` — is
-concatenated into a single (E, 3·nf+1, nz, ly, lx) tensor, so each
-direction costs exactly one `ppermute` pair per round instead of one pair
-per field per input.  The staggered velocity is then built *locally* from
-the padded `wcon` (its wrapped last column is garbage, absorbed by one
-extra column of x-halo), the single-launch whole-state Pallas kernel runs
-on the padded slab, and the interior is cropped.  Wrap-around garbage from
-the kernel's periodic windows only ever lands in the cropped ring, so the
-same kernel serves both the periodic single-chip domain and the
-halo-exchanged shard.
+The strategy that *uses* these primitives — which variant runs chip-locally,
+how deep each operand's halo is, what rides the wire at which dtype — is
+resolved by the plan API (`weather/program.py::compile_dycore`); the
+distributed lowering there composes:
 
-`k_steps > 1` is the **communication-avoiding multi-step** mode: the
-stacked exchange is made `k·HALO` deep and the whole round — all k local
-steps — runs as ONE Pallas launch (`fused_dycore_kstep_pallas`) whose
-kernel body iterates the k steps with the prognostic state held in VMEM
-scratch, then the interior is cropped — trading redundant halo-ring flops
-for k× fewer collective rounds AND k× fewer launches/HBM state round-trips.
-Each local step pollutes at most HALO cells inward from the pad edge, so
-after k steps the garbage front has consumed exactly the pad and the
-interior is untouched (fp32-rounding-identical to k sequential exchanged
-steps).  `k_steps="auto"` picks k per (grid, mesh) from the exchange model
-(`core/autotune.py::plan_k_steps`).
+* `_exchange` — per-operand circular exchange (the per-field paths);
+* `_exchange_packed` — the stacked RAGGED exchange: several tensors with
+  PER-TENSOR (and per-SIDE) halo depths share one flattened wire buffer
+  per direction, so the collective count stays one `ppermute` pair per
+  mesh direction per round no matter how many operands ride or how ragged
+  their depths are.  `wcon` ships its `+1` staggering x-column to the
+  RIGHT side only (`w[c] = wcon[c] + wcon[c+1]` needs the right neighbor,
+  never the left — the left pad's extra column was provably unread);
+* `_staggered_w` / `_right_column` — the x-staggered velocity build;
+* `_local_hdiff` / `_local_vadvc` — exchanged per-kernel local stencils
+  (the unfused oracle's distributed form);
+* `shard_state` — placing a `WeatherState` onto the mesh.
 
-The stacked exchange is *ragged*: the 3·nf field operands ship at depth
-`k·HALO` in both directions, while `wcon` — whose x-staggering needs one
-extra column (`w[c] = wcon[c] + wcon[c+1]`) — ships at `k·HALO + 1` in x
-ALONE, instead of forcing the whole stack one column deeper.  Both rides
-share one flattened wire buffer per direction, so the collective count
-stays at one `ppermute` pair per direction per round (4 total).  With
-`exchange_dtype="bfloat16"` the wire buffer is cast to bf16 before the
-`ppermute` pair and restored after — the paper's half-precision mode
-applied to communication: half the wire bytes for bf16 rounding confined
-to the halo ring.
-
-`whole_state=False` keeps the per-field fused pipeline with per-operand
-exchanges (the communication-granularity oracle); `fused=False` keeps the
-original per-kernel composition.
-
-Ensemble members ride the "pod" axis of the multi-pod mesh: weather centers
-run ~50-member ensembles, which is exactly a data-parallel outer axis — see
-docs/architecture.md ("Scale-out: domain decomposition and ensemble pods")
-for a worked example.
+`make_distributed_step(...)` is the LEGACY flag-soup entry point, kept as a
+thin deprecated shim over `compile_dycore` (bit-identical results) so the
+historical equivalence tests keep their meaning.  Ensemble members ride the
+"pod" axis of the multi-pod mesh — see docs/architecture.md ("Scale-out:
+domain decomposition and ensemble pods").
 """
 
 from __future__ import annotations
+
+import warnings
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.compat import shard_map as _shard_map
-
-from repro.core import autotune
-from repro.kernels.dycore_fused import ops as fused_ops
-from repro.kernels.dycore_fused.fused import (fused_dycore_kstep_pallas,
-                                              fused_dycore_pallas,
-                                              fused_dycore_whole_state_pallas)
 from repro.kernels.hdiff import ref as hdiff_ref
 from repro.kernels.vadvc import ref as vadvc_ref
-from repro.weather.fields import PROGNOSTIC, WeatherState
-from repro.weather.dycore import HALO, _auto_interpret
+from repro.weather.fields import WeatherState
+from repro.weather.dycore import HALO
 
 
 def _exchange(f: jnp.ndarray, axis_name: str, n: int, halo: int,
@@ -101,29 +75,43 @@ def _exchange(f: jnp.ndarray, axis_name: str, n: int, halo: int,
 def _exchange_packed(parts, axis_name: str, n: int, dim: int,
                      wire_dtype=None):
     """Circular halo exchange along `dim` for several tensors with
-    PER-TENSOR halo depths, packed into one flattened wire buffer per
-    direction — exactly one `ppermute` pair regardless of operand count or
-    depth raggedness.  This is how `wcon` ships its extra staggering column
-    without forcing the whole stacked exchange one column deeper.
+    PER-TENSOR — and per-SIDE — halo depths, packed into one flattened
+    wire buffer per direction: exactly one `ppermute` pair regardless of
+    operand count or depth raggedness.
+
+    `parts` is a sequence of `(tensor, depth)` where `depth` is either an
+    int (symmetric) or a `(lo_depth, hi_depth)` pair: the tensor comes
+    back extended by `lo_depth` on the LOW side of `dim` (received from
+    the lower-index neighbor) and `hi_depth` on the HIGH side (received
+    from the upper-index neighbor).  This is how `wcon` ships its extra
+    staggering column to the right side ONLY — `(k·HALO, k·HALO + 1)` —
+    without forcing the whole stacked exchange one column deeper, and
+    without wasting a never-read column on the left pad.
 
     `wire_dtype` (e.g. bf16) casts the packed buffer before the `ppermute`
-    pair and restores each tensor's dtype on arrival — half the wire bytes,
-    rounding confined to the received halo ring.
+    pair and restores each tensor's dtype on arrival — half the wire
+    bytes, rounding confined to the received halo ring.
 
-    `parts` is a sequence of `(tensor, depth)` with `depth >= 1`; returns
-    the tensors extended by their own depth on both sides of `dim`.  With
-    n == 1 this degenerates to periodic wrap-padding (no communication,
-    no cast)."""
+    With n == 1 this degenerates to periodic wrap-padding (no
+    communication, no cast)."""
     def take(a, sl):
         idx = [slice(None)] * a.ndim
         idx[dim] = sl
         return a[tuple(idx)]
 
+    depths = []
     for _, h in parts:
-        if h < 1:
-            raise ValueError(f"packed-exchange depth {h} must be >= 1")
-    lo_parts = [take(t, slice(0, h)) for t, h in parts]
-    hi_parts = [take(t, slice(-h, None)) for t, h in parts]
+        lo_h, hi_h = (h, h) if isinstance(h, int) else h
+        if lo_h < 1 or hi_h < 1:
+            raise ValueError(f"packed-exchange depth {h!r} must be >= 1 "
+                             f"on both sides")
+        depths.append((lo_h, hi_h))
+    # The LOW pad is the lower neighbor's LAST lo_h rows (forward ride);
+    # the HIGH pad is the upper neighbor's FIRST hi_h rows (backward ride).
+    hi_parts = [take(t, slice(-lo_h, None))
+                for (t, _), (lo_h, _) in zip(parts, depths)]
+    lo_parts = [take(t, slice(0, hi_h))
+                for (t, _), (_, hi_h) in zip(parts, depths)]
     if n == 1:
         top, bot = hi_parts, lo_parts
     else:
@@ -131,9 +119,9 @@ def _exchange_packed(parts, axis_name: str, n: int, dim: int,
             buf = jnp.concatenate([x.reshape(-1) for x in xs])
             return buf.astype(wire_dtype) if wire_dtype is not None else buf
 
-        def unpack(buf):
+        def unpack(buf, like):
             out, off = [], 0
-            for x in lo_parts:
+            for x in like:
                 seg = buf[off:off + x.size]
                 out.append(seg.reshape(x.shape).astype(x.dtype))
                 off += x.size
@@ -141,8 +129,10 @@ def _exchange_packed(parts, axis_name: str, n: int, dim: int,
 
         fwd = [(i, (i + 1) % n) for i in range(n)]
         bwd = [(i, (i - 1) % n) for i in range(n)]
-        top = unpack(jax.lax.ppermute(pack(hi_parts), axis_name, perm=fwd))
-        bot = unpack(jax.lax.ppermute(pack(lo_parts), axis_name, perm=bwd))
+        top = unpack(jax.lax.ppermute(pack(hi_parts), axis_name, perm=fwd),
+                     hi_parts)
+        bot = unpack(jax.lax.ppermute(pack(lo_parts), axis_name, perm=bwd),
+                     lo_parts)
     return [jnp.concatenate([t_, t, b_], axis=dim)
             for (t, _), t_, b_ in zip(parts, top, bot)]
 
@@ -192,25 +182,23 @@ def make_distributed_step(mesh: Mesh, *, coeff: float = 0.025,
                           exchange_dtype=None,
                           prefetch_w: bool | None = None,
                           interpret: bool | None = None):
-    """Build the jitted distributed dycore step for `mesh`.
+    """DEPRECATED shim: build the distributed dycore step from flags.
 
-    Sharding: ensemble over `ax_e` (if present in the mesh), y over `ax_y`,
-    x over `ax_x`; z always chip-local.  `fused`/`whole_state` select the
-    chip-local compute path (module docstring); `k_steps` advances the state
-    by k timesteps per call with ONE stacked halo exchange and ONE Pallas
-    launch per round (the communication-avoiding mode; requires the default
-    fused whole-state path).  `k_steps="auto"` resolves k per (grid, mesh)
-    from the exchange model on the first call (`autotune.plan_k_steps`,
-    clamped to what the VMEM budget fits).  `exchange_dtype` (e.g.
-    "bfloat16") halves the stacked-exchange wire bytes; `prefetch_w`
-    forwards to the k-step kernel's double-buffered `w` DMA pipeline
-    (default: on outside interpret mode).  The returned `step` always
-    advances `k_steps` timesteps."""
-    have_e = ax_e is not None and ax_e in mesh.axis_names
-    e_spec = ax_e if have_e else None
-    spec = P(e_spec, None, ax_y, ax_x)
-    ny_shards = mesh.shape[ax_y]
-    nx_shards = mesh.shape[ax_x]
+    The flags map onto a `DycoreProgram` + `compile_dycore(..., mesh=mesh)`
+    on the first call (the grid is only known from the state), cached per
+    (grid, dtype); results are bit-identical to the equivalent plan's
+    `step`.  The returned `step` advances `k_steps` timesteps per call and
+    exposes `step.resolved_k()` (the planner's k after a `k_steps="auto"`
+    resolution).  New code should call `compile_dycore` directly — the
+    plan also exposes `run` (ragged tails allowed) and `report`."""
+    warnings.warn(
+        "weather.domain.make_distributed_step(fused=..., whole_state=..., "
+        "...) is deprecated: build a DycoreProgram and call "
+        "repro.weather.program.compile_dycore(program, mesh=mesh) — the "
+        "ExecutionPlan resolves variant/tile/k-step/exchange once and "
+        "exposes step()/run()/report().", DeprecationWarning, stacklevel=2)
+    from repro.weather.program import DycoreProgram, compile_dycore
+
     auto_k = k_steps == "auto"
     if not auto_k and (not isinstance(k_steps, int) or k_steps < 1):
         raise ValueError(f"k_steps={k_steps!r} must be a positive int "
@@ -220,154 +208,37 @@ def make_distributed_step(mesh: Mesh, *, coeff: float = 0.025,
     if exchange_dtype is not None and not (fused and whole_state):
         raise ValueError("exchange_dtype requires the stacked (whole-state) "
                          "exchange path")
-    if interpret is None:
-        interpret = _auto_interpret()
-    nf = len(PROGNOSTIC)
+    have_e = ax_e is not None and ax_e in mesh.axis_names
+    spec = P(ax_e if have_e else None, None, ax_y, ax_x)
+    if fused and whole_state:
+        variant, k = "auto", k_steps
+    elif fused:
+        variant, k = "per_field", 1
+    else:
+        variant, k = "unfused", 1
 
-    def local_step_unfused(fields, wcon, tens, stage_tens):
-        new_fields, new_stage = {}, {}
-        for name in PROGNOSTIC:
-            f = fields[name]
-            stage = _local_vadvc(f, wcon, f, tens[name], stage_tens[name],
-                                 ax_x, nx_shards)
-            f = f + dt * stage
-            f = _local_hdiff(f, coeff, ax_y, ax_x, ny_shards, nx_shards)
-            new_fields[name] = f
-            new_stage[name] = stage
-        return new_fields, new_stage
-
-    def local_step_fused(fields, wcon, tens, stage_tens):
-        e, nz, ly, lx = wcon.shape
-
-        def pad(a):
-            a = _exchange(a, ax_y, ny_shards, HALO, dim=2)
-            return _exchange(a, ax_x, nx_shards, HALO, dim=3)
-
-        # One exchange of the pre-combined staggered velocity serves all
-        # fields; the per-field inputs are exchanged so the halo ring's
-        # vadvc tendency is recomputed locally (cheaper than a second
-        # exchange of the updated field mid-pipeline).
-        wp = pad(_staggered_w(wcon, ax_x, nx_shards))
-        ty = fused_ops.plan_tile((nz, ly + 2 * HALO, lx + 2 * HALO),
-                                 wcon.dtype)
-        crop = lambda a: a[:, :, HALO:HALO + ly, HALO:HALO + lx]
-        new_fields, new_stage = {}, {}
-        for name in PROGNOSTIC:
-            f_new, stage = fused_dycore_pallas(
-                pad(fields[name]), wp, pad(tens[name]),
-                pad(stage_tens[name]), coeff=coeff, dt=dt, ty=ty,
-                interpret=interpret)
-            new_fields[name] = crop(f_new)
-            new_stage[name] = crop(stage)
-        return new_fields, new_stage
-
-    def make_local_step_whole_state(k: int):
-        def local_step_whole_state(fields, wcon, tens, stage_tens):
-            e, nz, ly, lx = wcon.shape
-            hy = k * HALO
-            # The field operands need exactly the k-step stencil reach; only
-            # wcon ships one extra x-column for the staggering
-            # w[c] = wcon[c] + wcon[c+1] (the ragged stacked exchange).
-            hx = k * HALO
-            wx = hx + 1
-            if hy > ly or wx > lx:
-                raise ValueError(
-                    f"k_steps={k} needs a ({hy}, {wx})-deep halo but the "
-                    f"local slab is only ({ly}, {lx}); use fewer shards, a "
-                    f"bigger grid, or a smaller k_steps")
-            # ONE packed exchange per direction covers every operand:
-            # fields, slow tendencies, stage tendencies at the field depth
-            # and raw wcon at its own (deeper-x) depth, sharing the wire.
-            stacked = jnp.stack(
-                [fields[n] for n in PROGNOSTIC]
-                + [tens[n] for n in PROGNOSTIC]
-                + [stage_tens[n] for n in PROGNOSTIC], axis=1)
-            stacked, wconp = _exchange_packed(
-                [(stacked, hy), (wcon, hy)], ax_y, ny_shards, dim=-2,
-                wire_dtype=exchange_dtype)
-            stacked, wconp = _exchange_packed(
-                [(stacked, hx), (wconp, wx)], ax_x, nx_shards, dim=-1,
-                wire_dtype=exchange_dtype)
-            fs, ts, ss = (stacked[:, :nf], stacked[:, nf:2 * nf],
-                          stacked[:, 2 * nf:])
-            # Staggered velocity on the padded slab — valid everywhere: the
-            # +1 wcon column supplies the outermost right neighbor.
-            w = wconp[..., 1:-1] + wconp[..., 2:]
-
-            grid = (nz, ly + 2 * hy, lx + 2 * hx)
-            if k == 1:
-                ty = fused_ops.plan_tile_whole_state(grid, wcon.dtype, nf)
-                fs, ss = fused_dycore_whole_state_pallas(
-                    fs, w, ts, ss, coeff=coeff, dt=dt, ty=ty,
-                    interpret=interpret)
-            else:
-                # The WHOLE round in one launch: the kernel iterates the k
-                # local steps with state held in VMEM (no scan of launches,
-                # no HBM state round-trips between steps).
-                ty = fused_ops.plan_tile_kstep(grid, wcon.dtype, nf, k)
-                fs, ss = fused_dycore_kstep_pallas(
-                    fs, w, ts, ss, k_steps=k, coeff=coeff, dt=dt, ty=ty,
-                    interpret=interpret, prefetch_w=prefetch_w)
-            crop = lambda a: a[..., hy:hy + ly, hx:hx + lx]
-            new_fields = {n: crop(fs[:, i]) for i, n in enumerate(PROGNOSTIC)}
-            new_stage = {n: crop(ss[:, i]) for i, n in enumerate(PROGNOSTIC)}
-            return new_fields, new_stage
-
-        return local_step_whole_state
-
-    def build(k: int):
-        if fused and whole_state:
-            local_step = make_local_step_whole_state(k)
-        elif fused:
-            local_step = local_step_fused
-        else:
-            local_step = local_step_unfused
-        sharded = _shard_map(
-            local_step, mesh,
-            in_specs=(spec, spec, spec, spec),
-            out_specs=(spec, spec))
-
-        @jax.jit
-        def step(state: WeatherState) -> WeatherState:
-            new_fields, new_stage = sharded(state.fields, state.wcon,
-                                            state.tens, state.stage_tens)
-            return WeatherState(fields=new_fields, wcon=state.wcon,
-                                tens=state.tens, stage_tens=new_stage)
-
-        return step
-
-    if not auto_k:
-        return build(k_steps), spec
-
-    # k_steps="auto": the grid is only known from the state, so resolve k
-    # (and build the jitted step) lazily per (grid, dtype) — a cached k for
-    # one grid may be invalid for another.
     cache: dict = {}
     last_key: list = []
 
-    def auto_step(state: WeatherState) -> WeatherState:
-        grid = state.grid_shape
-        key = (grid, str(state.wcon.dtype))
+    def step(state: WeatherState) -> WeatherState:
+        ensemble = (int(state.wcon.shape[0]) if state.wcon.ndim == 4
+                    else 1)
+        key = (state.grid_shape, str(state.wcon.dtype), ensemble)
         if key not in cache:
-            k = autotune.plan_k_steps(grid, state.wcon.dtype,
-                                      (ny_shards, nx_shards), n_fields=nf,
-                                      halo=HALO)
-            while k > 1:   # clamp to what the VMEM budget fits
-                try:
-                    fused_ops.plan_tile_kstep(
-                        (grid[0], grid[1] // ny_shards + 2 * k * HALO,
-                         grid[2] // nx_shards + 2 * k * HALO),
-                        state.wcon.dtype, nf, k)
-                    break
-                except ValueError:
-                    k -= 1
-            cache[key] = (k, build(k))
+            prog = DycoreProgram(
+                grid_shape=state.grid_shape, ensemble=ensemble,
+                dtype=str(state.wcon.dtype), coeff=coeff, dt=dt,
+                variant=variant, k_steps=k, exchange_dtype=exchange_dtype)
+            cache[key] = compile_dycore(prog, mesh=mesh, ax_e=ax_e,
+                                        ax_y=ax_y, ax_x=ax_x,
+                                        interpret=interpret,
+                                        prefetch_w=prefetch_w)
         last_key[:] = [key]
-        return cache[key][1](state)
+        return cache[key].step(state)
 
-    auto_step.resolved_k = lambda: (cache[last_key[0]][0] if last_key
-                                    else None)
-    return auto_step, spec
+    step.resolved_k = lambda: (cache[last_key[0]].k_steps if last_key
+                               else None)
+    return step, spec
 
 
 def shard_state(state: WeatherState, mesh: Mesh, spec: P) -> WeatherState:

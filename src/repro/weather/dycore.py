@@ -1,47 +1,52 @@
 """COSMO-like dynamical core built from the paper's compound kernels.
 
-One `dycore_step` applies the three computational patterns the paper names
+One timestep applies the three computational patterns the paper names
 (§1): horizontal stencils (hdiff), tridiagonal solves in the vertical
 (vadvc), and point-wise computation (the explicit update).  It is a
 *representative* dycore, faithful to the kernels and their composition, not a
 full COSMO port.
 
-Three execution paths (see docs/architecture.md for the dataflow diagram):
+The execution strategy — unfused oracle / per-field fused / whole-state
+fused / in-kernel k-step, tile choice, interpret mode — is resolved by the
+declarative plan API in `weather/program.py`:
 
-  * `fused=True, whole_state=True` (default): ALL prognostic fields run as
-    ONE Pallas compound kernel per step (kernels/dycore_fused whole-state
-    variant) — the per-stage intermediates never leave VMEM *and* the
-    shared staggered-velocity slab is streamed from HBM once per step
-    instead of once per field.  One kernel launch per timestep.
-  * `fused=True, whole_state=False`: the per-field fused pipeline — one
-    `pallas_call` per prognostic field.  Kept as the launch-granularity
-    oracle the whole-state path is tested/benchmarked against.
-  * `fused=False`: the original unfused composition — wrap-pad, per-kernel
-    jnp oracles, every intermediate materialized in HBM.  It is kept both as
-    the fallback for backends without Pallas support and as the equivalence
-    oracle the fused paths are tested against.
+    from repro.weather.program import DycoreProgram, compile_dycore
+    plan = compile_dycore(DycoreProgram(grid_shape=(16, 64, 64)))
+    state = plan.step(state)          # one round
+    state = plan.run(state, steps=10)
+
+`dycore_step(...)` and `run(...)` below are the LEGACY flag-soup entry
+points, kept as thin deprecated shims (they build a program and call
+`compile_dycore` under the hood, emitting `DeprecationWarning`) so the
+historical oracle/equivalence tests keep their meaning bit-for-bit.  The
+periodic per-kernel helpers (`hdiff_periodic`, `vadvc_field`) and the
+state stack/unstack utilities stay first-class — the plan lowering in
+`weather/program.py` builds on them.
 
 The domain is doubly periodic in (y, x) — the standard dycore test setup —
-so the distributed version (weather/domain.py) only needs circular halo
-exchanges.  Periodic variants of the kernels are expressed with jnp.roll on
-top of the validated interior kernels.
+so the distributed version (weather/domain.py + program.py) only needs
+circular halo exchanges.
 """
 
 from __future__ import annotations
 
-import functools
+import warnings
 
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.dycore_fused import ops as fused_ops
-from repro.kernels.dycore_fused.ops import _auto_interpret
 from repro.kernels.dycore_fused.ref import pad_periodic
 from repro.kernels.hdiff import ref as hdiff_ref
 from repro.kernels.vadvc import ref as vadvc_ref
 from repro.weather.fields import PROGNOSTIC, WeatherState
 
 HALO = 2   # hdiff needs 2; vadvc needs 1 (staggered wcon)
+
+_DEPRECATED = (
+    "weather.dycore.{name}(fused=..., whole_state=..., ...) is deprecated: "
+    "build a DycoreProgram and call repro.weather.program.compile_dycore() "
+    "— the returned ExecutionPlan resolves variant/tile/k-step/exchange "
+    "once and exposes step()/run()/report().")
 
 
 def hdiff_periodic(src: jnp.ndarray, coeff: float) -> jnp.ndarray:
@@ -68,99 +73,83 @@ def vadvc_field(u_stage, wcon, u_pos, utens, utens_stage):
     return out.reshape(shape)
 
 
-def stack_state(d: dict) -> jnp.ndarray:
-    """Stack the per-field dict onto a new axis -4: (..., nf, nz, ny, nx)."""
-    return jnp.stack([d[name] for name in PROGNOSTIC], axis=-4)
+def stack_state(d: dict, names=PROGNOSTIC) -> jnp.ndarray:
+    """Stack the per-field dict onto a new axis -4: (..., nf, nz, ny, nx).
+    `names` fixes the field order (a program's field set; default: the
+    full prognostic set) — the single home of the layout convention the
+    plan lowering (`weather/program.py`) builds on."""
+    return jnp.stack([d[name] for name in names], axis=-4)
 
 
-def unstack_state(a: jnp.ndarray) -> dict:
+def unstack_state(a: jnp.ndarray, names=PROGNOSTIC) -> dict:
     """Inverse of `stack_state`."""
-    return {name: jnp.take(a, i, axis=-4)
-            for i, name in enumerate(PROGNOSTIC)}
+    return {name: jnp.take(a, i, axis=-4) for i, name in enumerate(names)}
 
 
-@functools.partial(jax.jit, static_argnames=("coeff", "dt", "fused",
-                                             "whole_state", "interpret"))
+# ---------------------------------------------------------------------------
+# Deprecated flag-soup shims (the pre-plan API, kept for the oracle tests)
+# ---------------------------------------------------------------------------
+
+_PLAN_CACHE: dict = {}
+
+
+def _shim_plan(state: WeatherState, *, variant, k_steps, coeff, dt,
+               interpret):
+    """Build (and cache) the ExecutionPlan a legacy call maps onto."""
+    from repro.weather.program import DycoreProgram, compile_dycore
+    ensemble = int(state.wcon.shape[0]) if state.wcon.ndim == 4 else 1
+    key = (state.grid_shape, str(state.wcon.dtype), ensemble, variant,
+           k_steps, coeff, dt, interpret)
+    plan = _PLAN_CACHE.get(key)
+    if plan is None:
+        prog = DycoreProgram(grid_shape=state.grid_shape, ensemble=ensemble,
+                             dtype=str(state.wcon.dtype), coeff=coeff,
+                             dt=dt, variant=variant, k_steps=k_steps)
+        plan = compile_dycore(prog, interpret=interpret)
+        _PLAN_CACHE[key] = plan
+    return plan
+
+
+def _variant(fused: bool, whole_state: bool) -> str:
+    if not fused:
+        return "unfused"
+    return "auto" if whole_state else "per_field"
+
+
 def dycore_step(state: WeatherState, coeff: float = 0.025,
                 dt: float = 0.1, fused: bool = True,
                 whole_state: bool = True,
                 interpret: bool | None = None) -> WeatherState:
-    """One large-timestep: vertical-implicit advection per field, explicit
-    point-wise update, horizontal diffusion smoothing.
+    """DEPRECATED shim: one timestep through the flags-era entry point.
 
-    `fused=True, whole_state=True` (default) runs every prognostic field in
-    a single Pallas launch with the staggered-velocity slab shared across
-    fields; `whole_state=False` keeps the per-field fused pipeline;
-    `fused=False` is the unfused oracle composition (identical math, every
-    intermediate round-tripping HBM)."""
-    new_fields, new_stage = {}, {}
-    if fused and whole_state:
-        f_new, stage = fused_ops.fused_step_whole_state(
-            stack_state(state.fields), state.wcon, stack_state(state.tens),
-            stack_state(state.stage_tens), coeff=coeff, dt=dt,
-            interpret=interpret)
-        new_fields = unstack_state(f_new)
-        new_stage = unstack_state(stage)
-    elif fused:
-        if interpret is None:
-            interpret = _auto_interpret()
-        for name in PROGNOSTIC:
-            f_new, stage = fused_ops.fused_step(
-                state.fields[name], state.wcon, state.tens[name],
-                state.stage_tens[name], coeff=coeff, dt=dt,
-                interpret=interpret)
-            new_fields[name] = f_new
-            new_stage[name] = stage
-    else:
-        for name in PROGNOSTIC:
-            f = state.fields[name]
-            # 1) tridiagonal vertical solve -> updated stage tendency
-            stage = vadvc_field(u_stage=f, wcon=state.wcon, u_pos=f,
-                                utens=state.tens[name],
-                                utens_stage=state.stage_tens[name])
-            # 2) point-wise explicit update
-            f = f + dt * stage
-            # 3) compound horizontal diffusion
-            f = hdiff_periodic(f, coeff)
-            new_fields[name] = f
-            new_stage[name] = stage
-    return WeatherState(fields=new_fields, wcon=state.wcon,
-                        tens=state.tens, stage_tens=new_stage)
+    `fused=True, whole_state=True` (default) is the whole-state fused
+    variant (ONE Pallas launch), `whole_state=False` the per-field fused
+    pipeline, `fused=False` the unfused oracle composition.  The call maps
+    onto `compile_dycore` under the hood and returns bit-identical results
+    to the equivalent plan's `step`."""
+    warnings.warn(_DEPRECATED.format(name="dycore_step"), DeprecationWarning,
+                  stacklevel=2)
+    plan = _shim_plan(state, variant=_variant(fused, whole_state), k_steps=1,
+                      coeff=coeff, dt=dt, interpret=interpret)
+    return plan.step(state)
 
 
 def run(state: WeatherState, steps: int, coeff: float = 0.025,
         dt: float = 0.1, fused: bool = True,
         whole_state: bool = True, k_steps: int = 1,
         interpret: bool | None = None) -> WeatherState:
-    """Advance `steps` timesteps.  With `k_steps > 1` (requires the fused
-    whole-state path and `steps % k_steps == 0`) the trajectory runs as
-    `steps / k_steps` k-step rounds, each ONE Pallas launch whose kernel
-    iterates the k local steps with the prognostic state held in VMEM
-    (`kernels/dycore_fused/ops.py::fused_step_kstep`) — the single-chip
-    face of the distributed communication-avoiding mode."""
-    if k_steps < 1:
-        raise ValueError(f"k_steps={k_steps} must be >= 1")
-    if k_steps > 1 and not (fused and whole_state):
+    """DEPRECATED shim: advance `steps` timesteps through the flags-era
+    entry point.  With `k_steps > 1` (fused whole-state path) the
+    trajectory runs as k-step rounds — ONE Pallas launch each, the k local
+    steps iterated in-kernel on VMEM state — plus, when `steps` is not a
+    multiple, one shorter ragged tail round (`ExecutionPlan.run`)."""
+    warnings.warn(_DEPRECATED.format(name="run"), DeprecationWarning,
+                  stacklevel=2)
+    if k_steps != "auto" and (not isinstance(k_steps, int) or k_steps < 1):
+        raise ValueError(f"k_steps={k_steps!r} must be >= 1")
+    if k_steps != 1 and not (fused and whole_state):
         raise ValueError("k_steps > 1 requires the fused whole-state path")
-    if steps % k_steps:
-        raise ValueError(f"steps={steps} must be a multiple of "
-                         f"k_steps={k_steps}")
-    if k_steps > 1:
-        def body(s, _):
-            f_new, stage = fused_ops.fused_step_kstep(
-                stack_state(s.fields), s.wcon, stack_state(s.tens),
-                stack_state(s.stage_tens), k_steps=k_steps, coeff=coeff,
-                dt=dt, interpret=interpret)
-            return WeatherState(fields=unstack_state(f_new), wcon=s.wcon,
-                                tens=s.tens,
-                                stage_tens=unstack_state(stage)), ()
-
-        final, _ = jax.lax.scan(body, state, (), length=steps // k_steps)
-        return final
-
-    def body(s, _):
-        return dycore_step(s, coeff=coeff, dt=dt, fused=fused,
-                           whole_state=whole_state, interpret=interpret), ()
-
-    final, _ = jax.lax.scan(body, state, (), length=steps)
-    return final
+    plan = _shim_plan(state, variant=_variant(fused, whole_state),
+                      k_steps=k_steps, coeff=coeff, dt=dt,
+                      interpret=interpret)
+    return plan.run(state, steps)

@@ -58,10 +58,12 @@ def test_kstep_exchange_model_wire_dtype():
 
 
 def test_kstep_exchange_model_wcon_ragged_depth():
-    """Only wcon ships the +1 staggering column: its share of the deep
-    exchange is one operand's worth (vs 3*n_fields field operands at the
-    flat k*HALO depth), and the packed total is strictly below shipping the
-    whole stack one column deeper (the pre-fix uniform-depth geometry)."""
+    """Only wcon ships the +1 staggering column, and only to the RIGHT
+    side (the left pad's extra column is never read by
+    `w[c] = wcon[c] + wcon[c+1]`): its x-ride is `(k*HALO, k*HALO+1)`, so
+    the x legs carry `2*k*HALO + 1` columns.  The packed total is strictly
+    below both the old symmetric-wcon geometry (one spare column per
+    round) and the uniform-depth whole-stack over-shipping."""
     nz, ny, nx = 64, 256, 256
     for k in (1, 2):
         m = memmodel.kstep_exchange_model((nz, ny, nx), "float32",
@@ -69,12 +71,16 @@ def test_kstep_exchange_model_wcon_ragged_depth():
         ly, lx = ny // 2, nx // 2
         hy = hx = k * 2
         b = 4
-        # wcon alone: (hy, hx+1)-deep ride on the shared wire.
-        want_wcon = 2 * nz * b * (hy * lx + (hx + 1) * (ly + 2 * hy))
+        # wcon alone: symmetric hy in y, ragged (hx, hx+1) in x.
+        want_wcon = nz * b * (2 * hy * lx + (2 * hx + 1) * (ly + 2 * hy))
         assert m["bytes_wcon"] == want_wcon
+        # the pre-fix symmetric ride at (hy, hx+1) both ways: exactly one
+        # spare (ly + 2*hy)-column per round more than the ragged ride.
+        symmetric = 2 * nz * b * (hy * lx + (hx + 1) * (ly + 2 * hy))
+        assert symmetric - m["bytes_wcon"] == nz * b * (ly + 2 * hy)
         # uniform-depth stack at (hy, hx+1) for all 13 operands (the old
         # over-shipping): strictly more than the ragged pack.
-        uniform = 13 * 2 * nz * b * (hy * lx + (hx + 1) * (ly + 2 * hy))
+        uniform = 13 * symmetric
         assert m["bytes_kstep"] < uniform
 
 

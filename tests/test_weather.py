@@ -233,6 +233,21 @@ def test_run_kstep_matches_sequential():
         bad = int((err > 1e-5).sum())
         assert bad <= 4 and err.max() < 0.05, (name, bad, err.max())
     with pytest.raises(ValueError):
-        dycore.run(st, steps=3, k_steps=2)      # steps % k != 0
-    with pytest.raises(ValueError):
         dycore.run(st, steps=4, k_steps=2, whole_state=False)
+
+
+def test_run_kstep_ragged_tail():
+    """steps % k_steps != 0 is no longer an error: the plan runs the full
+    k-step rounds and finishes with one shorter TAIL round at
+    k' = steps mod k (ISSUE 4 satellite) — equivalent to sequential
+    stepping within the usual limiter-fragile tolerance."""
+    st = fields.initial_state(jax.random.PRNGKey(7), (4, 12, 16), ensemble=2)
+    out_seq = dycore.run(st, steps=5)                # 5 sequential steps
+    out_k = dycore.run(st, steps=5, k_steps=2)       # 2 rounds + k'=1 tail
+    out_k3 = dycore.run(st, steps=5, k_steps=3)      # 1 round + k'=2 tail
+    for out in (out_k, out_k3):
+        for name in fields.PROGNOSTIC:
+            err = np.abs(np.asarray(out.fields[name])
+                         - np.asarray(out_seq.fields[name]))
+            bad = int((err > 1e-5).sum())
+            assert bad <= 4 and err.max() < 0.05, (name, bad, err.max())
