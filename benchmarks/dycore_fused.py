@@ -26,6 +26,14 @@ Emitted metric names (docs/benchmarks.md):
   dycore_fused/model_{fused}                         modeled TPU time
   dycore_fused/kstep_k<k>                            k-step exchange model
 
+Since the StencilOp registry landed, the benchmark also reproduces the
+paper's PER-KERNEL table: hdiff-only and vadvc-only programs are compiled
+through the same `compile()` planner and measured side-by-side with the
+fused compound step — `BENCH_dycore.json["per_kernel"]` carries, for each
+of (hdiff, vadvc, fused), the measured walltime, the plan report (op +
+declared footprint + tile), and the modeled GFLOPS / GFLOPS-per-watt from
+`core/perfmodel` (the paper's 21.01 vs 1.61 GFLOPS/W axis).
+
 Also writes BENCH_dycore.json (walltime, modeled HBM bytes, steps/s, and
 the distributed k-step plan's `report()` embedded verbatim as "plan") for
 cross-PR perf tracking.
@@ -45,7 +53,8 @@ from benchmarks.common import emit, smoke_mode, time_fn, write_json
 from repro.core import hierarchy as hw
 from repro.core import memmodel, perfmodel, tiling, trace_stats
 from repro.weather import fields
-from repro.weather.program import DycoreProgram, compile_dycore
+from repro.weather.program import (DycoreProgram, StencilProgram,
+                                   compile_dycore)
 
 # Measured grid: deliberately small.  The Pallas interpreter's grid loop
 # carries the full output state per iteration (O(grid_steps x state) copy
@@ -104,11 +113,12 @@ def _kstep_round_structure(k: int) -> tuple:
 
 
 def run():
-    # Any deprecated flag-soup call (our shims name compile_dycore in the
-    # warning) fails the benchmark loudly: every entry point below must go
-    # through an ExecutionPlan.
+    # Every entry point below goes through an ExecutionPlan; the legacy
+    # flag-soup shims are gone, and any stray DeprecationWarning from our
+    # own modules still fails the benchmark loudly.
     with warnings.catch_warnings():
-        warnings.filterwarnings("error", message=r".*compile_dycore.*")
+        warnings.filterwarnings("error", category=DeprecationWarning,
+                                module=r"repro\..*")
         _run()
 
 
@@ -165,10 +175,43 @@ def _run():
          f"grid={grid} k={KSTEP_K} backend={backend} 1 launch/round"
          f"{interp_note} vs_scan={t_kseq / max(t_kstep, 1e-9):.2f}x")
 
+    # --- the paper's PER-KERNEL table (ISSUE 5): hdiff-only, vadvc-only
+    # and the fused compound step, side by side through the SAME planner.
+    # Measured walltime at the bench grid; modeled GFLOPS / GFLOPS-per-watt
+    # (core/perfmodel over the plan's auto-tuned tile) at the paper's
+    # domain — the 12.7x/21.01-GF/W (hdiff) vs 5.3x/1.61-GF/W (vadvc) axis.
+    model_grid = grid if smoke else MODEL_GRID
+    per_kernel = {}
+    for key, op in (("hdiff", "hdiff"), ("vadvc", "vadvc"),
+                    ("fused", "dycore")):
+        plan = compile_dycore(StencilProgram(
+            grid_shape=grid, ensemble=ENSEMBLE, op=op,
+            variant="whole_state"))
+        t = time_fn(plan.step, st, iters=iters, warmup=warmup)
+        rep = plan.report()
+        mrep = compile_dycore(StencilProgram(
+            grid_shape=model_grid, ensemble=ENSEMBLE, op=op,
+            variant="whole_state")).report()
+        per_kernel[key] = {
+            "op": op,
+            "walltime_us": t,
+            "modeled_gflops": mrep["model"]["gflops"],
+            "modeled_gflops_per_watt": mrep["model"]["gflops_per_watt"],
+            "modeled_time_us": mrep["model"]["time_us"],
+            "flops_per_point": rep["footprint"]["flops_per_point"],
+            "pallas_calls_per_round": rep["pallas_calls_per_round"],
+            "plan": rep,
+            "model_plan": mrep,
+        }
+        emit(f"dycore_fused/per_kernel_{key}", t,
+             f"grid={grid} op={op} "
+             f"model_gflops={mrep['model']['gflops']:.0f} "
+             f"model_gflops_per_watt={mrep['model']['gflops_per_watt']:.2f}"
+             f"{interp_note}")
+
     # Modeled HBM traffic at the paper's domain: ONE model-grid plan per
     # dtype; its report() embeds the memmodel accounting at the plan's own
     # auto-tuned tile.
-    model_grid = grid if smoke else MODEL_GRID
     traffic = {}
     for dtype in ("float32", "bfloat16"):
         model_plan = compile_dycore(DycoreProgram(
@@ -283,6 +326,9 @@ def _run():
         "plan_source": plan_source,
         # One report per measured single-chip configuration.
         "plans": {name: p.report() for name, p in plans.items()},
+        # The paper's two-kernel table: hdiff vs vadvc vs fused, each with
+        # measured walltime + modeled GFLOPS from its own compiled plan.
+        "per_kernel": per_kernel,
         "walltime_us": walltime,
         # steps_per_s counts SIMULATED timesteps: the kstep entries' walltime
         # covers a whole KSTEP_K-step round, the others a single step.

@@ -31,12 +31,14 @@ def run():
     emit("wall/vadvc_jnp_16x32x32",
          time_fn(jax.jit(vref.vadvc), us, wcon, up, ut, uts))
 
-    # weather dycore step — ONE ExecutionPlan for the configuration
+    # weather stencil programs — ONE ExecutionPlan per (op, configuration)
     from repro.weather import fields
-    from repro.weather.program import DycoreProgram, compile_dycore
+    from repro.weather.program import StencilProgram, compile
     st = fields.initial_state(jax.random.PRNGKey(0), (16, 64, 64))
-    plan = compile_dycore(DycoreProgram(grid_shape=(16, 64, 64)))
-    emit("wall/dycore_step_16x64x64", time_fn(plan.step, st))
+    for op in ("dycore", "hdiff", "vadvc"):
+        plan = compile(StencilProgram(grid_shape=(16, 64, 64), op=op))
+        name = "dycore_step" if op == "dycore" else f"{op}_step"
+        emit(f"wall/{name}_16x64x64", time_fn(plan.step, st))
 
     # reduced-config LM train + decode
     from repro.configs import registry

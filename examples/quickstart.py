@@ -3,8 +3,9 @@
 1. Run hdiff + vadvc oracles on the paper's 256x256x64 domain.
 2. Auto-tune the 3-D window (paper Fig. 6) and show the chosen plan.
 3. Validate the Pallas TPU kernels (interpret mode) against the oracles.
-4. Compile a declarative dycore program into ONE ExecutionPlan
-   (`repro.weather.program.compile_dycore`) and advance it.
+4. Compile declarative programs — hdiff-only, vadvc-only, and the fused
+   dycore, each a registered StencilOp — into ExecutionPlans
+   (`repro.weather.program.compile`) and advance them.
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
@@ -61,18 +62,33 @@ def main():
     err = np.abs(pv - vref.vadvc_np(f[0], w2, f[1], f[2], f[3])).max()
     print(f"pallas vadvc vs oracle: max err {err:.2e}")
 
-    # The dycore as ONE declarative program -> plan -> launch: the spec
-    # says WHAT (grid, fields, k-step policy); compile_dycore resolves HOW
-    # (variant, auto-tuned tile, launches per round) once.
+    # Declarative programs over REGISTERED stencil ops: the spec says WHAT
+    # (op, grid, fields, k-step policy); compile resolves HOW (variant,
+    # auto-tuned tile, footprint-derived exchange, launches per round)
+    # once.  The paper's two kernels are first-class programs.
     from repro.weather import fields as wfields
-    from repro.weather.program import DycoreProgram, compile_dycore
-    plan = compile_dycore(DycoreProgram(grid_shape=small, variant="kstep",
-                                        k_steps=2))
+    from repro.weather.program import (DycoreProgram, StencilProgram,
+                                       compile)
+    st = wfields.initial_state(jax.random.PRNGKey(0), small)
+    hplan = compile(StencilProgram(grid_shape=small, op="hdiff"))
+    hrep = hplan.report()
+    print(f"compile(op=hdiff): variant={hrep['variant']} "
+          f"launches/round={hrep['pallas_calls_per_round']} "
+          f"footprint={hrep['footprint']['rides'][0]['depth_y']} "
+          f"model_gflops={hrep['model']['gflops']:.0f}")
+    st = hplan.step(st)
+    vplan = compile(StencilProgram(grid_shape=small, op="vadvc"))
+    vrep = vplan.report()
+    print(f"compile(op=vadvc): variant={vrep['variant']} "
+          f"wcon ride={vrep['footprint']['rides'][0]['depth_x']} "
+          f"model_gflops={vrep['model']['gflops']:.0f}")
+    st = vplan.step(st)
+    plan = compile(DycoreProgram(grid_shape=small, variant="kstep",
+                                 k_steps=2))
     rep = plan.report()
-    print(f"compile_dycore: variant={rep['variant']} "
+    print(f"compile(op=dycore): variant={rep['variant']} "
           f"k_steps={rep['k_steps']} tile={rep['tile']['tile']} "
           f"launches/round={rep['pallas_calls_per_round']}")
-    st = wfields.initial_state(jax.random.PRNGKey(0), small)
     st = plan.run(st, 3)   # 1 k-step round + a ragged 1-step tail round
     ok = bool(jnp.isfinite(st.fields["t"]).all())
     print(f"plan.run(3 steps): finite={ok}")

@@ -40,6 +40,10 @@ def main():
     ap.add_argument("--k-steps", default="1",
                     help="timesteps per round (int, or 'auto' to let the "
                          "planner resolve the communication-avoiding k)")
+    ap.add_argument("--op", default="dycore",
+                    choices=("dycore", "hdiff", "vadvc"),
+                    help="which registered stencil op to run (the paper "
+                         "evaluates hdiff and vadvc separately)")
     ap.add_argument("--no-fused", action="store_true",
                     help="unfused oracle composition instead of the fused "
                          "Pallas pipeline (docs/architecture.md)")
@@ -51,8 +55,11 @@ def main():
                               ensemble=args.ensemble)
     print(f"grid={grid} ensemble={args.ensemble} steps={args.steps}")
 
+    if args.op == "vadvc" and k_steps not in (1, "auto"):
+        raise SystemExit("vadvc has no k-step round (its footprint does "
+                         "not deepen with k); use --k-steps 1")
     program = DycoreProgram(
-        grid_shape=grid, ensemble=args.ensemble,
+        grid_shape=grid, ensemble=args.ensemble, op=args.op,
         variant="unfused" if args.no_fused else "auto", k_steps=k_steps)
     if args.mesh:
         shape = tuple(int(x) for x in args.mesh.split(","))

@@ -126,20 +126,27 @@ def plan_k_steps(grid_shape: Sequence[int], dtype, mesh_shape,
                  *, n_fields: int = 4, halo: int = 2, max_k: int = 8,
                  hier: Optional[hw.Hierarchy] = None,
                  latency_s: float = COLLECTIVE_LATENCY_S,
-                 utilization: float = 0.85) -> int:
-    """Pick the communication-avoiding depth k for the distributed dycore.
+                 utilization: float = 0.85,
+                 flops_per_point: Optional[float] = None,
+                 exchange_model: Optional[Callable] = None) -> int:
+    """Pick the communication-avoiding depth k for a distributed stencil op.
 
-    Modeled per-TIMESTEP cost of running the k-step round
-    (`weather/domain.py::make_distributed_step(k_steps=k)`):
+    Modeled per-TIMESTEP cost of running the k-step round:
 
         (rounds(k) * latency + wire_bytes(k) / ici_bw) / k      collectives
       + compute * (1 + redundant_flops_frac(k))                 halo-ring tax
 
-    with the wire/redundancy terms from `memmodel.kstep_exchange_model` and
-    the compute term from the fused-kernel flop count at the local slab.
-    Large k amortizes collective latency but pays a growing redundant-flops
-    tax on the deepened halo ring; the argmin is the paper's sweet spot.
-    Candidates stop where the deep halo outgrows the local slab.
+    The wire/redundancy terms come from `exchange_model(k)` — any callable
+    returning `memmodel.packed_exchange_model`-shaped numbers for depth k
+    (default: the fused dycore's `memmodel.kstep_exchange_model` footprint)
+    — and the compute term from the op's declared `flops_per_point` (and
+    `halo` reach) at the local slab, which is how the planner
+    (`weather/program.py::compile`) threads each registered StencilOp's
+    flop count and footprint through the k resolution instead of baking in
+    dycore constants.  Large k amortizes collective latency but pays a
+    growing redundant-flops tax on the deepened halo ring; the argmin is
+    the paper's sweet spot.  Candidates stop where the deep halo outgrows
+    the local slab.
 
     `mesh_shape` is `(py, px)` — spatial shards along y and x.
     """
@@ -151,15 +158,20 @@ def plan_k_steps(grid_shape: Sequence[int], dtype, mesh_shape,
     ly, lx = ny // py, nx // px
     b = hw.dtype_bytes(dtype)
     peak = (hier.peak_flops_bf16 if b <= 2 else hier.peak_flops_fp32)
-    compute_s = (_DYCORE_FLOPS_PER_POINT * n_fields * nz * ly * lx
+    if flops_per_point is None:
+        flops_per_point = _DYCORE_FLOPS_PER_POINT
+    if exchange_model is None:
+        def exchange_model(k):
+            return memmodel.kstep_exchange_model(
+                grid_shape, dtype, n_fields=n_fields, k=k,
+                shards=(py, px), halo=halo)
+    compute_s = (flops_per_point * n_fields * nz * ly * lx
                  / (peak * utilization))
 
     best_k, best_cost = 1, None
     for k in range(1, max_k + 1):
         try:
-            m = memmodel.kstep_exchange_model(
-                grid_shape, dtype, n_fields=n_fields, k=k,
-                shards=(py, px), halo=halo)
+            m = exchange_model(k)
         except ValueError:
             break   # deep halo outgrew the local slab
         coll_s = (m["rounds_kstep"] * latency_s
@@ -174,27 +186,39 @@ def resolve_k_steps(grid_shape: Sequence[int], dtype, mesh_shape,
                     *, n_fields: int = 4, halo: int = 2, max_k: int = 8,
                     hier: Optional[hw.Hierarchy] = None,
                     latency_s: float = COLLECTIVE_LATENCY_S,
-                    utilization: float = 0.85) -> int:
+                    utilization: float = 0.85,
+                    flops_per_point: Optional[float] = None,
+                    exchange_model: Optional[Callable] = None,
+                    vmem_check: Optional[Callable] = None) -> int:
     """`plan_k_steps` clamped to what the VMEM budget actually fits.
 
-    The exchange model's argmin can ask for a k whose 3-window working
-    slab + double-buffered `w` prefetch overflow VMEM on the padded local
-    grid; this resolver (the planner's steps-per-round entry,
-    `weather/program.py::compile_dycore(k_steps="auto")`) walks k down
-    until `plan_tile_kstep` accepts the plan."""
+    The exchange model's argmin can ask for a k whose working slab
+    overflows VMEM on the padded local grid; this resolver (the planner's
+    steps-per-round entry, `weather/program.py::compile(k_steps="auto")`)
+    walks k down until `vmem_check(k)` accepts the plan.  The default
+    check is the fused dycore's: `plan_tile_kstep` on the padded local
+    slab (3-window scratch + double-buffered `w` prefetch); ops whose
+    k-step round is a sequence of separate launches (no in-kernel state
+    carry, e.g. hdiff) pass `vmem_check=lambda k: None` — each launch
+    plans its own window."""
     k = plan_k_steps(grid_shape, dtype, mesh_shape, n_fields=n_fields,
                      halo=halo, max_k=max_k, hier=hier, latency_s=latency_s,
-                     utilization=utilization)
-    # Local import: the kernel package imports this module at load time.
-    from repro.kernels.dycore_fused import ops as fused_ops
+                     utilization=utilization, flops_per_point=flops_per_point,
+                     exchange_model=exchange_model)
+    if vmem_check is None:
+        # Local import: the kernel package imports this module at load time.
+        from repro.kernels.dycore_fused import ops as fused_ops
 
-    nz, ny, nx = (int(g) for g in grid_shape)
-    py, px = (int(s) for s in mesh_shape)
+        nz, ny, nx = (int(g) for g in grid_shape)
+        py, px = (int(s) for s in mesh_shape)
+
+        def vmem_check(kk):
+            fused_ops.plan_tile_kstep(
+                (nz, ny // py + 2 * kk * halo, nx // px + 2 * kk * halo),
+                dtype, n_fields, kk)
     while k > 1:
         try:
-            fused_ops.plan_tile_kstep(
-                (nz, ny // py + 2 * k * halo, nx // px + 2 * k * halo),
-                dtype, n_fields, k)
+            vmem_check(k)
             break
         except ValueError:
             k -= 1

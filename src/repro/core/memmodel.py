@@ -108,7 +108,7 @@ def dycore_step_traffic(grid_shape, dtype, *, n_fields: int = 4,
 
     Counts array-level reads/writes actually materialized by each pipeline,
     per ensemble member, for `n_fields` prognostic fields on a (nz, ny, nx)
-    grid.  Unfused (weather/dycore.py `fused=False`):
+    grid.  Unfused (the `variant="unfused"` dycore plan):
 
       vadvc      reads f, wcon, utens, utens_stage; writes stage
       point-wise reads f, stage;                    writes f'
@@ -227,75 +227,147 @@ def dycore_step_traffic(grid_shape, dtype, *, n_fields: int = 4,
     return out
 
 
-def kstep_exchange_model(grid_shape, dtype, *, n_fields: int = 4,
-                         k: int = 1, shards=(2, 2), halo: int = 2,
-                         exchange_dtype=None) -> Dict[str, float]:
-    """Communication-avoiding k-step accounting (weather/domain.py
-    `k_steps`): one RAGGED stacked halo exchange — the `3*n_fields` field
-    operands at depth `k*halo` in both directions, `wcon` alone one column
-    deeper in x for its staggering (`w[c] = wcon[c] + wcon[c+1]`), and
-    ASYMMETRICALLY so: the extra column is needed from the RIGHT neighbor
-    only, so wcon's x-ride is `k*halo` toward the left pad and `k*halo+1`
-    toward the right (the old symmetric `k*halo+1` shipped one never-read
-    column per round) — buys k fused steps in one launch with no
-    collectives, at the price of redundant halo-ring compute.
+def packed_exchange_model(grid_shape, dtype, *, rides, k: int = 1,
+                          shards=(2, 2), compute_halo=None,
+                          exchange_dtype=None) -> Dict[str, float]:
+    """Footprint-driven packed-exchange accounting: the wire bytes of one
+    deep (depth-k) stacked halo exchange, derived ENTIRELY from declared
+    per-operand ride depths — no per-operand special cases.  This is the
+    byte model behind every registered stencil op
+    (`weather/stencil_ops.py`); `kstep_exchange_model` below is the fused
+    dycore's footprint fed through it (its old hand-written
+    `bytes_wcon`-style cases are gone).
 
-    `exchange_dtype` models the wire cast (`make_distributed_step(...,
-    exchange_dtype="bfloat16")`): halo bytes are counted at the wire dtype
-    (bf16 halves them), independent of the state dtype.
+    `rides` is a sequence of per-operand footprint declarations
+    `(name, count, (y_lo, y_hi), (x_lo, x_hi), (y_lo_fix, y_hi_fix),
+    (x_lo_fix, x_hi_fix))`: `count` same-shaped tensors ride the packed
+    wire with per-SIDE depth `k * base + fixed` (the fixed part models
+    staggering columns that do not deepen with k — e.g. wcon's right-only
+    `+1`).  A zero side ships nothing (and costs no collective).
 
-    Per shard, per k timesteps:
+    Returns, per shard and per k timesteps:
 
-      bytes_kstep      — bytes ppermuted by the single deep packed exchange
-      bytes_sequential — bytes ppermuted by k rounds of the depth-(halo,
-                         halo / halo+1 for wcon) exchange (the k_steps=1
-                         path at the same wire dtype)
-      bytes_wcon       — wcon's share of bytes_kstep (the ragged,
-                         right-only-staggered ride)
-      rounds_kstep / rounds_sequential — collective rounds (2 vs 2k)
-      redundant_flops_frac — extra stencil work on the halo rings relative
-                             to the interior (grows with k; the knob's cost)
-
-    `shards` is (py, px); the local slab is (ny/py, nx/px)."""
+      bytes_kstep        — bytes ppermuted by the single deep exchange
+      bytes_sequential   — bytes of k depth-1 rounds (the k=1 path)
+      bytes_by_operand   — each ride's share of bytes_kstep
+      bytes_ratio        — bytes_kstep / bytes_sequential
+      rounds_kstep / rounds_sequential — exchange rounds (mesh directions
+                           with any traffic; 1 collective per active SIDE)
+      redundant_flops_frac — extra stencil work on the compute halo ring
+                           relative to the interior (`compute_halo` =
+                           (hy, hx) one-sided padding of the local compute
+                           slab; defaults to the widest y/x ride)
+    """
     nz, ny, nx = (int(g) for g in grid_shape)
     py, px = shards
     ly, lx = ny // py, nx // px
     b = hw.dtype_bytes(exchange_dtype if exchange_dtype is not None
                        else dtype)
 
-    def exchanged(n_ops: int, depth_y: int, depth_x: int) -> int:
-        hi_lo = 2                             # both directions
-        y = n_ops * nz * depth_y * lx * b * hi_lo
-        x = n_ops * nz * depth_x * (ly + 2 * depth_y) * b * hi_lo
+    def depth(base, fixed, kk):
+        return (kk * base[0] + fixed[0], kk * base[1] + fixed[1])
+
+    def operand_bytes(count, dy, dx):
+        y = count * nz * (dy[0] + dy[1]) * lx * b
+        x = count * nz * (dx[0] + dx[1]) * (ly + dy[0] + dy[1]) * b
         return int(y + x)
 
-    def round_bytes(kk: int):
-        """(field bytes, wcon bytes) of one depth-kk packed exchange."""
-        dy, dx = kk * halo, kk * halo
-        fields_b = exchanged(3 * n_fields, dy, dx)
-        # wcon's ragged ride: symmetric dy in y; in x the +1 staggering
-        # column is RIGHT-only — depth dx toward the left pad, dx+1 toward
-        # the right — so the x legs ship (2*dx + 1) columns, not 2*(dx+1).
-        wcon_y = 2 * nz * dy * lx * b
-        wcon_x = nz * (2 * dx + 1) * (ly + 2 * dy) * b
-        wcon_b = int(wcon_y + wcon_x)
-        return fields_b, wcon_b
+    def round_bytes(kk):
+        out = {}
+        for name, count, ybase, xbase, yfix, xfix in rides:
+            out[name] = operand_bytes(count, depth(ybase, yfix, kk),
+                                      depth(xbase, xfix, kk))
+        return out
 
-    hy, hx = k * halo, k * halo
-    if hy > ly or hx + 1 > lx:
-        raise ValueError(
-            f"k={k} needs a ({hy}, {hx + 1})-deep halo; local slab "
-            f"({ly}, {lx})")
-    fields_b, wcon_b = round_bytes(k)
-    bytes_kstep = fields_b + wcon_b
-    bytes_seq = k * sum(round_bytes(1))
+    # Validation: every ride must fit the local slab at depth k.
+    for name, count, ybase, xbase, yfix, xfix in rides:
+        dy, dx = depth(ybase, yfix, k), depth(xbase, xfix, k)
+        if max(dy) > ly or max(dx) > lx:
+            raise ValueError(
+                f"k={k} needs a ({max(dy)}, {max(dx)})-deep halo for "
+                f"{name!r}; local slab ({ly}, {lx})")
+
+    per_op = round_bytes(k)
+    bytes_kstep = sum(per_op.values())
+    bytes_seq = k * sum(round_bytes(1).values())
+    # An exchange round per mesh direction with any traffic.
+    y_active = any(sum(depth(yb, yf, k)) > 0
+                   for _, _, yb, _, yf, _ in rides)
+    x_active = any(sum(depth(xb, xf, k)) > 0
+                   for _, _, _, xb, _, xf in rides)
+    rounds = int(y_active) + int(x_active)
+    if compute_halo is None:
+        hy = max((depth(yb, yf, k)[1] for _, _, yb, _, yf, _ in rides),
+                 default=0)
+        hx = max((depth(xb, xf, k)[0] for _, _, _, xb, _, xf in rides),
+                 default=0)
+    else:
+        hy, hx = compute_halo
     padded = (ly + 2 * hy) * (lx + 2 * hx)
     return {
         "bytes_kstep": bytes_kstep,
         "bytes_sequential": bytes_seq,
-        "bytes_wcon": wcon_b,
+        "bytes_by_operand": per_op,
         "bytes_ratio": bytes_kstep / max(bytes_seq, 1),
-        "rounds_kstep": 2,
-        "rounds_sequential": 2 * k,
+        "rounds_kstep": rounds,
+        "rounds_sequential": rounds * k,
         "redundant_flops_frac": padded / (ly * lx) - 1.0,
+    }
+
+
+def kstep_exchange_model(grid_shape, dtype, *, n_fields: int = 4,
+                         k: int = 1, shards=(2, 2), halo: int = 2,
+                         exchange_dtype=None) -> Dict[str, float]:
+    """Communication-avoiding k-step accounting for the fused dycore: one
+    RAGGED stacked halo exchange — the `3*n_fields` field operands at depth
+    `k*halo` in both directions, `wcon` alone one column deeper in x for
+    its staggering (`w[c] = wcon[c] + wcon[c+1]`), and ASYMMETRICALLY so:
+    the extra column is needed from the RIGHT neighbor only, so wcon's
+    x-ride is `(k*halo, k*halo + 1)`.
+
+    Since the StencilOp registry landed this is just the fused dycore's
+    declared footprint fed through `packed_exchange_model` (the generic,
+    footprint-driven byte accounting); kept under its historical name and
+    output keys (`bytes_wcon` etc.) because benchmarks/plans embed them.
+
+    `exchange_dtype` models the wire cast (bf16 halves the halo bytes,
+    independent of the state dtype).  `shards` is (py, px)."""
+    h = halo
+    rides = (
+        ("fields", 3 * n_fields, (h, h), (h, h), (0, 0), (0, 0)),
+        ("wcon", 1, (h, h), (h, h), (0, 0), (0, 1)),
+    )
+    m = packed_exchange_model(grid_shape, dtype, rides=rides, k=k,
+                              shards=shards, compute_halo=(k * h, k * h),
+                              exchange_dtype=exchange_dtype)
+    m["bytes_wcon"] = m["bytes_by_operand"]["wcon"]
+    return m
+
+
+def stencil_op_traffic(spec, grid_shape, dtype, *, n_fields: int = 1,
+                       tile=None, k_steps: int = 1) -> Dict[str, float]:
+    """Modeled HBM traffic of one step of a registered stencil op, derived
+    from its `tiling.OpSpec` (streams in/out + halo) — the per-op analogue
+    of `dycore_step_traffic`'s fused bounds, used by
+    `weather/program.py::ExecutionPlan.report()` for hdiff/vadvc plans.
+
+    `tile` is the (z, y, x) window the plan resolved (defaults to a whole-
+    grid window).  Returns per-step stream bytes (x `n_fields` fields), the
+    dataflow ideal, the halo re-read overhead, and per-ROUND bytes at
+    `k_steps` sequential applications."""
+    grid_shape = tuple(int(g) for g in grid_shape)
+    if tile is None:
+        tile = grid_shape
+    plan = tiling.TilePlan(op=spec, grid_shape=grid_shape, tile=tuple(tile),
+                           dtype=str(jax.numpy.dtype(dtype)))
+    b = hw.dtype_bytes(dtype)
+    ideal = int(spec.bytes_moved_per_point * b * math.prod(grid_shape))
+    stream = plan.hbm_bytes_total
+    return {
+        "stream_per_field": stream,
+        "stream": n_fields * stream,
+        "stream_per_round": k_steps * n_fields * stream,
+        "ideal": n_fields * ideal,
+        "halo_overhead": plan.halo_overhead,
+        "flops_per_step": n_fields * plan.flops_total,
     }

@@ -105,6 +105,20 @@ DYCORE_FUSED = OpSpec(
     scratch_fields=6)
 
 
+def snap_to_divisor(t: int, n: int, lo: int = 2) -> int:
+    """Largest divisor of `n` that is `<= t` and `>= lo`; falls back to `n`
+    itself when no divisor lands in `[lo, t]`.
+
+    The ONE snapping rule every kernel package uses to turn an auto-tuned
+    tile extent into a legal one (`kernels/*/ops.py` used to each carry a
+    private halving/decrement loop — they drifted; this is the unified
+    largest-divisor-below semantics of the fused dycore's `snap_ty`)."""
+    t = max(lo, min(int(t), n))
+    while n % t and t > lo:
+        t -= 1
+    return t if n % t == 0 else n
+
+
 def dycore_whole_state_spec(n_fields: int = 4) -> OpSpec:
     """Tile space of the whole-state fused dycore step (one `pallas_call`
     for all `n_fields` prognostic fields, shared staggered velocity `w`).

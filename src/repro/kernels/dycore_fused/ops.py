@@ -10,15 +10,15 @@ Two granularities:
 * `fused_step_whole_state(...)` — ALL prognostic fields in ONE `pallas_call`:
   fields are stacked on a leading `nf` axis, the shared staggered-velocity
   slab is DMA'd once per (ensemble, y-window) instead of once per field, and
-  the launch cost is amortized nf×.  This is the default hot path of
-  `weather/dycore.py::dycore_step`.
+  the launch cost is amortized nf×.  The default (`variant="whole_state"`)
+  hot path of compiled dycore plans (`weather/program.py::compile`).
 * `fused_step_kstep(...)` — the whole k-step round in ONE `pallas_call`: the
   kernel body runs the k local steps internally, prognostic state between
   steps lives in VMEM scratch, and the shared `w` slab is double-buffer
   prefetched across y-windows (`kernels/dycore_fused/fused.py::
-  fused_dycore_kstep_pallas`).  The hot path of `weather/dycore.py::run`
-  with `k_steps > 1` and of `weather/domain.py::make_distributed_step`'s
-  communication-avoiding mode.
+  fused_dycore_kstep_pallas`).  The hot path of every `variant="kstep"`
+  dycore plan (`weather/program.py::compile`), single-chip and
+  distributed (the communication-avoiding mode).
 
 Both default `interpret=None`, resolved via `_auto_interpret()`: native
 Pallas on TPU, interpreter everywhere else.
@@ -50,10 +50,7 @@ def _auto_interpret() -> bool:
 def snap_ty(ty: int, ny: int) -> int:
     """Largest legal y-window <= `ty`: a divisor of ny, >= 2 (falling back to
     a single whole-y window when ny has no divisor in [2, ty])."""
-    ty = max(2, min(int(ty), ny))
-    while ny % ty and ty > 2:
-        ty -= 1
-    return ty if ny % ty == 0 else ny
+    return tiling.snap_to_divisor(ty, ny, lo=2)
 
 
 def plan_tile(grid_shape, dtype) -> int:

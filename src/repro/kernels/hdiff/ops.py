@@ -13,21 +13,34 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.core import autotune
+from repro.core import autotune, tiling
 from repro.kernels.hdiff import ref as _ref
 from repro.kernels.hdiff.hdiff import hdiff_pallas
 
+HALO = 2   # the compound stencil's one-sided reach in y and x
+
 
 def plan_tile(grid_shape, dtype) -> int:
-    """Auto-tuned y-window for the Pallas kernel (paper Fig. 6 stage)."""
+    """Auto-tuned y-window for the Pallas kernel (paper Fig. 6 stage).
+
+    Snapping goes through `tiling.snap_to_divisor` — the same
+    largest-divisor-below rule as the fused dycore's `snap_ty` (this
+    module used to halve instead, which drifted from the unified
+    `resolve_tile` path for tuned sizes like 24 on ny=32)."""
     tuned = autotune.tune_named("hdiff", grid_shape, dtype)
-    ty = tuned.plan.tile[1]
-    ny = grid_shape[1]
-    while ny % ty or ty < 2:      # snap to a legal divisor
-        ty = ty // 2 if ty > 2 else ny
-        if ty == ny:
-            break
-    return max(2, ty)
+    return tiling.snap_to_divisor(tuned.plan.tile[1], grid_shape[1], lo=2)
+
+
+def resolve_tile(grid_shape, dtype) -> tiling.TilePlan:
+    """Planner entry (`weather/program.py::compile`): the auto-tuned,
+    snapped y-window as a full `TilePlan` over the hdiff tile space."""
+    ty = plan_tile(grid_shape, dtype)
+    # The kernel's grid is (nz, ny/ty): one z-plane and the whole x extent
+    # per cell, so the staged window is (1, ty, nx).
+    return tiling.TilePlan(op=autotune.get_op("hdiff"),
+                           grid_shape=tuple(int(g) for g in grid_shape),
+                           tile=(1, ty, int(grid_shape[2])),
+                           dtype=str(jnp.dtype(dtype)))
 
 
 @functools.partial(jax.jit, static_argnames=("coeff", "use_pallas", "ty",

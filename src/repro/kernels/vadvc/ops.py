@@ -7,23 +7,34 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.core import autotune
+from repro.core import autotune, tiling
 from repro.kernels.vadvc import ref as _ref
 from repro.kernels.vadvc.vadvc import vadvc_pallas
 
 
 def plan_tile(grid_shape, dtype):
-    """Auto-tuned (tj, ti) horizontal window (paper's 64x2 fp32 analogue)."""
+    """Auto-tuned (tj, ti) horizontal window (paper's 64x2 fp32 analogue).
+
+    Snapping goes through `tiling.snap_to_divisor` (largest divisor below
+    the tuned extent) — the same rule as every other kernel package; the
+    old private power-of-two halving drifted from the unified
+    `resolve_tile` path on non-power-of-two extents."""
     tuned = autotune.tune_named("vadvc", grid_shape, dtype)
     _, tj, ti = tuned.plan.tile
     nz, ny, nx = grid_shape
+    return (tiling.snap_to_divisor(tj, ny, lo=1),
+            tiling.snap_to_divisor(ti, nx, lo=1))
 
-    def snap(t, n):
-        while n % t:
-            t //= 2
-        return max(1, t)
 
-    return snap(tj, ny), snap(ti, nx)
+def resolve_tile(grid_shape, dtype) -> tiling.TilePlan:
+    """Planner entry (`weather/program.py::compile`): the auto-tuned,
+    snapped (tj, ti) window as a full `TilePlan` over the vadvc tile space
+    (z stays whole — the Thomas solve is sequential in z)."""
+    tj, ti = plan_tile(grid_shape, dtype)
+    return tiling.TilePlan(op=autotune.get_op("vadvc"),
+                           grid_shape=tuple(int(g) for g in grid_shape),
+                           tile=(int(grid_shape[0]), tj, ti),
+                           dtype=str(jnp.dtype(dtype)))
 
 
 @functools.partial(jax.jit, static_argnames=("use_pallas", "tj", "ti",

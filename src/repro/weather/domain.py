@@ -8,34 +8,36 @@ communication is a circular halo exchange (`jax.lax.ppermute` over the mesh
 axes).  Vertical columns are never split (vadvc's z dependency), matching
 the paper's PE design.
 
-The strategy that *uses* these primitives — which variant runs chip-locally,
-how deep each operand's halo is, what rides the wire at which dtype — is
-resolved by the plan API (`weather/program.py::compile_dycore`); the
-distributed lowering there composes:
+The strategy that *uses* these primitives — which stencil op runs
+chip-locally, which variant, how deep each operand's halo is, what rides
+the wire at which dtype — is resolved by the plan API
+(`weather/program.py::compile` over the StencilOp registry,
+`weather/stencil_ops.py`); the distributed lowerings there compose:
 
 * `_exchange` — per-operand circular exchange (the per-field paths);
 * `_exchange_packed` — the stacked RAGGED exchange: several tensors with
   PER-TENSOR (and per-SIDE) halo depths share one flattened wire buffer
-  per direction, so the collective count stays one `ppermute` pair per
-  mesh direction per round no matter how many operands ride or how ragged
-  their depths are.  `wcon` ships its `+1` staggering x-column to the
-  RIGHT side only (`w[c] = wcon[c] + wcon[c+1]` needs the right neighbor,
+  per direction, so the collective count stays at most one `ppermute` pair
+  per mesh direction per round no matter how many operands ride or how
+  ragged their depths are.  Depths come straight from the registered op's
+  declared footprint and may be ZERO per side — a direction nothing rides
+  is elided entirely (vadvc's right-only wcon column is ONE ppermute);
+  the dycore's `wcon` ships its `+1` staggering x-column to the RIGHT
+  side only (`w[c] = wcon[c] + wcon[c+1]` needs the right neighbor,
   never the left — the left pad's extra column was provably unread);
 * `_staggered_w` / `_right_column` — the x-staggered velocity build;
 * `_local_hdiff` / `_local_vadvc` — exchanged per-kernel local stencils
   (the unfused oracle's distributed form);
 * `shard_state` — placing a `WeatherState` onto the mesh.
 
-`make_distributed_step(...)` is the LEGACY flag-soup entry point, kept as a
-thin deprecated shim over `compile_dycore` (bit-identical results) so the
-historical equivalence tests keep their meaning.  Ensemble members ride the
-"pod" axis of the multi-pod mesh — see docs/architecture.md ("Scale-out:
-domain decomposition and ensemble pods").
+The legacy `make_distributed_step(...)` flag-soup shim is gone (retired
+ROADMAP item): build a `StencilProgram`/`DycoreProgram` and call
+`repro.weather.program.compile(program, mesh=mesh)`.  Ensemble members
+ride the "pod" axis of the multi-pod mesh — see docs/architecture.md
+("Scale-out: domain decomposition and ensemble pods").
 """
 
 from __future__ import annotations
-
-import warnings
 
 import jax
 import jax.numpy as jnp
@@ -88,51 +90,65 @@ def _exchange_packed(parts, axis_name: str, n: int, dim: int,
     without forcing the whole stacked exchange one column deeper, and
     without wasting a never-read column on the left pad.
 
-    `wire_dtype` (e.g. bf16) casts the packed buffer before the `ppermute`
-    pair and restores each tensor's dtype on arrival — half the wire
-    bytes, rounding confined to the received halo ring.
+    Depths may be ZERO per side (and per operand): a zero side ships
+    nothing for that operand, and when a direction's packed buffer is
+    empty for EVERY operand the `ppermute` for that direction is elided
+    entirely.  That is how a registered stencil op's declared footprint
+    (`weather/stencil_ops.py`) lowers directly to the minimal collective
+    set — e.g. vadvc's `(0, 1)` wcon ride is ONE ppermute (the right
+    staggering column), not a pair.
+
+    `wire_dtype` (e.g. bf16) casts the packed buffer before each
+    `ppermute` and restores each tensor's dtype on arrival — half the
+    wire bytes, rounding confined to the received halo ring.
 
     With n == 1 this degenerates to periodic wrap-padding (no
     communication, no cast)."""
-    def take(a, sl):
+    def take_last(a, d):
         idx = [slice(None)] * a.ndim
-        idx[dim] = sl
+        # slice(-0, None) would be the WHOLE tensor; zero depth is empty.
+        idx[dim] = slice(-d, None) if d else slice(0, 0)
+        return a[tuple(idx)]
+
+    def take_first(a, d):
+        idx = [slice(None)] * a.ndim
+        idx[dim] = slice(0, d)
         return a[tuple(idx)]
 
     depths = []
     for _, h in parts:
         lo_h, hi_h = (h, h) if isinstance(h, int) else h
-        if lo_h < 1 or hi_h < 1:
-            raise ValueError(f"packed-exchange depth {h!r} must be >= 1 "
+        if lo_h < 0 or hi_h < 0:
+            raise ValueError(f"packed-exchange depth {h!r} must be >= 0 "
                              f"on both sides")
         depths.append((lo_h, hi_h))
     # The LOW pad is the lower neighbor's LAST lo_h rows (forward ride);
     # the HIGH pad is the upper neighbor's FIRST hi_h rows (backward ride).
-    hi_parts = [take(t, slice(-lo_h, None))
+    hi_parts = [take_last(t, lo_h)
                 for (t, _), (lo_h, _) in zip(parts, depths)]
-    lo_parts = [take(t, slice(0, hi_h))
+    lo_parts = [take_first(t, hi_h)
                 for (t, _), (_, hi_h) in zip(parts, depths)]
-    if n == 1:
-        top, bot = hi_parts, lo_parts
-    else:
-        def pack(xs):
-            buf = jnp.concatenate([x.reshape(-1) for x in xs])
-            return buf.astype(wire_dtype) if wire_dtype is not None else buf
 
-        def unpack(buf, like):
-            out, off = [], 0
-            for x in like:
-                seg = buf[off:off + x.size]
-                out.append(seg.reshape(x.shape).astype(x.dtype))
-                off += x.size
-            return out
+    def ride(xs, perm):
+        """One packed ppermute of `xs`; elided when nothing rides."""
+        if n == 1 or all(x.size == 0 for x in xs):
+            return xs
 
-        fwd = [(i, (i + 1) % n) for i in range(n)]
-        bwd = [(i, (i - 1) % n) for i in range(n)]
-        top = unpack(jax.lax.ppermute(pack(hi_parts), axis_name, perm=fwd),
-                     hi_parts)
-        bot = unpack(jax.lax.ppermute(pack(lo_parts), axis_name, perm=bwd),
-                     lo_parts)
+        buf = jnp.concatenate([x.reshape(-1) for x in xs])
+        if wire_dtype is not None:
+            buf = buf.astype(wire_dtype)
+        buf = jax.lax.ppermute(buf, axis_name, perm=perm)
+        out, off = [], 0
+        for x in xs:
+            seg = buf[off:off + x.size]
+            out.append(seg.reshape(x.shape).astype(x.dtype))
+            off += x.size
+        return out
+
+    fwd = [(i, (i + 1) % n) for i in range(n)]
+    bwd = [(i, (i - 1) % n) for i in range(n)]
+    top = ride(hi_parts, fwd)
+    bot = ride(lo_parts, bwd)
     return [jnp.concatenate([t_, t, b_], axis=dim)
             for (t, _), t_, b_ in zip(parts, top, bot)]
 
@@ -172,73 +188,6 @@ def _local_vadvc(u_stage, wcon, u_pos, utens, utens_stage, ax_x, nx_shards):
     out = jax.vmap(vadvc_ref.vadvc)(u_stage, wcon_s, u_pos, utens,
                                     utens_stage)
     return out
-
-
-def make_distributed_step(mesh: Mesh, *, coeff: float = 0.025,
-                          dt: float = 0.1, ax_e: str | None = "pod",
-                          ax_y: str = "data", ax_x: str = "model",
-                          fused: bool = True, whole_state: bool = True,
-                          k_steps: int | str = 1,
-                          exchange_dtype=None,
-                          prefetch_w: bool | None = None,
-                          interpret: bool | None = None):
-    """DEPRECATED shim: build the distributed dycore step from flags.
-
-    The flags map onto a `DycoreProgram` + `compile_dycore(..., mesh=mesh)`
-    on the first call (the grid is only known from the state), cached per
-    (grid, dtype); results are bit-identical to the equivalent plan's
-    `step`.  The returned `step` advances `k_steps` timesteps per call and
-    exposes `step.resolved_k()` (the planner's k after a `k_steps="auto"`
-    resolution).  New code should call `compile_dycore` directly — the
-    plan also exposes `run` (ragged tails allowed) and `report`."""
-    warnings.warn(
-        "weather.domain.make_distributed_step(fused=..., whole_state=..., "
-        "...) is deprecated: build a DycoreProgram and call "
-        "repro.weather.program.compile_dycore(program, mesh=mesh) — the "
-        "ExecutionPlan resolves variant/tile/k-step/exchange once and "
-        "exposes step()/run()/report().", DeprecationWarning, stacklevel=2)
-    from repro.weather.program import DycoreProgram, compile_dycore
-
-    auto_k = k_steps == "auto"
-    if not auto_k and (not isinstance(k_steps, int) or k_steps < 1):
-        raise ValueError(f"k_steps={k_steps!r} must be a positive int "
-                         f"or 'auto'")
-    if (auto_k or k_steps > 1) and not (fused and whole_state):
-        raise ValueError("k_steps > 1 requires the fused whole-state path")
-    if exchange_dtype is not None and not (fused and whole_state):
-        raise ValueError("exchange_dtype requires the stacked (whole-state) "
-                         "exchange path")
-    have_e = ax_e is not None and ax_e in mesh.axis_names
-    spec = P(ax_e if have_e else None, None, ax_y, ax_x)
-    if fused and whole_state:
-        variant, k = "auto", k_steps
-    elif fused:
-        variant, k = "per_field", 1
-    else:
-        variant, k = "unfused", 1
-
-    cache: dict = {}
-    last_key: list = []
-
-    def step(state: WeatherState) -> WeatherState:
-        ensemble = (int(state.wcon.shape[0]) if state.wcon.ndim == 4
-                    else 1)
-        key = (state.grid_shape, str(state.wcon.dtype), ensemble)
-        if key not in cache:
-            prog = DycoreProgram(
-                grid_shape=state.grid_shape, ensemble=ensemble,
-                dtype=str(state.wcon.dtype), coeff=coeff, dt=dt,
-                variant=variant, k_steps=k, exchange_dtype=exchange_dtype)
-            cache[key] = compile_dycore(prog, mesh=mesh, ax_e=ax_e,
-                                        ax_y=ax_y, ax_x=ax_x,
-                                        interpret=interpret,
-                                        prefetch_w=prefetch_w)
-        last_key[:] = [key]
-        return cache[key].step(state)
-
-    step.resolved_k = lambda: (cache[last_key[0]].k_steps if last_key
-                               else None)
-    return step, spec
 
 
 def shard_state(state: WeatherState, mesh: Mesh, spec: P) -> WeatherState:

@@ -8,20 +8,20 @@ full COSMO port.
 
 The execution strategy — unfused oracle / per-field fused / whole-state
 fused / in-kernel k-step, tile choice, interpret mode — is resolved by the
-declarative plan API in `weather/program.py`:
+declarative plan API in `weather/program.py` (programs over the StencilOp
+registry, `weather/stencil_ops.py`):
 
-    from repro.weather.program import DycoreProgram, compile_dycore
-    plan = compile_dycore(DycoreProgram(grid_shape=(16, 64, 64)))
+    from repro.weather.program import DycoreProgram, compile
+    plan = compile(DycoreProgram(grid_shape=(16, 64, 64)))
     state = plan.step(state)          # one round
     state = plan.run(state, steps=10)
 
-`dycore_step(...)` and `run(...)` below are the LEGACY flag-soup entry
-points, kept as thin deprecated shims (they build a program and call
-`compile_dycore` under the hood, emitting `DeprecationWarning`) so the
-historical oracle/equivalence tests keep their meaning bit-for-bit.  The
-periodic per-kernel helpers (`hdiff_periodic`, `vadvc_field`) and the
-state stack/unstack utilities stay first-class — the plan lowering in
-`weather/program.py` builds on them.
+The legacy flag-soup entry points (`dycore_step`, `run`) are GONE —
+retired ROADMAP item; they lived here as `DeprecationWarning` shims until
+every caller migrated to plans.  The periodic per-kernel helpers
+(`hdiff_periodic`, `vadvc_field`) and the state stack/unstack utilities
+stay first-class — the plan lowerings in `weather/stencil_ops.py` build
+on them.
 
 The domain is doubly periodic in (y, x) — the standard dycore test setup —
 so the distributed version (weather/domain.py + program.py) only needs
@@ -30,23 +30,15 @@ circular halo exchanges.
 
 from __future__ import annotations
 
-import warnings
-
 import jax
 import jax.numpy as jnp
 
 from repro.kernels.dycore_fused.ref import pad_periodic
 from repro.kernels.hdiff import ref as hdiff_ref
 from repro.kernels.vadvc import ref as vadvc_ref
-from repro.weather.fields import PROGNOSTIC, WeatherState
+from repro.weather.fields import PROGNOSTIC
 
 HALO = 2   # hdiff needs 2; vadvc needs 1 (staggered wcon)
-
-_DEPRECATED = (
-    "weather.dycore.{name}(fused=..., whole_state=..., ...) is deprecated: "
-    "build a DycoreProgram and call repro.weather.program.compile_dycore() "
-    "— the returned ExecutionPlan resolves variant/tile/k-step/exchange "
-    "once and exposes step()/run()/report().")
 
 
 def hdiff_periodic(src: jnp.ndarray, coeff: float) -> jnp.ndarray:
@@ -84,72 +76,3 @@ def stack_state(d: dict, names=PROGNOSTIC) -> jnp.ndarray:
 def unstack_state(a: jnp.ndarray, names=PROGNOSTIC) -> dict:
     """Inverse of `stack_state`."""
     return {name: jnp.take(a, i, axis=-4) for i, name in enumerate(names)}
-
-
-# ---------------------------------------------------------------------------
-# Deprecated flag-soup shims (the pre-plan API, kept for the oracle tests)
-# ---------------------------------------------------------------------------
-
-_PLAN_CACHE: dict = {}
-
-
-def _shim_plan(state: WeatherState, *, variant, k_steps, coeff, dt,
-               interpret):
-    """Build (and cache) the ExecutionPlan a legacy call maps onto."""
-    from repro.weather.program import DycoreProgram, compile_dycore
-    ensemble = int(state.wcon.shape[0]) if state.wcon.ndim == 4 else 1
-    key = (state.grid_shape, str(state.wcon.dtype), ensemble, variant,
-           k_steps, coeff, dt, interpret)
-    plan = _PLAN_CACHE.get(key)
-    if plan is None:
-        prog = DycoreProgram(grid_shape=state.grid_shape, ensemble=ensemble,
-                             dtype=str(state.wcon.dtype), coeff=coeff,
-                             dt=dt, variant=variant, k_steps=k_steps)
-        plan = compile_dycore(prog, interpret=interpret)
-        _PLAN_CACHE[key] = plan
-    return plan
-
-
-def _variant(fused: bool, whole_state: bool) -> str:
-    if not fused:
-        return "unfused"
-    return "auto" if whole_state else "per_field"
-
-
-def dycore_step(state: WeatherState, coeff: float = 0.025,
-                dt: float = 0.1, fused: bool = True,
-                whole_state: bool = True,
-                interpret: bool | None = None) -> WeatherState:
-    """DEPRECATED shim: one timestep through the flags-era entry point.
-
-    `fused=True, whole_state=True` (default) is the whole-state fused
-    variant (ONE Pallas launch), `whole_state=False` the per-field fused
-    pipeline, `fused=False` the unfused oracle composition.  The call maps
-    onto `compile_dycore` under the hood and returns bit-identical results
-    to the equivalent plan's `step`."""
-    warnings.warn(_DEPRECATED.format(name="dycore_step"), DeprecationWarning,
-                  stacklevel=2)
-    plan = _shim_plan(state, variant=_variant(fused, whole_state), k_steps=1,
-                      coeff=coeff, dt=dt, interpret=interpret)
-    return plan.step(state)
-
-
-def run(state: WeatherState, steps: int, coeff: float = 0.025,
-        dt: float = 0.1, fused: bool = True,
-        whole_state: bool = True, k_steps: int = 1,
-        interpret: bool | None = None) -> WeatherState:
-    """DEPRECATED shim: advance `steps` timesteps through the flags-era
-    entry point.  With `k_steps > 1` (fused whole-state path) the
-    trajectory runs as k-step rounds — ONE Pallas launch each, the k local
-    steps iterated in-kernel on VMEM state — plus, when `steps` is not a
-    multiple, one shorter ragged tail round (`ExecutionPlan.run`)."""
-    warnings.warn(_DEPRECATED.format(name="run"), DeprecationWarning,
-                  stacklevel=2)
-    if k_steps != "auto" and (not isinstance(k_steps, int) or k_steps < 1):
-        raise ValueError(f"k_steps={k_steps!r} must be >= 1")
-    if k_steps != 1 and not (fused and whole_state):
-        raise ValueError("k_steps > 1 requires the fused whole-state path")
-    plan = _shim_plan(state, variant=_variant(fused, whole_state),
-                      k_steps=k_steps, coeff=coeff, dt=dt,
-                      interpret=interpret)
-    return plan.run(state, steps)

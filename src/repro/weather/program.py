@@ -1,36 +1,40 @@
-"""Declarative dycore programs: spec → plan → launch.
+"""Declarative stencil programs: spec → plan → launch, over registered ops.
 
-NERO's key design move (paper §4) is separating the *what* — compound
-vadvc+hdiff stencils over a field set — from the *how* — a synthesized
-dataflow: tiling, line buffers, burst schedule — so the host calls ONE
-compiled accelerator action instead of threading per-kernel knobs.  This
-module is that split for the Pallas reproduction:
+NERO's key design move (paper §4) is separating the *what* — a compound
+stencil over a field set — from the *how* — a synthesized dataflow: tiling,
+line buffers, burst schedule — so the host calls ONE compiled accelerator
+action.  Since this PR the *what* names a REGISTERED STENCIL OPERATOR
+(`weather/stencil_ops.py`), not just the fused dycore:
 
-* `DycoreProgram` is the *what*: grid shape, ensemble, field set + halo
-  depth, precision policy (state dtype + exchange wire dtype), boundary,
-  and the steps-per-round policy (`k_steps`, possibly `"auto"`).
-* `compile_dycore(program, mesh=None, ...)` is the planner: it resolves
-  the whole execution strategy ONCE — execution variant (per-field /
-  whole-state / in-kernel k-step / unfused oracle), the tile plan from
-  `core/tiling` (folding the three `plan_tile*` paths into one resolver,
-  `kernels/dycore_fused/ops.py::resolve_tile`), the communication-avoiding
-  depth (`core/autotune.py::resolve_k_steps`, VMEM-clamped), the ragged
-  stacked-exchange schedule (per-operand halo depths, `wcon`'s right-only
-  staggering column, wire dtype), and interpret/prefetch resolution.
+* `StencilProgram` is the *what*: the op (`"dycore"`, `"hdiff"`,
+  `"vadvc"`, or anything `register_stencil_op` admitted), grid shape,
+  ensemble, field set, precision policy (state dtype + exchange wire
+  dtype), boundary, and the steps-per-round policy (`k_steps`, possibly
+  `"auto"`).  `DycoreProgram` is the dycore spec's thin alias.
+* `compile(program, mesh=None, ...)` is the planner: it resolves the whole
+  execution strategy ONCE — execution variant, the tile plan via the op's
+  declared tile spaces (`resolve_tile` hooks over `core/tiling` /
+  `core/autotune`), the communication-avoiding depth
+  (`core/autotune.resolve_k_steps` fed the op's declared flops and reach,
+  VMEM-clamped), and the packed-exchange schedule derived ENTIRELY from
+  the op's per-operand `(lo, hi)` footprint (`OperandRide`) — wcon's
+  right-only staggering column and vadvc's single-ppermute wcon ride fall
+  out of the declaration, not out of planner special cases.
+  `compile_dycore` is the historical alias.
 * `ExecutionPlan` is the *how*, immutable: `plan.step(state)` advances one
   round (`k_steps` timesteps), `plan.run(state, steps)` advances any step
   count (a shorter ragged TAIL round `k' = steps mod k` is compiled on
   demand), and `plan.report()` returns the machine-readable strategy —
-  modeled HBM traffic (`core/memmodel`), exchange-model bytes, and the
-  structural launch/collective counts that `core/trace_stats` can verify
-  against the traced jaxpr — which benchmarks embed verbatim in
-  `BENCH_dycore.json`.
+  the op's declared footprint, modeled HBM traffic and per-op wire bytes
+  (`core/memmodel`, footprint-driven), modeled GFLOPS
+  (`core/perfmodel`), and the structural launch/collective counts that
+  `core/trace_stats.assert_plan_structure` verifies against the traced
+  jaxpr — which benchmarks embed verbatim in `BENCH_dycore.json`
+  (`per_kernel` blocks: hdiff vs vadvc vs fused, the paper's table).
 
-The legacy flag-soup entry points (`weather/dycore.py::dycore_step/run`,
-`weather/domain.py::make_distributed_step`) survive as deprecated shims
-that build a program and call `compile_dycore` under the hood, so every
-oracle/equivalence test keeps its meaning bit-for-bit.  New scenarios —
-field sets, meshes, dtypes — are a spec change, not another keyword.
+The legacy flag-soup entry points (`dycore_step`/`run`/
+`make_distributed_step`) are GONE — retired ROADMAP item; every caller
+builds a program and compiles it.
 """
 
 from __future__ import annotations
@@ -43,35 +47,42 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.compat import shard_map as _shard_map
-from repro.core import autotune, memmodel, tiling
+from repro.core import autotune, memmodel, perfmodel
 from repro.kernels.dycore_fused import ops as fused_ops
-from repro.kernels.dycore_fused.fused import (fused_dycore_kstep_pallas,
-                                              fused_dycore_pallas,
-                                              fused_dycore_whole_state_pallas)
-from repro.weather import domain as _domain
-from repro.weather import dycore as _dycore
-from repro.weather.dycore import HALO
+from repro.weather import stencil_ops as _sops
 from repro.weather.fields import PROGNOSTIC, WeatherState
+from repro.weather.stencil_ops import (StencilOpDef, get_stencil_op,
+                                       register_stencil_op,
+                                       registered_stencil_ops)
 
-VARIANTS = ("auto", "unfused", "per_field", "whole_state", "kstep")
+VARIANTS = _sops.VARIANTS
+
+__all__ = ["StencilProgram", "DycoreProgram", "ExchangeSchedule",
+           "ExecutionPlan", "compile", "compile_dycore", "StencilOpDef",
+           "get_stencil_op", "register_stencil_op",
+           "registered_stencil_ops", "VARIANTS"]
 
 
 @dataclasses.dataclass(frozen=True)
-class DycoreProgram:
-    """The *what* of a dycore run: field set + grid + policies, no knobs.
+class StencilProgram:
+    """The *what* of a stencil run: op + field set + grid + policies.
 
-    `variant` names the execution strategy, `"auto"` lets the planner pick
-    (k-step when `k_steps > 1` resolves, else whole-state).  `k_steps` is
-    the steps-per-round policy: a positive int, or `"auto"` to let the
-    planner resolve it from the exchange model (distributed; single-chip
+    `op` names a registered `StencilOpDef` (`"dycore"`, `"hdiff"`,
+    `"vadvc"`, ...).  `variant` names the execution strategy, `"auto"`
+    lets the planner pick (the op's k-step round when `k_steps > 1`
+    resolves, else whole-state).  `k_steps` is the steps-per-round policy:
+    a positive int, or `"auto"` to let the planner resolve it from the
+    op's footprint-driven exchange model (distributed; single-chip
     `"auto"` resolves to 1 — there are no collectives to amortize).
     `dtype` is the state/compute precision policy; `exchange_dtype` the
-    wire precision of the stacked halo exchange (e.g. `"bfloat16"`)."""
+    wire precision of the packed halo exchange (e.g. `"bfloat16"`).
+    `halo` defaults to the op's declared stencil reach and only exists so
+    a mismatched expectation fails loudly."""
 
     grid_shape: Tuple[int, int, int]            # (nz, ny, nx)
     ensemble: int = 1
     fields: Tuple[str, ...] = PROGNOSTIC        # field set (fields.py)
-    halo: int = HALO                            # stencil reach per step
+    halo: Optional[int] = None                  # op's reach; checked if given
     dtype: str = "float32"
     boundary: str = "periodic"
     coeff: float = 0.025
@@ -79,6 +90,7 @@ class DycoreProgram:
     variant: str = "auto"
     k_steps: Any = "auto"                       # int or "auto"
     exchange_dtype: Optional[str] = None
+    op: str = "dycore"
 
     def __post_init__(self):
         object.__setattr__(self, "grid_shape",
@@ -91,33 +103,45 @@ class DycoreProgram:
         if self.exchange_dtype is not None:
             object.__setattr__(self, "exchange_dtype",
                                str(jnp.dtype(self.exchange_dtype)))
+        try:
+            opdef = get_stencil_op(self.op)
+        except KeyError as e:
+            raise ValueError(str(e)) from None
+        if self.halo is None:
+            object.__setattr__(self, "halo", opdef.halo)
         if len(self.grid_shape) != 3 or min(self.grid_shape) < 1:
             raise ValueError(f"grid_shape={self.grid_shape} must be a "
                              f"positive (nz, ny, nx) triple")
         if not self.fields:
-            raise ValueError("a DycoreProgram needs at least one field")
+            raise ValueError("a StencilProgram needs at least one field")
         if self.ensemble < 1:
             raise ValueError(f"ensemble={self.ensemble} must be >= 1")
         if self.boundary != "periodic":
             raise ValueError(f"boundary={self.boundary!r}: only 'periodic' "
                              f"is implemented (the paper's dycore test "
                              f"setup; halo exchange supplies shard edges)")
-        if self.halo != HALO:
-            raise ValueError(f"halo={self.halo}: the compound kernels have "
-                             f"a fixed stencil reach of {HALO} (hdiff needs "
-                             f"2, vadvc 1)")
-        if self.variant not in VARIANTS:
-            raise ValueError(f"variant={self.variant!r} not in {VARIANTS}")
+        if self.halo != opdef.halo:
+            raise ValueError(f"halo={self.halo}: op {self.op!r} declares a "
+                             f"fixed stencil reach of {opdef.halo}")
+        if self.variant != "auto" and self.variant not in opdef.variants:
+            raise ValueError(f"variant={self.variant!r} not supported by "
+                             f"op {self.op!r} (supported: "
+                             f"{('auto',) + opdef.variants})")
         if self.k_steps != "auto" and (not isinstance(self.k_steps, int)
                                        or self.k_steps < 1):
             raise ValueError(f"k_steps={self.k_steps!r} must be a positive "
                              f"int or 'auto'")
+        if (isinstance(self.k_steps, int) and self.k_steps > 1
+                and "kstep" not in opdef.variants):
+            raise ValueError(f"k_steps={self.k_steps}: op {self.op!r} has "
+                             f"no k-step round (its footprint does not "
+                             f"deepen with k)")
         if (self.variant in ("unfused", "per_field", "whole_state")
                 and self.k_steps not in ("auto", 1)):
             raise ValueError(f"variant={self.variant!r} with "
                              f"k_steps={self.k_steps}: k_steps > 1 is the "
-                             f"in-kernel k-step strategy — use "
-                             f"variant='kstep' (or 'auto')")
+                             f"k-step strategy — use variant='kstep' (or "
+                             f"'auto')")
         if self.variant == "kstep" and self.k_steps == 1:
             raise ValueError("variant='kstep' needs k_steps >= 2 (or "
                              "'auto'); k_steps=1 IS the whole-state step")
@@ -127,48 +151,79 @@ class DycoreProgram:
         return len(self.fields)
 
 
+# The dycore spec is a thin alias: `op` already defaults to "dycore".
+DycoreProgram = StencilProgram
+
+
 @dataclasses.dataclass(frozen=True)
 class ExchangeSchedule:
     """Resolved halo-exchange strategy of a distributed plan.
 
     `mode="packed"` is the stacked ragged exchange: every operand shares
-    one flattened wire buffer per direction (one `ppermute` pair each);
-    the `3·nf` field operands ride at `depth_y`/`depth_x`, `wcon` at its
-    own asymmetric x-depth `wcon_depth_x = (left, right)` — the `+1`
-    staggering column (`w[c] = wcon[c] + wcon[c+1]`) is needed from the
-    RIGHT neighbor only.  `mode="per_operand"` is the legacy per-field
-    exchange of the per-field/unfused variants."""
+    one flattened wire buffer per direction (at most one `ppermute` pair
+    each; a side nothing rides is elided).  `rides` are the RESOLVED
+    per-operand `(lo, hi)` depths straight from the op's registry
+    declaration — e.g. the dycore's `wcon` at `(k·HALO, k·HALO + 1)` in x
+    (the `+1` staggering column comes from the RIGHT neighbor only), or
+    vadvc's lone `("wcon", (0, 0), (0, 1))` single-ppermute ride.
+    `mode="per_operand"` is the legacy per-field exchange of the dycore's
+    per-field/unfused variants."""
 
     mode: str                                   # "packed" | "per_operand"
     shards: Tuple[int, int]                     # (py, px)
-    depth_y: int
-    depth_x: int
-    wcon_depth_x: Tuple[int, int]               # (left-pad, right-pad)
+    rides: Tuple[Tuple[str, Tuple[int, int], Tuple[int, int]], ...]
     wire_dtype: Optional[str]
 
+    def _ride(self, operand: str):
+        for name, dy, dx in self.rides:
+            if name == operand:
+                return dy, dx
+        return None
+
+    @property
+    def depth_y(self) -> int:
+        r = self._ride("fields")
+        return r[0][1] if r else 0
+
+    @property
+    def depth_x(self) -> int:
+        r = self._ride("fields")
+        return r[1][0] if r else 0
+
+    @property
+    def wcon_depth_x(self) -> Optional[Tuple[int, int]]:
+        r = self._ride("wcon")
+        return r[1] if r else None
+
     def describe(self) -> Dict[str, Any]:
-        return {"mode": self.mode, "shards": list(self.shards),
-                "depth_y": self.depth_y, "depth_x": self.depth_x,
-                "wcon_depth_x": list(self.wcon_depth_x),
-                "wire_dtype": self.wire_dtype}
+        d: Dict[str, Any] = {
+            "mode": self.mode, "shards": list(self.shards),
+            "rides": {name: {"depth_y": list(dy), "depth_x": list(dx)}
+                      for name, dy, dx in self.rides},
+            "depth_y": self.depth_y, "depth_x": self.depth_x,
+            "wire_dtype": self.wire_dtype}
+        if self.wcon_depth_x is not None:
+            d["wcon_depth_x"] = list(self.wcon_depth_x)
+        return d
 
 
 @dataclasses.dataclass(frozen=True)
 class ExecutionPlan:
     """The *how*: an immutable, fully-resolved execution strategy.
 
-    Produced by `compile_dycore`; exposes `step(state)` (one round =
-    `k_steps` timesteps), `run(state, steps)` (any step count; a shorter
-    tail round is compiled for `steps % k_steps`), and `report()` (the
+    Produced by `compile`; exposes `step(state)` (one round = `k_steps`
+    timesteps), `run(state, steps)` (any step count; a shorter tail round
+    is compiled for `steps % k_steps`), and `report()` (the
     machine-readable strategy benchmarks embed verbatim)."""
 
-    program: DycoreProgram
+    program: StencilProgram
     variant: str                                # resolved, never "auto"
     k_steps: int                                # resolved int
     tile_ty: Optional[int]                      # None for unfused
-    tile_plan: Optional[tiling.TilePlan]
+    tile_plan: Optional[Any]                    # tiling.TilePlan
     local_grid: Tuple[int, int, int]            # per-shard (nz, ly, lx)
     compute_grid: Tuple[int, int, int]          # grid the kernel tiles over
+    rides: Tuple[Tuple[str, Tuple[int, int], Tuple[int, int]], ...]
     interpret: bool
     prefetch_w: bool
     exchange: Optional[ExchangeSchedule]        # None on a single chip
@@ -182,8 +237,16 @@ class ExecutionPlan:
 
     # -- public API ---------------------------------------------------------
     @property
+    def op_def(self) -> StencilOpDef:
+        return get_stencil_op(self.program.op)
+
+    @property
     def distributed(self) -> bool:
         return self.mesh is not None
+
+    @property
+    def shards(self) -> Tuple[int, int]:
+        return self.exchange.shards if self.exchange is not None else (1, 1)
 
     @property
     def state_spec(self) -> Optional[P]:
@@ -225,14 +288,18 @@ class ExecutionPlan:
         return state
 
     def report(self) -> Dict[str, Any]:
-        """Machine-readable strategy: the resolved variant/tile/k/exchange,
-        the structural launch/collective counts per round (verifiable
-        against a traced jaxpr via `trace_stats.assert_plan_structure`),
-        and the modeled HBM-traffic / exchange-model numbers.  Plain
-        JSON-serializable types only — benchmarks embed it verbatim."""
+        """Machine-readable strategy: the resolved op + variant + tile + k
+        + exchange, the op's declared footprint, the structural
+        launch/collective counts per round (verifiable against a traced
+        jaxpr via `trace_stats.assert_plan_structure`), and the modeled
+        HBM-traffic / wire-byte / GFLOPS numbers.  Plain JSON-serializable
+        types only — benchmarks embed it verbatim."""
         prog = self.program
+        opdef = self.op_def
         rep: Dict[str, Any] = {
+            "op": prog.op,
             "program": {
+                "op": prog.op,
                 "grid_shape": list(prog.grid_shape),
                 "ensemble": prog.ensemble,
                 "fields": list(prog.fields),
@@ -247,6 +314,7 @@ class ExecutionPlan:
             },
             "variant": self.variant,
             "k_steps": self.k_steps,
+            "footprint": opdef.describe(prog.n_fields, self.k_steps),
             "tile": (None if self.tile_plan is None
                      else {"ty": self.tile_ty, **self.tile_plan.describe()}),
             "interpret": self.interpret,
@@ -260,29 +328,43 @@ class ExecutionPlan:
             "pallas_calls_per_round": self.pallas_calls_per_round,
             "collectives_per_round": self.collectives_per_round,
         }
-        # The traffic model needs a fused tile; unfused plans have none, so
-        # model at the whole-state tile the planner WOULD resolve (recorded
-        # as traffic_model_ty so the artifact is self-describing; cached —
-        # it is an autotune sweep and report() is advertised as cheap).
+        # The traffic model needs a tile; unfused plans have none, so model
+        # at the tile the default variant WOULD resolve (recorded as
+        # traffic_model_ty so the artifact is self-describing; cached — it
+        # is an autotune sweep and report() is advertised as cheap).
         model_ty = self.tile_ty
         if model_ty is None:
             model_ty = self._cache.get("traffic_model_ty")
             if model_ty is None:
-                model_ty = fused_ops.resolve_tile(
-                    "whole_state", self.compute_grid, prog.dtype,
-                    prog.n_fields)
+                # Resolve over the PHYSICAL grid (not the padded/folded
+                # compute grid): the traffic model below is evaluated on
+                # the physical grid, so the modeled tile must be a legal
+                # window of it.
+                tp = opdef.resolve_tile("whole_state", prog.grid_shape,
+                                        prog.dtype, prog.n_fields,
+                                        prog.ensemble, 1)
+                model_ty = tp.tile[1]
                 self._cache["traffic_model_ty"] = model_ty
         rep["traffic_model_ty"] = model_ty
-        rep["traffic"] = memmodel.dycore_step_traffic(
-            prog.grid_shape, prog.dtype, n_fields=prog.n_fields,
-            ty=model_ty, k_steps=self.k_steps)
-        if (self.exchange is not None and self.exchange.mode == "packed"):
-            rep["exchange_model"] = memmodel.kstep_exchange_model(
-                prog.grid_shape, prog.dtype, n_fields=prog.n_fields,
-                k=self.k_steps, shards=self.exchange.shards, halo=prog.halo,
-                exchange_dtype=prog.exchange_dtype)
+        rep["traffic"] = opdef.traffic(self, model_ty)
+        if (self.exchange is not None and self.exchange.mode == "packed"
+                and opdef.exchange_model is not None):
+            rep["exchange_model"] = opdef.exchange_model(self)
         else:
             rep["exchange_model"] = None
+        # Modeled TPU performance of the resolved tile plan — the per-op
+        # GFLOPS / GFLOPS-per-watt axis of the paper's two-kernel table.
+        if self.tile_plan is not None:
+            est = self._cache.get("perf_est")
+            if est is None:
+                est = perfmodel.estimate(self.tile_plan)
+                self._cache["perf_est"] = est
+            rep["model"] = {"time_us": est.time_s * 1e6,
+                            "gflops": est.gflops,
+                            "gflops_per_watt": est.gflops_per_watt,
+                            "bottleneck": est.bottleneck}
+        else:
+            rep["model"] = None
         return rep
 
     # -- internals ----------------------------------------------------------
@@ -336,10 +418,10 @@ class ExecutionPlan:
             prog = dataclasses.replace(self.program, variant="auto",
                                        k_steps=k_tail)
             ax_e, ax_y, ax_x = self.mesh_axes
-            plan = compile_dycore(prog, mesh=self.mesh, ax_e=ax_e,
-                                  ax_y=ax_y, ax_x=ax_x,
-                                  interpret=self.interpret,
-                                  prefetch_w=self.prefetch_w)
+            plan = compile(prog, mesh=self.mesh, ax_e=ax_e,
+                           ax_y=ax_y, ax_x=ax_x,
+                           interpret=self.interpret,
+                           prefetch_w=self.prefetch_w)
             self._cache[("tail", k_tail)] = plan
         return plan
 
@@ -349,25 +431,32 @@ class ExecutionPlan:
 # ---------------------------------------------------------------------------
 
 
-def compile_dycore(program: DycoreProgram, mesh: Optional[Mesh] = None, *,
-                   ax_e: Optional[str] = "pod", ax_y: str = "data",
-                   ax_x: str = "model", interpret: Optional[bool] = None,
-                   prefetch_w: Optional[bool] = None) -> ExecutionPlan:
+def compile(program: StencilProgram, mesh: Optional[Mesh] = None, *,
+            ax_e: Optional[str] = "pod", ax_y: str = "data",
+            ax_x: str = "model", interpret: Optional[bool] = None,
+            prefetch_w: Optional[bool] = None) -> ExecutionPlan:
     """Resolve `program`'s whole execution strategy once; return the plan.
+
+    Works over any REGISTERED stencil op: the exchange schedule, the
+    structural launch/collective counts, the k-step resolution, and the
+    tile plan are all derived from the op's `StencilOpDef` declaration
+    (footprint rides, flops, tile spaces, lowering hooks) — the planner
+    has no per-op branches.
 
     With `mesh`, the plan shards y over `ax_y`, x over `ax_x`, the
     ensemble over `ax_e` when present (z always chip-local), and its step
-    runs the distributed round: ONE ragged packed halo exchange + the
+    runs the distributed round: the op's packed halo exchange + the
     chip-local kernel + interior crop.  Overrides: `interpret` (default:
     auto — native Pallas on TPU, interpreter elsewhere) and `prefetch_w`
-    (the k-step kernel's double-buffered `w` DMA pipeline; default: on
-    outside interpret mode)."""
-    if not isinstance(program, DycoreProgram):
-        raise TypeError(f"compile_dycore wants a DycoreProgram, got "
+    (the dycore k-step kernel's double-buffered `w` DMA pipeline; default:
+    on outside interpret mode)."""
+    if not isinstance(program, StencilProgram):
+        raise TypeError(f"compile wants a StencilProgram, got "
                         f"{type(program).__name__}")
+    opdef = get_stencil_op(program.op)
     nz, ny, nx = program.grid_shape
     nf = program.n_fields
-    halo = program.halo
+    halo = opdef.halo
     if interpret is None:
         interpret = fused_ops._auto_interpret()
 
@@ -384,16 +473,27 @@ def compile_dycore(program: DycoreProgram, mesh: Optional[Mesh] = None, *,
         py = px = 1
     ly, lx = ny // py, nx // px
 
-    # --- steps-per-round: the communication-avoiding k (one resolver) ---
+    # --- steps-per-round: the communication-avoiding k (one resolver,
+    # fed the OP'S declared flops/reach and footprint-driven wire model) ---
     k = program.k_steps
     if k == "auto":
-        if program.variant not in ("auto", "kstep") or mesh is None:
-            # The variant is pinned to a one-step-per-round strategy (or
-            # there are no collectives at all): nothing to amortize.
+        if ("kstep" not in opdef.variants
+                or program.variant not in ("auto", "kstep") or mesh is None):
+            # The op (or pinned variant) steps once per round, or there
+            # are no collectives at all: nothing to amortize.
             k = 1
         else:
-            k = autotune.resolve_k_steps(program.grid_shape, program.dtype,
-                                         (py, px), n_fields=nf, halo=halo)
+            def exchange_model(kk):
+                return memmodel.packed_exchange_model(
+                    program.grid_shape, program.dtype,
+                    rides=opdef.memmodel_rides(nf), k=kk, shards=(py, px),
+                    compute_halo=(kk * halo, kk * halo))
+            k = autotune.resolve_k_steps(
+                program.grid_shape, program.dtype, (py, px), n_fields=nf,
+                halo=halo, flops_per_point=opdef.flops_per_point,
+                exchange_model=exchange_model,
+                vmem_check=None if opdef.inkernel_kstep
+                else (lambda kk: None))
 
     # --- execution variant ---
     variant = program.variant
@@ -402,243 +502,113 @@ def compile_dycore(program: DycoreProgram, mesh: Optional[Mesh] = None, *,
     if variant == "kstep" and k == 1:
         variant = "whole_state"    # k resolved to 1: same round, one step
     if k > 1 and variant != "kstep":
-        raise ValueError(f"k_steps={k} requires the fused whole-state path "
+        raise ValueError(f"k_steps={k} requires the k-step round "
                          f"(variant {variant!r} steps one at a time)")
-    if program.exchange_dtype is not None and variant not in ("whole_state",
-                                                              "kstep"):
-        raise ValueError("exchange_dtype requires the stacked (whole-state) "
-                         "exchange path")
+    if (program.exchange_dtype is not None
+            and variant not in opdef.packed_variants):
+        raise ValueError("exchange_dtype requires a packed (stacked) "
+                         "exchange variant of op "
+                         f"{program.op!r} ({opdef.packed_variants})")
 
-    # --- exchange schedule + the grid the kernel actually tiles over ---
+    # --- exchange schedule + the grid the kernel actually tiles over,
+    # both derived from the op's declared footprint ---
+    rides = opdef.resolved_rides(k)
+    hy = hx = k * halo
+    pads = (mesh is not None) or opdef.pads_single_chip
+    compute_grid = ((nz, ly + 2 * hy, lx + 2 * hx) if pads
+                    else program.grid_shape)
+    if pads:
+        # A ride deeper than the local slab would need data from beyond
+        # the adjacent neighbor (or, single-chip, wrap more than one
+        # period) — refuse at compile time, loudly.
+        for name, dy, dx in rides:
+            if max(dy) > ly or max(dx) > lx:
+                raise ValueError(
+                    f"k_steps={k} needs a ({max(dy)}, {max(dx)})-deep halo "
+                    f"for {name!r} but the local slab is only ({ly}, {lx}); "
+                    f"use fewer shards, a bigger grid, or a smaller "
+                    f"k_steps")
     exchange = None
     if mesh is not None:
-        if variant in ("whole_state", "kstep"):
-            hy = hx = k * halo
-            if hy > ly or hx + 1 > lx:
-                raise ValueError(
-                    f"k_steps={k} needs a ({hy}, {hx + 1})-deep halo but "
-                    f"the local slab is only ({ly}, {lx}); use fewer "
-                    f"shards, a bigger grid, or a smaller k_steps")
-            exchange = ExchangeSchedule(
-                mode="packed", shards=(py, px), depth_y=hy, depth_x=hx,
-                wcon_depth_x=(hx, hx + 1),
-                wire_dtype=program.exchange_dtype)
-            compute_grid = (nz, ly + 2 * hy, lx + 2 * hx)
+        if variant in opdef.packed_variants:
+            exchange = ExchangeSchedule(mode="packed", shards=(py, px),
+                                        rides=rides,
+                                        wire_dtype=program.exchange_dtype)
         else:
-            exchange = ExchangeSchedule(
-                mode="per_operand", shards=(py, px), depth_y=halo,
-                depth_x=halo, wcon_depth_x=(0, 1), wire_dtype=None)
+            # Legacy per-operand exchange (dycore per_field/unfused): one
+            # exchange per operand at the per-step reach.
+            exchange = ExchangeSchedule(mode="per_operand", shards=(py, px),
+                                        rides=opdef.resolved_rides(1),
+                                        wire_dtype=None)
             compute_grid = (nz, ly + 2 * halo, lx + 2 * halo)
-    else:
-        compute_grid = program.grid_shape
 
-    # --- tile plan: ONE resolver for every fused tile space ---
-    ty = fused_ops.resolve_tile(variant, compute_grid, program.dtype, nf, k)
-    tile_plan = None
-    if ty is not None:
-        spec = {"per_field": tiling.DYCORE_FUSED,
-                "whole_state": tiling.dycore_whole_state_spec(nf),
-                "kstep": tiling.dycore_kstep_spec(nf, k)}[variant]
-        tile_plan = tiling.TilePlan(op=spec, grid_shape=compute_grid,
-                                    tile=(compute_grid[0], ty,
-                                          compute_grid[2]),
-                                    dtype=str(jnp.dtype(program.dtype)))
+    # --- tile plan: the op's own resolver over its registered spaces ---
+    tile_plan = opdef.resolve_tile(variant, compute_grid, program.dtype,
+                                   nf, program.ensemble, k)
+    ty = tile_plan.tile[1] if tile_plan is not None else None
 
     # --- structural costs per round (trace-verifiable, see trace_stats) ---
-    pallas_calls = {"unfused": 0, "per_field": nf,
-                    "whole_state": 1, "kstep": 1}[variant]
-    ey = 2 if py > 1 else 0          # one ppermute pair per active direction
-    ex = 2 if px > 1 else 0
-    rc = 1 if px > 1 else 0          # wcon's right-column fetch
+    pallas_calls = opdef.pallas_calls(variant, nf, k)
     if mesh is None:
         collectives = 0
-    elif variant in ("whole_state", "kstep"):
-        collectives = ey + ex        # the packed exchange: 4 on a 2-D mesh
-    elif variant == "per_field":
-        # shared staggered-w pad + 3 per-operand pads per field
-        collectives = rc + (ey + ex) + nf * 3 * (ey + ex)
-    else:                            # unfused: per-field vadvc + hdiff pads
-        collectives = nf * (rc + ey + ex)
+    else:
+        collectives = (opdef.collectives(variant, nf, py, px, k)
+                       if opdef.collectives is not None else None)
+        if collectives is None:
+            collectives = opdef.generic_collectives(py, px, k)
 
     resolved_prefetch = (not interpret) if prefetch_w is None else prefetch_w
 
     return ExecutionPlan(
         program=program, variant=variant, k_steps=k, tile_ty=ty,
         tile_plan=tile_plan, local_grid=(nz, ly, lx),
-        compute_grid=compute_grid, interpret=interpret,
+        compute_grid=compute_grid, rides=rides, interpret=interpret,
         prefetch_w=resolved_prefetch, exchange=exchange,
         pallas_calls_per_round=pallas_calls,
         collectives_per_round=collectives, mesh=mesh,
         mesh_axes=(ax_e, ax_y, ax_x))
 
 
+# The historical dycore entry point: same planner, op defaults to "dycore".
+compile_dycore = compile
+
+
 # ---------------------------------------------------------------------------
-# Lowering: plan -> step callable
+# Lowering: plan -> step callable (shared shard_map/jit scaffolding; the
+# per-op compute comes from the registry's lowering hooks)
 # ---------------------------------------------------------------------------
 
 
 def _build_local_step(plan: ExecutionPlan):
-    """Single-chip lowering: the periodic-domain kernels at the plan's
-    resolved tile/precision/interpret settings.  Every variant is wrapped
-    in ONE jax.jit so a round is a single dispatch (stack/unstack and the
-    per-field loop trace into the same computation)."""
-    prog = plan.program
-    names, coeff, dt = prog.fields, prog.coeff, prog.dt
-    variant, ty, interp = plan.variant, plan.tile_ty, plan.interpret
-    stack = lambda d: _dycore.stack_state(d, names)
-    unstack = lambda a: _dycore.unstack_state(a, names)
-
-    if variant == "unfused":
-        @jax.jit
-        def step(state: WeatherState) -> WeatherState:
-            new_fields, new_stage = {}, {}
-            for name in names:
-                f = state.fields[name]
-                stage = _dycore.vadvc_field(
-                    u_stage=f, wcon=state.wcon, u_pos=f,
-                    utens=state.tens[name],
-                    utens_stage=state.stage_tens[name])
-                f = f + dt * stage
-                f = _dycore.hdiff_periodic(f, coeff)
-                new_fields[name] = f
-                new_stage[name] = stage
-            return WeatherState(fields=new_fields, wcon=state.wcon,
-                                tens=state.tens, stage_tens=new_stage)
-        return step
-
-    if variant == "per_field":
-        @jax.jit
-        def step(state: WeatherState) -> WeatherState:
-            new_fields, new_stage = {}, {}
-            for name in names:
-                f_new, stage = fused_ops.fused_step(
-                    state.fields[name], state.wcon, state.tens[name],
-                    state.stage_tens[name], coeff=coeff, dt=dt, ty=ty,
-                    interpret=interp)
-                new_fields[name] = f_new
-                new_stage[name] = stage
-            return WeatherState(fields=new_fields, wcon=state.wcon,
-                                tens=state.tens, stage_tens=new_stage)
-        return step
-
-    if variant == "whole_state":
-        @jax.jit
-        def step(state: WeatherState) -> WeatherState:
-            f_new, stage = fused_ops.fused_step_whole_state(
-                stack(state.fields), state.wcon, stack(state.tens),
-                stack(state.stage_tens), coeff=coeff, dt=dt, ty=ty,
-                interpret=interp)
-            return WeatherState(fields=unstack(f_new), wcon=state.wcon,
-                                tens=state.tens, stage_tens=unstack(stage))
-        return step
-
-    k = plan.k_steps
+    """Single-chip lowering.  Ops with a dedicated periodic-domain path
+    (the dycore's kernels wrap in-kernel) supply `build_local_step`;
+    otherwise the op's shard-local round runs directly — its packed
+    exchange degenerates to wrap padding on one shard.  Either way the
+    round is ONE jax.jit dispatch."""
+    opdef = plan.op_def
+    if opdef.build_local_step is not None:
+        return opdef.build_local_step(plan)
+    local = opdef.build_shard_local(plan)
 
     @jax.jit
     def step(state: WeatherState) -> WeatherState:
-        f_new, stage = fused_ops.fused_step_kstep(
-            stack(state.fields), state.wcon, stack(state.tens),
-            stack(state.stage_tens), k_steps=k, coeff=coeff, dt=dt, ty=ty,
-            interpret=interp, prefetch_w=plan.prefetch_w)
-        return WeatherState(fields=unstack(f_new), wcon=state.wcon,
-                            tens=state.tens, stage_tens=unstack(stage))
+        new_fields, new_stage = local(state.fields, state.wcon,
+                                      state.tens, state.stage_tens)
+        return WeatherState(fields=new_fields, wcon=state.wcon,
+                            tens=state.tens, stage_tens=new_stage)
     return step
 
 
 def _build_distributed_step(plan: ExecutionPlan):
-    """Distributed lowering: halo exchange (per the plan's schedule) +
-    chip-local kernel + interior crop, shard_mapped over the mesh.
+    """Distributed lowering: the op's chip-local round (halo exchange per
+    the plan's footprint-derived schedule + local kernel + interior crop),
+    shard_mapped over the mesh.
 
     See `weather/domain.py` for the exchange primitives and the design
     rationale (NERO's scale-out story)."""
-    prog = plan.program
-    mesh = plan.mesh
-    ax_e, ax_y, ax_x = plan.mesh_axes
-    names, nf = prog.fields, prog.n_fields
-    coeff, dt, halo = prog.coeff, prog.dt, prog.halo
-    k, ty, interp = plan.k_steps, plan.tile_ty, plan.interpret
-    py, px = plan.exchange.shards
+    local_step = plan.op_def.build_shard_local(plan)
     spec = plan.state_spec
-
-    def local_step_unfused(fields, wcon, tens, stage_tens):
-        new_fields, new_stage = {}, {}
-        for name in names:
-            f = fields[name]
-            stage = _domain._local_vadvc(f, wcon, f, tens[name],
-                                         stage_tens[name], ax_x, px)
-            f = f + dt * stage
-            f = _domain._local_hdiff(f, coeff, ax_y, ax_x, py, px)
-            new_fields[name] = f
-            new_stage[name] = stage
-        return new_fields, new_stage
-
-    def local_step_per_field(fields, wcon, tens, stage_tens):
-        e, nz, ly, lx = wcon.shape
-
-        def pad(a):
-            a = _domain._exchange(a, ax_y, py, halo, dim=2)
-            return _domain._exchange(a, ax_x, px, halo, dim=3)
-
-        # One exchange of the pre-combined staggered velocity serves all
-        # fields; the per-field inputs are exchanged so the halo ring's
-        # vadvc tendency is recomputed locally.
-        wp = pad(_domain._staggered_w(wcon, ax_x, px))
-        crop = lambda a: a[:, :, halo:halo + ly, halo:halo + lx]
-        new_fields, new_stage = {}, {}
-        for name in names:
-            f_new, stage = fused_dycore_pallas(
-                pad(fields[name]), wp, pad(tens[name]),
-                pad(stage_tens[name]), coeff=coeff, dt=dt, ty=ty,
-                interpret=interp)
-            new_fields[name] = crop(f_new)
-            new_stage[name] = crop(stage)
-        return new_fields, new_stage
-
-    def local_step_packed(fields, wcon, tens, stage_tens):
-        e, nz, ly, lx = wcon.shape
-        sched = plan.exchange
-        hy, hx = sched.depth_y, sched.depth_x
-        # ONE packed exchange per direction covers every operand: fields,
-        # slow tendencies, stage tendencies at the k-step stencil reach and
-        # raw wcon at its own RAGGED depth — the +1 staggering column
-        # (w[c] = wcon[c] + wcon[c+1]) comes from the RIGHT neighbor only,
-        # so wcon's x-ride is (hx, hx+1), not a symmetric hx+1.
-        stacked = jnp.stack(
-            [fields[n] for n in names]
-            + [tens[n] for n in names]
-            + [stage_tens[n] for n in names], axis=1)
-        stacked, wconp = _domain._exchange_packed(
-            [(stacked, hy), (wcon, hy)], ax_y, py, dim=-2,
-            wire_dtype=sched.wire_dtype)
-        stacked, wconp = _domain._exchange_packed(
-            [(stacked, hx), (wconp, sched.wcon_depth_x)], ax_x, px, dim=-1,
-            wire_dtype=sched.wire_dtype)
-        fs, ts, ss = (stacked[:, :nf], stacked[:, nf:2 * nf],
-                      stacked[:, 2 * nf:])
-        # Staggered velocity on the padded slab — valid everywhere: the
-        # right-only extra wcon column supplies the outermost neighbor.
-        w = wconp[..., :-1] + wconp[..., 1:]
-
-        if k == 1:
-            fs, ss = fused_dycore_whole_state_pallas(
-                fs, w, ts, ss, coeff=coeff, dt=dt, ty=ty, interpret=interp)
-        else:
-            # The WHOLE round in one launch: the kernel iterates the k
-            # local steps with state held in VMEM (no scan of launches,
-            # no HBM state round-trips between steps).
-            fs, ss = fused_dycore_kstep_pallas(
-                fs, w, ts, ss, k_steps=k, coeff=coeff, dt=dt, ty=ty,
-                interpret=interp, prefetch_w=plan.prefetch_w)
-        crop = lambda a: a[..., hy:hy + ly, hx:hx + lx]
-        new_fields = {n: crop(fs[:, i]) for i, n in enumerate(names)}
-        new_stage = {n: crop(ss[:, i]) for i, n in enumerate(names)}
-        return new_fields, new_stage
-
-    local_step = {"unfused": local_step_unfused,
-                  "per_field": local_step_per_field,
-                  "whole_state": local_step_packed,
-                  "kstep": local_step_packed}[plan.variant]
-    sharded = _shard_map(local_step, mesh,
+    sharded = _shard_map(local_step, plan.mesh,
                          in_specs=(spec, spec, spec, spec),
                          out_specs=(spec, spec))
 

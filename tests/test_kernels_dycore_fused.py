@@ -25,7 +25,14 @@ import pytest
 from repro.core import autotune, trace_stats
 from repro.kernels.dycore_fused import ops, ref
 from repro.kernels.dycore_fused.fused import fused_dycore_pallas
-from repro.weather import dycore, fields
+from repro.weather import fields
+from repro.weather.program import DycoreProgram, compile_dycore
+
+
+def _plan(grid, ensemble=1, variant="auto", k_steps=1, **kw):
+    return compile_dycore(DycoreProgram(grid_shape=grid, ensemble=ensemble,
+                                        variant=variant, k_steps=k_steps),
+                          **kw)
 
 SHAPES = [(4, 8, 16), (6, 12, 8), (5, 16, 32), (3, 10, 14), (2, 6, 6)]
 DT = ref.DEFAULT_DT
@@ -146,11 +153,11 @@ def test_halo_mode_pad_crop(rng):
 
 
 def test_dycore_step_fused_matches_unfused():
-    """End-to-end: weather dycore_step routed fused vs the fused=False
-    oracle path, all four prognostic fields + stage tendencies."""
+    """End-to-end: the fused dycore plan vs the unfused-oracle plan, all
+    four prognostic fields + stage tendencies."""
     st = fields.initial_state(jax.random.PRNGKey(3), (6, 12, 16), ensemble=2)
-    out_f = dycore.dycore_step(st, fused=True)
-    out_u = dycore.dycore_step(st, fused=False)
+    out_f = _plan((6, 12, 16), ensemble=2).step(st)
+    out_u = _plan((6, 12, 16), ensemble=2, variant="unfused").step(st)
     for name in fields.PROGNOSTIC:
         np.testing.assert_allclose(
             np.asarray(out_f.stage_tens[name]),
@@ -240,21 +247,19 @@ def test_dycore_step_single_pallas_call():
     prognostic fields; the per-field path launches one per field (the
     launch-granularity oracle this PR's tentpole collapses)."""
     st = fields.initial_state(jax.random.PRNGKey(0), (3, 8, 8))
-    j = jax.make_jaxpr(
-        lambda s: dycore.dycore_step(s, interpret=True))(st)
+    j = jax.make_jaxpr(_plan((3, 8, 8), interpret=True).step)(st)
     assert trace_stats.count_primitive(j, "pallas_call") == 1
-    j = jax.make_jaxpr(
-        lambda s: dycore.dycore_step(s, whole_state=False,
-                                     interpret=True))(st)
+    j = jax.make_jaxpr(_plan((3, 8, 8), variant="per_field",
+                             interpret=True).step)(st)
     assert trace_stats.count_primitive(j, "pallas_call") == \
         len(fields.PROGNOSTIC)
 
 
 def test_dycore_step_whole_state_matches_per_field():
     st = fields.initial_state(jax.random.PRNGKey(4), (5, 12, 16), ensemble=2)
-    out_w = dycore.dycore_step(st, whole_state=True)
-    out_p = dycore.dycore_step(st, whole_state=False)
-    out_u = dycore.dycore_step(st, fused=False)
+    out_w = _plan((5, 12, 16), ensemble=2, variant="whole_state").step(st)
+    out_p = _plan((5, 12, 16), ensemble=2, variant="per_field").step(st)
+    out_u = _plan((5, 12, 16), ensemble=2, variant="unfused").step(st)
     for name in fields.PROGNOSTIC:
         np.testing.assert_allclose(
             np.asarray(out_w.stage_tens[name]),
@@ -344,14 +349,14 @@ def test_kstep_single_launch_trace():
     """The whole k-step round must trace to exactly ONE pallas_call — the
     structural claim the PR's tentpole makes (no launch per local step)."""
     st = fields.initial_state(jax.random.PRNGKey(0), (3, 8, 8))
-    j = jax.make_jaxpr(lambda s: dycore.run(s, steps=2, k_steps=2,
-                                            interpret=True))(st)
+    kplan = _plan((3, 8, 8), variant="kstep", k_steps=2, interpret=True)
+    j = jax.make_jaxpr(lambda s: kplan.run(s, 2))(st)
     assert trace_stats.count_primitive(j, "pallas_call") == 1
     # and the non-kstep trajectory of the same length also launches once
     # per step (scan body), so the k-step mode strictly halves launches
     # per simulated step at k=2.
-    j1 = jax.make_jaxpr(lambda s: dycore.run(s, steps=2,
-                                             interpret=True))(st)
+    plan1 = _plan((3, 8, 8), interpret=True)
+    j1 = jax.make_jaxpr(lambda s: plan1.run(s, 2))(st)
     assert trace_stats.count_primitive(j1, "pallas_call") == 1  # scan body
 
 

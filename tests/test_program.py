@@ -1,9 +1,10 @@
-"""Declarative dycore programs: `compile_dycore` planner coverage.
+"""Declarative dycore programs: `compile` planner coverage (dycore op).
 
-This module exercises ONLY the new plan API (plus the deprecation shims
-inside `pytest.warns` blocks), so CI can run it under
-`python -W error::DeprecationWarning` to prove no production path goes
-through the legacy flag soup."""
+This module exercises the plan API on the dycore op (per-op hdiff/vadvc
+coverage lives in tests/test_stencil_program.py).  The legacy flag-soup
+shims were RETIRED this PR; `test_legacy_shims_removed` pins that down,
+and CI still runs the module under `python -W error::DeprecationWarning`
+to prove no production path warns."""
 
 import dataclasses
 import json
@@ -41,6 +42,8 @@ def test_program_validation():
         DycoreProgram(grid_shape=(4, 8, 8), halo=3)
     with pytest.raises(ValueError):
         DycoreProgram(grid_shape=(4, 8, 8), fields=())
+    with pytest.raises(ValueError):
+        DycoreProgram(grid_shape=(4, 8, 8), op="not-a-registered-op")
     with pytest.raises(TypeError):
         compile_dycore({"grid_shape": (4, 8, 8)})
     # programs are immutable specs
@@ -150,38 +153,19 @@ def test_plan_run_ragged_tail_matches_sequential():
     assert err.max() < 1e-6
 
 
-def test_deprecated_shims_warn_and_match_plan():
-    """The legacy flag-soup entry points are shims: they emit
-    DeprecationWarning and produce BIT-IDENTICAL results to the
-    equivalent plan (they build it under the hood)."""
-    from repro.weather import dycore
-    grid = (4, 8, 8)
-    st = fields.initial_state(jax.random.PRNGKey(0), grid)
-    plan = compile_dycore(DycoreProgram(grid_shape=grid))
-    want = plan.step(st)
-    with pytest.warns(DeprecationWarning, match="compile_dycore"):
-        got = dycore.dycore_step(st)
-    for name in fields.PROGNOSTIC:
-        assert np.array_equal(np.asarray(got.fields[name]),
-                              np.asarray(want.fields[name])), name
-        assert np.array_equal(np.asarray(got.stage_tens[name]),
-                              np.asarray(want.stage_tens[name])), name
-
-    un_plan = compile_dycore(DycoreProgram(grid_shape=grid,
-                                           variant="unfused"))
-    want_u = un_plan.step(st)
-    with pytest.warns(DeprecationWarning, match="compile_dycore"):
-        got_u = dycore.dycore_step(st, fused=False)
-    for name in fields.PROGNOSTIC:
-        assert np.array_equal(np.asarray(got_u.fields[name]),
-                              np.asarray(want_u.fields[name])), name
-
-    want_r = plan.run(st, 2)
-    with pytest.warns(DeprecationWarning, match="compile_dycore"):
-        got_r = dycore.run(st, steps=2)
-    for name in fields.PROGNOSTIC:
-        assert np.array_equal(np.asarray(got_r.fields[name]),
-                              np.asarray(want_r.fields[name])), name
+def test_legacy_shims_removed():
+    """The flag-soup era is over (retired ROADMAP item): the deprecated
+    `dycore_step`/`run`/`make_distributed_step` shims are gone — plans are
+    the only execution surface — while the first-class helpers the plan
+    lowerings build on remain."""
+    from repro.weather import domain, dycore
+    for mod, name in ((dycore, "dycore_step"), (dycore, "run"),
+                      (domain, "make_distributed_step")):
+        assert not hasattr(mod, name), f"{name} should be retired"
+    for mod, name in ((dycore, "hdiff_periodic"), (dycore, "vadvc_field"),
+                      (dycore, "stack_state"), (domain, "_exchange_packed"),
+                      (domain, "shard_state")):
+        assert hasattr(mod, name), f"{name} should remain first-class"
 
 
 # ---------------------------------------------------------------------------
@@ -288,9 +272,22 @@ def test_distributed_plan_report_matches_trace():
 
 
 def test_exchange_schedule_describe():
-    s = ExchangeSchedule(mode="packed", shards=(2, 2), depth_y=4, depth_x=4,
-                         wcon_depth_x=(4, 5), wire_dtype="bfloat16")
+    """The schedule is rides-first (per-operand (lo, hi) depths straight
+    from the registry) but keeps the legacy depth_y/depth_x/wcon_depth_x
+    summary keys the CI plan-block check and cross-PR diffs read."""
+    s = ExchangeSchedule(mode="packed", shards=(2, 2),
+                         rides=(("fields", (4, 4), (4, 4)),
+                                ("wcon", (4, 4), (4, 5))),
+                         wire_dtype="bfloat16")
+    assert (s.depth_y, s.depth_x, s.wcon_depth_x) == (4, 4, (4, 5))
     d = s.describe()
-    assert d == {"mode": "packed", "shards": [2, 2], "depth_y": 4,
-                 "depth_x": 4, "wcon_depth_x": [4, 5],
-                 "wire_dtype": "bfloat16"}
+    assert d["mode"] == "packed" and d["shards"] == [2, 2]
+    assert d["rides"]["wcon"] == {"depth_y": [4, 4], "depth_x": [4, 5]}
+    assert d["wcon_depth_x"] == [4, 5] and d["depth_y"] == 4
+    assert d["wire_dtype"] == "bfloat16"
+    # an op with no wcon ride (hdiff) simply omits the wcon summary key
+    h = ExchangeSchedule(mode="packed", shards=(2, 2),
+                         rides=(("fields", (2, 2), (2, 2)),),
+                         wire_dtype=None)
+    assert "wcon_depth_x" not in h.describe()
+    assert h.wcon_depth_x is None

@@ -1,4 +1,8 @@
-"""Weather dycore: single-device correctness + distributed equivalence."""
+"""Weather dycore: single-device correctness + distributed equivalence.
+
+Everything goes through the plan API (`repro.weather.program.compile`) —
+the legacy `dycore_step`/`run`/`make_distributed_step` shims are gone
+(retired ROADMAP item)."""
 
 import subprocess
 import sys
@@ -9,12 +13,19 @@ import numpy as np
 import pytest
 
 from repro.weather import dycore, fields
+from repro.weather.program import DycoreProgram, compile_dycore
+
+
+def _plan(grid, ensemble=1, variant="auto", k_steps=1, **kw):
+    return compile_dycore(DycoreProgram(grid_shape=grid, ensemble=ensemble,
+                                        variant=variant, k_steps=k_steps),
+                          **kw)
 
 
 def test_dycore_step_finite_and_shaped():
     st = fields.initial_state(jax.random.PRNGKey(0), (8, 16, 16),
                               ensemble=2)
-    out = dycore.dycore_step(st)
+    out = _plan((8, 16, 16), ensemble=2).step(st)
     for name in fields.PROGNOSTIC:
         f = np.asarray(out.fields[name])
         assert f.shape == (2, 8, 16, 16)
@@ -23,7 +34,7 @@ def test_dycore_step_finite_and_shaped():
 
 def test_dycore_run_scan():
     st = fields.initial_state(jax.random.PRNGKey(1), (4, 8, 8))
-    out = dycore.run(st, steps=3)
+    out = _plan((4, 8, 8)).run(st, 3)
     f = np.asarray(out.fields["t"])
     assert np.isfinite(f).all()
 
@@ -53,7 +64,7 @@ def test_diffusion_damps_checkerboard_and_conserves():
 
 def test_diffusion_unstable_above_cfl():
     """Above the stability bound the explicit step amplifies noise — the
-    documented reason dycore_step defaults to coeff=0.025."""
+    documented reason programs default to coeff=0.025."""
     st = fields.initial_state(jax.random.PRNGKey(2), (4, 32, 32))
     f0 = st.fields["t"]
     f = f0
@@ -64,40 +75,42 @@ def test_diffusion_unstable_above_cfl():
 
 _DIST_SNIPPET = r"""
 import jax, numpy as np
-from repro.weather import fields, dycore, domain
+from repro.weather import fields, domain
+from repro.weather.program import DycoreProgram, compile_dycore
 key = jax.random.PRNGKey(0)
 st = fields.initial_state(key, (6, 8, 8), ensemble=2)
 kw = ({"axis_types": (jax.sharding.AxisType.Auto,) * 2}
       if hasattr(jax.sharding, "AxisType") else {})
 mesh = jax.make_mesh((2, 2), ("data", "model"), **kw)
 outs = {}
-for fused, whole in ((True, True), (True, False), (False, False)):
+for variant in ("whole_state", "per_field", "unfused"):
     # like-for-like: distributed vs single-device on the SAME path.  Even
     # so the graphs differ (pad/crop vs wrap, shard shapes), so a handful
     # of flux-limiter branch flips are legitimate (see
     # kernels/dycore_fused/ref.py::limiter_fragile_mask); tolerate <=2
     # flipped points per field under a loose physical bound.
-    ref = dycore.dycore_step(st, fused=fused, whole_state=whole)
-    step, spec = domain.make_distributed_step(mesh, fused=fused,
-                                              whole_state=whole)
-    out = step(domain.shard_state(st, mesh, spec))
-    outs[(fused, whole)] = out
+    prog = DycoreProgram(grid_shape=(6, 8, 8), ensemble=2, variant=variant,
+                         k_steps=1)
+    ref = compile_dycore(prog).step(st)
+    plan = compile_dycore(prog, mesh=mesh)
+    out = plan.step(domain.shard_state(st, mesh, plan.state_spec))
+    outs[variant] = out
     for name in fields.PROGNOSTIC:
         err = np.abs(np.asarray(ref.fields[name])
                      - np.asarray(out.fields[name]))
         bad = int((err > 1e-5).sum())
-        assert bad <= 2 and err.max() < 0.05, (fused, name, bad, err.max())
+        assert bad <= 2 and err.max() < 0.05, (variant, name, bad, err.max())
         errs = np.abs(np.asarray(ref.stage_tens[name])
                       - np.asarray(out.stage_tens[name])).max()
-        assert errs < 1e-5, (fused, name, errs)   # stage: no limiter upstream
+        assert errs < 1e-5, (variant, name, errs)  # stage: no limiter upstream
 # stacked exchange vs per-field exchange, head-to-head on the same shards
 for name in fields.PROGNOSTIC:
-    a = np.asarray(outs[(True, True)].fields[name])
-    b = np.asarray(outs[(True, False)].fields[name])
+    a = np.asarray(outs["whole_state"].fields[name])
+    b = np.asarray(outs["per_field"].fields[name])
     bad = int((np.abs(a - b) > 1e-5).sum())
     assert bad <= 2 and np.abs(a - b).max() < 0.05, (name, bad)
-    sa = np.asarray(outs[(True, True)].stage_tens[name])
-    sb = np.asarray(outs[(True, False)].stage_tens[name])
+    sa = np.asarray(outs["whole_state"].stage_tens[name])
+    sb = np.asarray(outs["per_field"].stage_tens[name])
     assert np.abs(sa - sb).max() < 1e-5, name
 print("DIST_OK")
 """
@@ -106,33 +119,38 @@ print("DIST_OK")
 _KSTEP_SNIPPET = r"""
 import jax, numpy as np
 from repro.core import trace_stats
-from repro.weather import fields, dycore, domain
+from repro.weather import fields, domain
+from repro.weather.program import DycoreProgram, compile_dycore
 K = 2
-st = fields.initial_state(jax.random.PRNGKey(1), (4, 8, 16), ensemble=2)
+grid = (4, 8, 16)
+st = fields.initial_state(jax.random.PRNGKey(1), grid, ensemble=2)
 kw = ({"axis_types": (jax.sharding.AxisType.Auto,) * 2}
       if hasattr(jax.sharding, "AxisType") else {})
 mesh = jax.make_mesh((2, 2), ("data", "model"), **kw)
-stepK, spec = domain.make_distributed_step(mesh, k_steps=K)
-step1, _ = domain.make_distributed_step(mesh, k_steps=1)
+def plan_for(variant="auto", k=1, **kwargs):
+    return compile_dycore(DycoreProgram(grid_shape=grid, ensemble=2,
+                                        variant=variant, k_steps=k,
+                                        **kwargs), mesh=mesh)
+planK = plan_for("kstep", K)
+plan1 = plan_for("whole_state", 1)
 
 # structural win of the k-step round, asserted via trace_stats: exactly
 # ONE pallas_call (the in-kernel k-step scan — not one launch per local
 # step) and ONE ppermute pair per mesh direction (4 collectives) per round
-j = jax.make_jaxpr(stepK)(st)
+j = jax.make_jaxpr(planK.step)(st)
 trace_stats.assert_kstep_structure(j)
-j1 = jax.make_jaxpr(step1)(st)
+j1 = jax.make_jaxpr(plan1.step)(st)
 assert trace_stats.count_primitive(j1, "ppermute") == 4
-jpf = jax.make_jaxpr(jax.jit(domain.make_distributed_step(
-    mesh, whole_state=False)[0]))(st)
+jpf = jax.make_jaxpr(plan_for("per_field").step)(st)
 n_pf = trace_stats.count_primitive(jpf, "ppermute")
 assert n_pf >= 4 * len(fields.PROGNOSTIC), n_pf   # per-field/per-input cost
 
 # K-step deep halo == K sequential exchanged steps (tolerance: fp32 round)
-sst = domain.shard_state(st, mesh, spec)
-outK = stepK(sst)
+sst = domain.shard_state(st, mesh, planK.state_spec)
+outK = planK.step(sst)
 seq = sst
 for _ in range(K):
-    seq = step1(seq)
+    seq = plan1.step(seq)
 for name in fields.PROGNOSTIC:
     err = np.abs(np.asarray(outK.fields[name])
                  - np.asarray(seq.fields[name]))
@@ -142,9 +160,9 @@ for name in fields.PROGNOSTIC:
                   - np.asarray(seq.stage_tens[name])).max()
     assert errs < 1e-5, (name, errs)
 
-# the deep halo cannot exceed the local slab: loud error, not corruption
+# the deep halo cannot exceed the local slab: loud error at COMPILE time
 try:
-    domain.make_distributed_step(mesh, k_steps=3)[0](sst)
+    plan_for("kstep", 3)
 except ValueError as e:
     assert "halo" in str(e), e
 else:
@@ -152,10 +170,9 @@ else:
 
 # bf16 stacked exchange: same 4-collective structure, results within bf16
 # halo rounding of the fp32-wire round
-stepB, _ = domain.make_distributed_step(mesh, k_steps=K,
-                                        exchange_dtype="bfloat16")
-trace_stats.assert_kstep_structure(jax.make_jaxpr(stepB)(st))
-outB = stepB(sst)
+planB = plan_for("kstep", K, exchange_dtype="bfloat16")
+trace_stats.assert_kstep_structure(jax.make_jaxpr(planB.step)(st))
+outB = planB.step(sst)
 for name in fields.PROGNOSTIC:
     err = np.abs(np.asarray(outB.fields[name])
                  - np.asarray(outK.fields[name]))
@@ -163,14 +180,14 @@ for name in fields.PROGNOSTIC:
     assert err.max() < 0.1, (name, err.max())   # halo-ring bf16 rounding
     assert err.max() > 0.0, name                # the cast actually happened
 
-# k_steps="auto": resolves k from the exchange model on first call
-stepA, specA = domain.make_distributed_step(mesh, k_steps="auto")
-outA = stepA(domain.shard_state(st, mesh, specA))
-kA = stepA.resolved_k()
+# k_steps="auto": resolved by the planner at compile time
+planA = plan_for("auto", "auto")
+outA = planA.step(domain.shard_state(st, mesh, planA.state_spec))
+kA = planA.k_steps
 assert isinstance(kA, int) and kA >= 1, kA
 ref = sst
 for _ in range(kA):
-    ref = step1(ref)
+    ref = plan1.step(ref)
 for name in fields.PROGNOSTIC:
     err = np.abs(np.asarray(outA.fields[name])
                  - np.asarray(ref.fields[name]))
@@ -203,16 +220,16 @@ def test_distributed_matches_single_device():
 
 def test_kstep_communication_avoiding():
     """K-step deep-halo mode: one ppermute pair per direction per K steps,
-    one pallas_call per local step, equivalent to K sequential exchanged
+    ONE pallas_call per round, equivalent to K sequential exchanged
     steps, and a loud error when the halo outgrows the local slab."""
     _run_forced_device_snippet(_KSTEP_SNIPPET, "KSTEP_OK")
 
 
 def test_run_whole_state_matches_per_field():
-    """dycore.run threads whole_state; multi-step trajectories agree."""
+    """Whole-state and per-field plans agree over multi-step trajectories."""
     st = fields.initial_state(jax.random.PRNGKey(5), (4, 8, 8))
-    out_w = dycore.run(st, steps=3, whole_state=True)
-    out_p = dycore.run(st, steps=3, whole_state=False)
+    out_w = _plan((4, 8, 8), variant="whole_state").run(st, 3)
+    out_p = _plan((4, 8, 8), variant="per_field").run(st, 3)
     for name in fields.PROGNOSTIC:
         err = np.abs(np.asarray(out_w.fields[name])
                      - np.asarray(out_p.fields[name]))
@@ -221,30 +238,35 @@ def test_run_whole_state_matches_per_field():
 
 
 def test_run_kstep_matches_sequential():
-    """Single-chip k-step mode: dycore.run(steps, k_steps=k) — steps/k
+    """Single-chip k-step mode: plan.run(steps) on a k-step plan — steps/k
     rounds of ONE in-kernel-scan launch each — matches the step-by-step
     trajectory to fp32 rounding (limiter-fragile flips tolerated)."""
-    st = fields.initial_state(jax.random.PRNGKey(6), (4, 12, 16), ensemble=2)
-    out_seq = dycore.run(st, steps=4)
-    out_k = dycore.run(st, steps=4, k_steps=2)
+    grid = (4, 12, 16)
+    st = fields.initial_state(jax.random.PRNGKey(6), grid, ensemble=2)
+    out_seq = _plan(grid, ensemble=2).run(st, 4)
+    out_k = _plan(grid, ensemble=2, variant="kstep", k_steps=2).run(st, 4)
     for name in fields.PROGNOSTIC:
         err = np.abs(np.asarray(out_k.fields[name])
                      - np.asarray(out_seq.fields[name]))
         bad = int((err > 1e-5).sum())
         assert bad <= 4 and err.max() < 0.05, (name, bad, err.max())
     with pytest.raises(ValueError):
-        dycore.run(st, steps=4, k_steps=2, whole_state=False)
+        # k_steps > 1 is the k-step strategy; a one-step variant refuses
+        DycoreProgram(grid_shape=grid, variant="per_field", k_steps=2)
 
 
 def test_run_kstep_ragged_tail():
-    """steps % k_steps != 0 is no longer an error: the plan runs the full
-    k-step rounds and finishes with one shorter TAIL round at
-    k' = steps mod k (ISSUE 4 satellite) — equivalent to sequential
-    stepping within the usual limiter-fragile tolerance."""
-    st = fields.initial_state(jax.random.PRNGKey(7), (4, 12, 16), ensemble=2)
-    out_seq = dycore.run(st, steps=5)                # 5 sequential steps
-    out_k = dycore.run(st, steps=5, k_steps=2)       # 2 rounds + k'=1 tail
-    out_k3 = dycore.run(st, steps=5, k_steps=3)      # 1 round + k'=2 tail
+    """steps % k_steps != 0 is not an error: the plan runs the full k-step
+    rounds and finishes with one shorter TAIL round at k' = steps mod k
+    (ISSUE 4 satellite) — equivalent to sequential stepping within the
+    usual limiter-fragile tolerance."""
+    grid = (4, 12, 16)
+    st = fields.initial_state(jax.random.PRNGKey(7), grid, ensemble=2)
+    out_seq = _plan(grid, ensemble=2).run(st, 5)     # 5 sequential steps
+    out_k = _plan(grid, ensemble=2, variant="kstep",
+                  k_steps=2).run(st, 5)              # 2 rounds + k'=1 tail
+    out_k3 = _plan(grid, ensemble=2, variant="kstep",
+                   k_steps=3).run(st, 5)             # 1 round + k'=2 tail
     for out in (out_k, out_k3):
         for name in fields.PROGNOSTIC:
             err = np.abs(np.asarray(out.fields[name])
