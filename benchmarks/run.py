@@ -20,11 +20,13 @@ import traceback
 def main() -> None:
     from benchmarks import (common, copy_stencil, dryrun_table, dycore_fused,
                             energy, kernel_walltime, pe_scaling,
-                            roofline_kernels, table3, tile_autotune)
+                            roofline_kernels, serve_forecast, table3,
+                            tile_autotune)
     print("name,us_per_call,derived")
     failures = []
     for mod in (roofline_kernels, copy_stencil, tile_autotune, pe_scaling,
-                energy, table3, kernel_walltime, dycore_fused, dryrun_table):
+                energy, table3, kernel_walltime, dycore_fused, dryrun_table,
+                serve_forecast):
         try:
             mod.run()
         except Exception as e:     # keep the suite going; record failure

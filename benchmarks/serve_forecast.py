@@ -1,0 +1,129 @@
+"""Forecast-as-a-service under synthetic open-loop load.
+
+Drives `repro.serve.forecast.ForecastEngine` the way a deployment would:
+requests for a small catalog of stencil programs arrive on a seeded
+Poisson clock (exponential interarrivals, open-loop — arrivals do NOT
+wait for completions), each carrying its own initial conditions and step
+count; the engine folds them into the ensemble axis of per-program cached
+plans and retires them at round boundaries.
+
+Reported metrics (docs/benchmarks.md, "BENCH_serve.json"):
+  serve_forecast/latency_p50        us, admit -> result on host, p50
+  serve_forecast/latency_p99        us, ditto p99 (tail = queueing)
+  serve_forecast/steps_per_s_mean   per-request forecast throughput
+  serve_forecast/occupancy          mean busy-slot fraction per round
+  serve_forecast/cache_hit_rate     plan-cache hits / requests
+
+Also writes BENCH_serve.json: the latency distribution, per-request
+steps/s, batch occupancy, plan-cache hit statistics, the program catalog
+and the load spec — everything the CI smoke job asserts on and cross-PR
+perf diffs read.  BENCH_SMOKE=1 shrinks the request count and slot pool.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import emit, smoke_mode, write_json
+from repro.serve.forecast import ForecastEngine, ForecastRequest
+from repro.weather import fields
+from repro.weather.program import StencilProgram
+
+# The served catalog: three programs a real mesoscale service would mix —
+# the fused compound step at two precisions plus a diffusion-only product.
+_CATALOG = (
+    StencilProgram(grid_shape=(4, 16, 16), op="dycore"),
+    StencilProgram(grid_shape=(4, 16, 16), op="dycore", dtype="bfloat16"),
+    StencilProgram(grid_shape=(3, 8, 8), op="hdiff"),
+)
+
+
+def _percentile(xs, q):
+    return float(np.percentile(np.asarray(xs, np.float64), q))
+
+
+def _drive(eng: ForecastEngine, requests, arrivals):
+    """Open-loop load: submit each request at its scheduled arrival time
+    (whether or not the engine kept up), pump between arrivals."""
+    t0 = time.perf_counter()
+    pending = list(zip(arrivals, requests))
+    while pending or eng.has_work():
+        now = time.perf_counter() - t0
+        while pending and pending[0][0] <= now:
+            eng.submit(pending[0][1])
+            pending.pop(0)
+        busy = eng.pump()
+        if not busy and pending:
+            # idle until the next arrival; open-loop clients don't block
+            time.sleep(max(0.0, pending[0][0]
+                           - (time.perf_counter() - t0)))
+    return eng.drain()
+
+
+def run() -> None:
+    smoke = smoke_mode()
+    slots = 2 if smoke else 4
+    n_requests = 8 if smoke else 32
+    mean_interarrival_s = 0.05 if smoke else 0.1
+
+    rng = np.random.default_rng(42)
+    arrivals = np.cumsum(rng.exponential(mean_interarrival_s,
+                                         size=n_requests))
+    steps = rng.integers(1, 5 if smoke else 13, size=n_requests)
+    progs = [_CATALOG[i % len(_CATALOG)] for i in range(n_requests)]
+    requests = []
+    for i, (prog, s) in enumerate(zip(progs, steps)):
+        state = fields.initial_state(jax.random.PRNGKey(1000 + i),
+                                     prog.grid_shape, ensemble=1,
+                                     dtype=prog.dtype)
+        requests.append(ForecastRequest(program=prog, state=state,
+                                        steps=int(s)))
+
+    eng = ForecastEngine(slots=slots)
+    results = _drive(eng, requests, arrivals)
+    assert len(results) == n_requests, (len(results), n_requests)
+    stats = eng.stats()
+
+    lat = [r.latency_s for r in results.values()]
+    sps = [r.steps / r.latency_s for r in results.values()
+           if r.latency_s > 0]
+    p50, p99 = _percentile(lat, 50), _percentile(lat, 99)
+    emit("serve_forecast/latency_p50", p50 * 1e6,
+         f"n={n_requests} slots={slots}")
+    emit("serve_forecast/latency_p99", p99 * 1e6, "tail=queueing")
+    emit("serve_forecast/steps_per_s_mean", float(np.mean(sps)),
+         "per-request forecast throughput")
+    emit("serve_forecast/occupancy", stats["occupancy"],
+         "busy-slot fraction per lane-round")
+    cache = {"hits": stats["plan_cache_hits"],
+             "misses": stats["plan_cache_misses"],
+             "hit_rate": stats["plan_cache_hit_rate"]}
+    emit("serve_forecast/cache_hit_rate", cache["hit_rate"],
+         f"{len(_CATALOG)} programs, {cache['misses']} compiles")
+
+    write_json("BENCH_serve.json", {
+        "slots": slots,
+        "n_requests": n_requests,
+        "n_programs": len(_CATALOG),
+        "latency_s": {"p50": p50, "p99": p99,
+                      "mean": float(np.mean(lat)),
+                      "max": float(np.max(lat))},
+        "steps_per_s_per_request": {"mean": float(np.mean(sps)),
+                                    "p50": _percentile(sps, 50),
+                                    "min": float(np.min(sps))},
+        "occupancy": stats["occupancy"],
+        "plan_cache": cache,
+        "programs": [p.to_json() for p in _CATALOG],
+        "load": {"model": "open-loop poisson", "seed": 42,
+                 "mean_interarrival_s": mean_interarrival_s,
+                 "steps_min": 1,
+                 "steps_max": int(steps.max())},
+    })
+
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    run()

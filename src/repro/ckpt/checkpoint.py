@@ -137,6 +137,58 @@ def _unflatten_from_shard_tree(shard_tree, flat: dict):
     return jax.tree_util.tree_map_with_path(one, shard_tree)
 
 
+def save_tree(ckpt_dir: str, step: int, tree, extra: Optional[dict] = None,
+              keep: int = 3):
+    """Atomic keep-N checkpoint of an arbitrary pytree + JSON metadata.
+
+    Same on-disk contract as `save` (step_<n>/arrays.npz + meta.json,
+    tmp-dir + rename), but generic: `tree` is any pytree of arrays and
+    `extra` is a JSON-serializable sidecar (e.g. a serving engine's queue/
+    slot bookkeeping — the arrays land in the npz, the structure travels
+    in meta.json).  Restore with `restore_tree` against a same-structure
+    template."""
+    os.makedirs(ckpt_dir, exist_ok=True)
+    final = os.path.join(ckpt_dir, f"step_{step:08d}")
+    tmp = final + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+    arrays = _flatten(tree)
+    packed, dtypes = _pack(arrays)
+    np.savez(os.path.join(tmp, "arrays.npz"), **packed)
+    with open(os.path.join(tmp, "meta.json"), "w") as f:
+        json.dump({"step": step, "n_arrays": len(arrays), "dtypes": dtypes,
+                   "extra": extra}, f)
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)
+    _gc(ckpt_dir, keep)
+
+
+def restore_tree(ckpt_dir: str, step: int, template
+                 ) -> Tuple[Any, Optional[dict]]:
+    """Load a `save_tree` checkpoint: returns `(tree, extra)`.
+
+    `template` supplies the pytree structure and leaf dtypes (e.g. a
+    zeros-built state of the right shape); arrays are cast onto it the
+    same way elastic `restore` does."""
+    base = os.path.join(ckpt_dir, f"step_{step:08d}")
+    with open(os.path.join(base, "meta.json")) as f:
+        meta = json.load(f)
+    dtypes = meta.get("dtypes", {})
+    with np.load(os.path.join(base, "arrays.npz")) as z:
+        flat = {k: _unpack(z[k], dtypes.get(k)) for k in z.files}
+    return _unflatten(template, flat), meta.get("extra")
+
+
+def read_meta(ckpt_dir: str, step: int) -> dict:
+    """The meta.json of one checkpoint (a `save_tree` restore needs the
+    `extra` sidecar BEFORE it can build the template)."""
+    with open(os.path.join(ckpt_dir, f"step_{step:08d}",
+                           "meta.json")) as f:
+        return json.load(f)
+
+
 class AsyncSaver:
     """Overlap checkpoint writes with the next training steps."""
 

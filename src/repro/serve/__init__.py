@@ -1,1 +1,12 @@
-"""repro.serve subpackage."""
+"""repro.serve subpackage: serving engines.
+
+`engine.ServeEngine` is the LM token-serving reference; `forecast` is the
+weather-stack service layer — `ForecastEngine` continuous-batches
+concurrent forecast requests into the ensemble axis of cached
+ExecutionPlans (see docs/serving.md).
+"""
+
+from repro.serve.forecast import (ForecastEngine, ForecastRequest,
+                                  ForecastResult)
+
+__all__ = ["ForecastEngine", "ForecastRequest", "ForecastResult"]

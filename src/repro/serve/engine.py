@@ -24,7 +24,7 @@ class Request:
     prompt: np.ndarray              # (plen,) int32
     max_new_tokens: int = 16
     out_tokens: Optional[List[int]] = None
-    latency_s: float = 0.0
+    latency_s: float = 0.0          # THIS request's admit -> last token
 
 
 class ServeEngine:
@@ -75,8 +75,16 @@ class ServeEngine:
             logits, cache = self.model.prefill(self.params, batch,
                                                max_len=self.max_len)
             nxt = self._sample(logits)
+
+            def append(r, tok):
+                """Record one token; a request's latency clock stops the
+                moment ITS last token lands, not when the wave ends."""
+                r.out_tokens.append(int(tok))
+                if len(r.out_tokens) >= r.max_new_tokens:
+                    r.latency_s = time.perf_counter() - t0
+
             for i, r in enumerate(active):
-                r.out_tokens.append(int(nxt[i]))
+                append(r, nxt[i])
             pos = plen
             steps = max(r.max_new_tokens for r in active) - 1
             for _ in range(max(steps, 0)):
@@ -87,9 +95,7 @@ class ServeEngine:
                 pos += 1
                 for i, r in enumerate(active):
                     if len(r.out_tokens) < r.max_new_tokens:
-                        r.out_tokens.append(int(nxt[i]))
-            dt = time.perf_counter() - t0
+                        append(r, nxt[i])
             for r in active:
-                r.latency_s = dt
                 results[r.rid] = r.out_tokens
         return results

@@ -1,0 +1,482 @@
+"""Forecast-as-a-service: a continuous-batching ensemble serving engine.
+
+An operational forecast service runs the SAME compiled stencil programs
+for many concurrent consumers — requests differ only in initial state and
+step count, over a handful of plans.  This engine is that service layer
+over the plan API (`weather/program.py`):
+
+* **Plan cache, compile once / serve forever.**  Every request names a
+  `StencilProgram` (ensemble 1 — one forecast).  The engine canonicalizes
+  it with `program.plan_cache_key(prog, ensemble=slots)` and compiles at
+  most ONE `ExecutionPlan` per distinct program, shared by every request
+  that ever arrives for it.
+
+* **Continuous batching into the ensemble axis.**  The `(e, ...)` fold is
+  already the batch dimension of every kernel, so admission is a slot
+  scatter (`ensemble_slot_assign`) into a zero-initialized batch state,
+  and each engine round is ONE `plan.step` launch for up to `slots`
+  concurrent forecasts.  Finished slots retire at round boundaries and
+  are backfilled from the queue — the batch never drains to serve a
+  straggler.
+
+* **Bit-identical to solo runs.**  The correctness contract (verified by
+  `tests/test_forecast_engine.py`'s property harness) is that serving a
+  request batched is bit-identical to `compile(program).run(state,
+  steps)` solo.  Two facts make that hold: ensemble members are computed
+  independently (no cross-slot arithmetic, tile resolution per-member
+  invariant), and the engine advances every request through EXACTLY the
+  round sequence a solo `run()` would — `floor(steps/k)` full rounds plus
+  one ragged tail of `steps mod k`, via the plan's own
+  `round_plan(k')` tail machinery.  When ragged step counts force a
+  shorter round than some co-batched slot's next canonical part, that
+  slot runs the round anyway (slots advance together) but is ROLLED BACK
+  (`ensemble_slot_select`) and not credited, so its realized sequence
+  never deviates.  With `k_steps == 1` (every single-chip auto plan)
+  rounds are single steps and no rollback ever happens.
+
+* **Host I/O overlaps device compute.**  `submit` stages request arrays
+  onto the device immediately (`jax.device_put` is async), so by the time
+  a slot frees the admission wave's data is already resident; the slot
+  scatter donates the old batch buffer on backends that support donation.
+  Retirement reads back exactly one slot.
+
+* **Warm restarts.**  `checkpoint()` persists the whole engine — batched
+  in-flight state, queue, finished results, per-request bookkeeping —
+  through `ckpt.save_tree`; `ForecastEngine.restore()` resumes mid-
+  forecast in a fresh process: in-flight requests continue from their
+  checkpointed step (no respin to step 0), and the plan cache rebuilds
+  lazily from the persisted program keys.
+
+See docs/serving.md for the lifecycle diagrams and BENCH_serve.json for
+the latency/occupancy numbers under synthetic load.
+"""
+
+from __future__ import annotations
+
+import collections
+import dataclasses
+import time
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.ckpt import checkpoint as ckpt
+from repro.weather import domain as _domain
+from repro.weather import fields as _fields
+from repro.weather import program as _wprog
+from repro.weather.fields import WeatherState
+
+__all__ = ["ForecastRequest", "ForecastResult", "ForecastEngine"]
+
+
+@dataclasses.dataclass
+class ForecastRequest:
+    """One forecast: a program (the *what*, ensemble 1), its initial
+    state ((1, nz, ny, nx) leaves), and how many timesteps to advance."""
+
+    program: _wprog.StencilProgram
+    state: WeatherState
+    steps: int
+    rid: Optional[int] = None                   # assigned by submit()
+
+    def validate(self) -> None:
+        if self.program.ensemble != 1:
+            raise ValueError(f"a request is ONE forecast: program.ensemble "
+                             f"must be 1, got {self.program.ensemble}")
+        if not isinstance(self.steps, int) or self.steps < 0:
+            raise ValueError(f"steps={self.steps!r} must be a "
+                             f"non-negative int")
+        if self.state.grid_shape != self.program.grid_shape:
+            raise ValueError(f"state grid {self.state.grid_shape} != "
+                             f"program grid {self.program.grid_shape}")
+        if str(self.state.wcon.dtype) != self.program.dtype:
+            raise ValueError(f"state dtype {self.state.wcon.dtype} != "
+                             f"program dtype {self.program.dtype}")
+        if set(self.state.fields) != set(self.program.fields):
+            raise ValueError(f"state fields {sorted(self.state.fields)} != "
+                             f"program fields {sorted(self.program.fields)}")
+        if int(self.state.wcon.shape[0]) != 1:
+            raise ValueError("request state must have a leading ensemble "
+                             "dim of 1")
+
+
+@dataclasses.dataclass
+class ForecastResult:
+    """A finished forecast: the final state plus honest per-request
+    accounting — `latency_s` is THIS request's admit-to-finish wall time
+    (not its wave's), `queue_wait_s` the time it sat unadmitted."""
+
+    rid: int
+    program: _wprog.StencilProgram
+    state: WeatherState                         # (1, ...) leaves, host-side
+    steps: int
+    latency_s: float
+    queue_wait_s: float
+    rounds: int
+
+
+@dataclasses.dataclass
+class _Slot:
+    rid: int
+    remaining: int
+    steps: int
+    admit_t: float
+    queue_wait_s: float
+    rounds: int = 0
+
+
+@dataclasses.dataclass
+class _Lane:
+    """One plan's batch: all slots share the lane's compiled plan."""
+
+    key: _wprog.StencilProgram                  # canonical, ensemble=slots
+    batch: WeatherState                         # (slots, nz, ny, nx) leaves
+    slots: List[Optional[_Slot]]
+
+
+@dataclasses.dataclass
+class _Pending:
+    request: ForecastRequest
+    submit_t: float
+    counted: bool = False       # plan-cache hit/miss recorded once only
+
+
+class ForecastEngine:
+    """Continuous-batching forecast service over cached ExecutionPlans.
+
+    `submit()` enqueues (and stages arrays onto the device), `pump()`
+    admits + advances every busy lane one round, `drain()` pumps until
+    idle and returns `{rid: ForecastResult}`.  `checkpoint()` /
+    `ForecastEngine.restore()` persist and resume the warm engine."""
+
+    def __init__(self, slots: int = 4, mesh=None,
+                 interpret: Optional[bool] = None, ax_e: str = "pod",
+                 ax_y: str = "data", ax_x: str = "model",
+                 ckpt_dir: Optional[str] = None, ckpt_keep: int = 3):
+        if slots < 1:
+            raise ValueError(f"slots={slots} must be >= 1")
+        self.slots = slots
+        self.mesh = mesh
+        self.interpret = interpret
+        self.mesh_axes = (ax_e, ax_y, ax_x)
+        self.ckpt_dir = ckpt_dir
+        self.ckpt_keep = ckpt_keep
+
+        self._queue: collections.deque[_Pending] = collections.deque()
+        self._lanes: Dict[_wprog.StencilProgram, _Lane] = {}
+        self._plans: Dict[_wprog.StencilProgram, _wprog.ExecutionPlan] = {}
+        self._results: Dict[int, ForecastResult] = {}
+        self._next_rid = 0
+        self._ckpt_step = 0
+        self._stats = {"plan_cache_hits": 0, "plan_cache_misses": 0,
+                       "rounds": 0, "admitted": 0, "completed": 0,
+                       "rolled_back_slot_rounds": 0,
+                       "occupancy_sum": 0.0, "occupancy_samples": 0}
+        # Donating the pre-admission batch buffer lets XLA reuse it for
+        # the scattered batch; CPU has no donation (it would only warn).
+        donate = (0,) if jax.default_backend() in ("tpu", "gpu") else ()
+        self._assign = jax.jit(_wprog.ensemble_slot_assign,
+                               donate_argnums=donate)
+
+    # -- public API ---------------------------------------------------------
+    def submit(self, request: ForecastRequest) -> int:
+        """Enqueue one forecast; returns its rid.  The initial state is
+        device_put NOW (async) so admission later is a device-side
+        scatter — staging hides behind whatever round is running."""
+        request.validate()
+        if request.rid is None:
+            request.rid = self._next_rid
+        self._next_rid = max(self._next_rid, request.rid) + 1
+        request.state = jax.device_put(request.state)
+        self._queue.append(_Pending(request, time.perf_counter()))
+        return request.rid
+
+    def has_work(self) -> bool:
+        return bool(self._queue) or any(
+            any(s is not None for s in lane.slots)
+            for lane in self._lanes.values())
+
+    def pump(self) -> bool:
+        """Admit whatever fits, advance every busy lane ONE round, retire
+        finished slots.  Returns `has_work()`."""
+        self._admit()
+        for lane in self._lanes.values():
+            if any(s is not None for s in lane.slots):
+                self._round(lane)
+        return self.has_work()
+
+    def drain(self) -> Dict[int, ForecastResult]:
+        """Pump until idle; returns ALL results finished so far."""
+        while self.pump():
+            pass
+        return dict(self._results)
+
+    @property
+    def results(self) -> Dict[int, ForecastResult]:
+        return dict(self._results)
+
+    def stats(self) -> Dict[str, Any]:
+        """Service counters: plan-cache hit rate, mean batch occupancy
+        (active slots / slots over lane-rounds), rounds/admissions."""
+        s = dict(self._stats)
+        lookups = s["plan_cache_hits"] + s["plan_cache_misses"]
+        s["plan_cache_hit_rate"] = (
+            s["plan_cache_hits"] / lookups if lookups else None)
+        s["occupancy"] = (s["occupancy_sum"] / s["occupancy_samples"]
+                          if s["occupancy_samples"] else 0.0)
+        s["plans_cached"] = len(self._plans)
+        s["queued"] = len(self._queue)
+        s["active"] = sum(sum(sl is not None for sl in lane.slots)
+                          for lane in self._lanes.values())
+        return s
+
+    # -- scheduling ---------------------------------------------------------
+    def _plan_for(self, key: _wprog.StencilProgram) -> _wprog.ExecutionPlan:
+        plan = self._plans.get(key)
+        if plan is None:
+            ax_e, ax_y, ax_x = self.mesh_axes
+            # Call through the module so a test spy on
+            # repro.weather.program.compile observes every compilation.
+            plan = _wprog.compile(key, mesh=self.mesh, ax_e=ax_e, ax_y=ax_y,
+                                  ax_x=ax_x, interpret=self.interpret)
+            self._plans[key] = plan
+        return plan
+
+    def _lane_for(self, key: _wprog.StencilProgram) -> _Lane:
+        lane = self._lanes.get(key)
+        if lane is None:
+            batch = _fields.zeros_state(key.grid_shape, ensemble=self.slots,
+                                        dtype=key.dtype, names=key.fields)
+            if self.mesh is not None:
+                batch = _domain.shard_state(
+                    batch, self.mesh, self._plan_for(key).state_spec)
+            lane = _Lane(key=key, batch=batch,
+                         slots=[None] * self.slots)
+            self._lanes[key] = lane
+        return lane
+
+    def _admit(self) -> None:
+        """FIFO admission: fill free slots per lane; a lane with no free
+        slot does not block requests bound for other lanes.  All slots
+        admitted to one lane this wave go in as ONE scatter."""
+        now = time.perf_counter()
+        waves: Dict[_wprog.StencilProgram,
+                    List[Tuple[int, _Pending]]] = {}
+        keep: collections.deque[_Pending] = collections.deque()
+        free: Dict[_wprog.StencilProgram, List[int]] = {}
+        for pend in self._queue:
+            req = pend.request
+            if req.steps == 0:
+                # A 0-step forecast is its own answer (solo run(state, 0)
+                # is the identity) — finish without occupying a slot.
+                self._finish(req.rid, req.program,
+                             jax.tree_util.tree_map(np.asarray, req.state),
+                             steps=0, admit_t=now,
+                             queue_wait_s=now - pend.submit_t, rounds=0)
+                continue
+            key = _wprog.plan_cache_key(req.program, ensemble=self.slots)
+            # Request-level cache accounting (once per request): hit-rate
+            # == the fraction of requests served by an already-compiled
+            # plan, so N requests over M programs miss exactly M times.
+            if not pend.counted:
+                pend.counted = True
+                if key in self._plans:
+                    self._stats["plan_cache_hits"] += 1
+                else:
+                    self._stats["plan_cache_misses"] += 1
+                    self._plan_for(key)
+            lane = self._lane_for(key)
+            if key not in free:
+                free[key] = [i for i, s in enumerate(lane.slots)
+                             if s is None]
+            if free[key]:
+                waves.setdefault(key, []).append((free[key].pop(0), pend))
+            else:
+                keep.append(pend)
+        self._queue = keep
+        for key, wave in waves.items():
+            lane = self._lanes[key]
+            idx = [i for i, _ in wave]
+            sub = jax.tree_util.tree_map(
+                lambda *xs: jnp.concatenate(xs, axis=0),
+                *[p.request.state for _, p in wave])
+            lane.batch = self._assign(lane.batch, jnp.asarray(idx), sub)
+            admit_t = time.perf_counter()
+            for i, pend in wave:
+                req = pend.request
+                lane.slots[i] = _Slot(rid=req.rid, remaining=req.steps,
+                                      steps=req.steps, admit_t=admit_t,
+                                      queue_wait_s=admit_t - pend.submit_t)
+                self._stats["admitted"] += 1
+
+    def _round(self, lane: _Lane) -> None:
+        """One lane round: the shortest next canonical part among active
+        slots picks the round depth; slots whose next part is deeper run
+        along but are rolled back (uncredited) so every request's realized
+        round sequence equals its solo `run()` sequence."""
+        plan = self._plan_for(lane.key)
+        k = plan.k_steps
+        parts = {i: min(s.remaining, k)
+                 for i, s in enumerate(lane.slots) if s is not None}
+        kk = min(parts.values())
+        participants = [i for i, p in parts.items() if p == kk]
+        prev = lane.batch if len(participants) < len(parts) else None
+        lane.batch = plan.round_plan(kk).step(lane.batch)
+        if prev is not None:
+            mask = np.zeros(self.slots, bool)
+            mask[participants] = True
+            lane.batch = _wprog.ensemble_slot_select(mask, lane.batch, prev)
+            self._stats["rolled_back_slot_rounds"] += (
+                len(parts) - len(participants))
+        self._stats["rounds"] += 1
+        self._stats["occupancy_sum"] += len(parts) / self.slots
+        self._stats["occupancy_samples"] += 1
+        for i in participants:
+            slot = lane.slots[i]
+            slot.remaining -= kk
+            slot.rounds += 1
+            if slot.remaining == 0:
+                self._retire(lane, i)
+
+    def _retire(self, lane: _Lane, i: int) -> None:
+        slot = lane.slots[i]
+        lane.slots[i] = None
+        # Read back exactly this slot; blocking here IS the finish time.
+        state = jax.tree_util.tree_map(
+            np.asarray, _wprog.ensemble_slot_view(lane.batch, i))
+        prog = dataclasses.replace(lane.key, ensemble=1)
+        self._finish(slot.rid, prog, state, steps=slot.steps,
+                     admit_t=slot.admit_t, queue_wait_s=slot.queue_wait_s,
+                     rounds=slot.rounds)
+
+    def _finish(self, rid: int, prog, state, *, steps: int, admit_t: float,
+                queue_wait_s: float, rounds: int) -> None:
+        self._results[rid] = ForecastResult(
+            rid=rid, program=prog, state=state, steps=steps,
+            latency_s=time.perf_counter() - admit_t,
+            queue_wait_s=queue_wait_s, rounds=rounds)
+        self._stats["completed"] += 1
+
+    # -- warm-state checkpointing ------------------------------------------
+    def checkpoint(self, ckpt_dir: Optional[str] = None,
+                   step: Optional[int] = None) -> int:
+        """Persist the warm engine (in-flight batches, queue, results,
+        bookkeeping) atomically via `ckpt.save_tree`.  Returns the
+        checkpoint step.  In-flight latency clocks are stored as
+        elapsed-so-far and resume ticking on restore."""
+        ckpt_dir = ckpt_dir or self.ckpt_dir
+        if ckpt_dir is None:
+            raise ValueError("no ckpt_dir: pass one here or at __init__")
+        if step is None:
+            step = self._ckpt_step
+        self._ckpt_step = step + 1
+        now = time.perf_counter()
+        lanes = list(self._lanes.values())
+        tree = {
+            "lanes": [lane.batch for lane in lanes],
+            "queue": [p.request.state for p in self._queue],
+            "results": {str(rid): r.state
+                        for rid, r in self._results.items()},
+        }
+        extra = {
+            "slots": self.slots,
+            "next_rid": self._next_rid,
+            "ckpt_step": self._ckpt_step,
+            "stats": {k: v for k, v in self._stats.items()},
+            "lanes": [{
+                "program": lane.key.to_json(),
+                "slots": [None if s is None else {
+                    "rid": s.rid, "remaining": s.remaining,
+                    "steps": s.steps, "rounds": s.rounds,
+                    "elapsed_s": now - s.admit_t,
+                    "queue_wait_s": s.queue_wait_s,
+                } for s in lane.slots],
+            } for lane in lanes],
+            "queue": [{
+                "rid": p.request.rid,
+                "steps": p.request.steps,
+                "program": p.request.program.to_json(),
+                "waited_s": now - p.submit_t,
+            } for p in self._queue],
+            "results": [{
+                "rid": r.rid, "steps": r.steps, "rounds": r.rounds,
+                "latency_s": r.latency_s, "queue_wait_s": r.queue_wait_s,
+                "program": r.program.to_json(),
+            } for r in self._results.values()],
+        }
+        ckpt.save_tree(ckpt_dir, step, tree, extra=extra,
+                       keep=self.ckpt_keep)
+        return step
+
+    @classmethod
+    def restore(cls, ckpt_dir: str, step: Optional[int] = None, *,
+                mesh=None, interpret: Optional[bool] = None,
+                ax_e: str = "pod", ax_y: str = "data", ax_x: str = "model",
+                ckpt_keep: int = 3) -> "ForecastEngine":
+        """Resume a checkpointed engine: in-flight forecasts continue from
+        their persisted step (no respin), queued requests stay queued,
+        finished results are preserved.  Plans are NOT serialized — the
+        cache rebuilds lazily from the persisted program keys on the
+        first round each lane runs."""
+        if step is None:
+            step = ckpt.latest_step(ckpt_dir)
+            if step is None:
+                raise FileNotFoundError(f"no checkpoints in {ckpt_dir!r}")
+        extra = ckpt.read_meta(ckpt_dir, step)["extra"]
+        slots = extra["slots"]
+
+        def prog_of(d):
+            return _wprog.StencilProgram.from_json(d)
+
+        def template(prog, ensemble):
+            return _fields.zeros_state(prog.grid_shape, ensemble=ensemble,
+                                       dtype=prog.dtype, names=prog.fields)
+
+        tmpl = {
+            "lanes": [template(prog_of(ln["program"]), slots)
+                      for ln in extra["lanes"]],
+            "queue": [template(prog_of(q["program"]), 1)
+                      for q in extra["queue"]],
+            "results": {str(r["rid"]): template(prog_of(r["program"]), 1)
+                        for r in extra["results"]},
+        }
+        tree, _ = ckpt.restore_tree(ckpt_dir, step, tmpl)
+
+        eng = cls(slots=slots, mesh=mesh, interpret=interpret, ax_e=ax_e,
+                  ax_y=ax_y, ax_x=ax_x, ckpt_dir=ckpt_dir,
+                  ckpt_keep=ckpt_keep)
+        eng._next_rid = extra["next_rid"]
+        eng._ckpt_step = extra["ckpt_step"]
+        eng._stats.update(extra["stats"])
+        now = time.perf_counter()
+        for ln, batch in zip(extra["lanes"], tree["lanes"]):
+            key = _wprog.plan_cache_key(prog_of(ln["program"]),
+                                        ensemble=slots)
+            if mesh is not None:
+                batch = _domain.shard_state(batch, mesh,
+                                            eng._plan_for(key).state_spec)
+            else:
+                batch = jax.device_put(batch)
+            eng._lanes[key] = _Lane(
+                key=key, batch=batch,
+                slots=[None if s is None else _Slot(
+                    rid=s["rid"], remaining=s["remaining"],
+                    steps=s["steps"], rounds=s["rounds"],
+                    admit_t=now - s["elapsed_s"],
+                    queue_wait_s=s["queue_wait_s"])
+                    for s in ln["slots"]])
+        for q, state in zip(extra["queue"], tree["queue"]):
+            req = ForecastRequest(program=prog_of(q["program"]),
+                                  state=jax.device_put(state),
+                                  steps=q["steps"], rid=q["rid"])
+            eng._queue.append(_Pending(req, now - q["waited_s"]))
+        for r in extra["results"]:
+            eng._results[r["rid"]] = ForecastResult(
+                rid=r["rid"], program=prog_of(r["program"]),
+                state=jax.tree_util.tree_map(np.asarray,
+                                             tree["results"][str(r["rid"])]),
+                steps=r["steps"], latency_s=r["latency_s"],
+                queue_wait_s=r["queue_wait_s"], rounds=r["rounds"])
+        return eng

@@ -54,6 +54,20 @@ class WeatherState:
         return f.shape[-3:]
 
 
+def zeros_state(grid_shape: Tuple[int, int, int], ensemble: int = 1,
+                dtype=jnp.float32,
+                names: Tuple[str, ...] = PROGNOSTIC) -> WeatherState:
+    """An all-zero state — the empty batch a serving engine admits
+    requests into (zeros are a fixed point of the stencils, so idle
+    ensemble slots stay finite) and the restore template for checkpointed
+    engine state."""
+    shape = (ensemble,) + tuple(grid_shape)
+    z = lambda: jnp.zeros(shape, jnp.dtype(dtype))
+    return WeatherState(fields={n: z() for n in names}, wcon=z(),
+                        tens={n: z() for n in names},
+                        stage_tens={n: z() for n in names})
+
+
 def _smooth_noise(key, shape, dtype) -> jnp.ndarray:
     """Band-limited random field (atmosphere-ish smoothness): random coarse
     grid, trilinear-resized up."""

@@ -60,7 +60,9 @@ VARIANTS = _sops.VARIANTS
 __all__ = ["StencilProgram", "DycoreProgram", "ExchangeSchedule",
            "ExecutionPlan", "compile", "compile_dycore", "StencilOpDef",
            "get_stencil_op", "register_stencil_op",
-           "registered_stencil_ops", "VARIANTS"]
+           "registered_stencil_ops", "VARIANTS", "plan_cache_key",
+           "ensemble_slot_view", "ensemble_slot_assign",
+           "ensemble_slot_select"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -150,9 +152,69 @@ class StencilProgram:
     def n_fields(self) -> int:
         return len(self.fields)
 
+    def to_json(self) -> Dict[str, Any]:
+        """Plain-JSON spec (the `report()["program"]` block); round-trips
+        through `from_json` — serving checkpoints persist programs this
+        way so a restarted engine rebuilds its plan cache from keys."""
+        d = dataclasses.asdict(self)
+        d["grid_shape"] = list(self.grid_shape)
+        d["fields"] = list(self.fields)
+        return d
+
+    @classmethod
+    def from_json(cls, d: Dict[str, Any]) -> "StencilProgram":
+        d = dict(d)
+        d["grid_shape"] = tuple(d["grid_shape"])
+        d["fields"] = tuple(d["fields"])
+        return cls(**d)
+
 
 # The dycore spec is a thin alias: `op` already defaults to "dycore".
 DycoreProgram = StencilProgram
+
+
+def plan_cache_key(program: StencilProgram,
+                   ensemble: Optional[int] = None) -> StencilProgram:
+    """The canonical compile-once-serve-forever cache key for `program`.
+
+    `StencilProgram.__post_init__` already normalizes every field (dtype
+    spellings, tuple-ization), and the spec is frozen and hashable — so
+    the program itself IS the key.  `ensemble` rebinds the batch axis:
+    a serving engine folds single-member requests into the ensemble axis
+    of one shared plan, so requests that differ ONLY in ensemble share a
+    compiled plan keyed at the engine's slot count."""
+    if ensemble is not None and ensemble != program.ensemble:
+        program = dataclasses.replace(program, ensemble=ensemble)
+    return program
+
+
+# --- ensemble-slot views: requests <-> the (e, ...) batch axis -------------
+# Every WeatherState leaf is (E, nz, ny, nx); a serving slot is one member.
+
+
+def ensemble_slot_view(state: WeatherState, e: int) -> WeatherState:
+    """Member `e` of a batched state as an ensemble-1 state (a view — no
+    copy until the caller materializes it)."""
+    return jax.tree_util.tree_map(lambda a: a[e:e + 1], state)
+
+
+def ensemble_slot_assign(batch: WeatherState, indices,
+                         sub: WeatherState) -> WeatherState:
+    """Functionally write `sub` (leading dim = len(indices)) into the given
+    ensemble slots of `batch`."""
+    idx = jnp.asarray(indices, jnp.int32)
+    return jax.tree_util.tree_map(lambda b, s: b.at[idx].set(s), batch, sub)
+
+
+def ensemble_slot_select(mask, new: WeatherState,
+                         old: WeatherState) -> WeatherState:
+    """Per-slot select: slots where `mask` (shape (E,)) is True take `new`,
+    the rest keep `old` — how a serving engine rolls back slots that sat
+    out a shorter-than-their-next-part round."""
+    def sel(n, o):
+        m = jnp.reshape(jnp.asarray(mask), (-1,) + (1,) * (n.ndim - 1))
+        return jnp.where(m, n, o)
+    return jax.tree_util.tree_map(sel, new, old)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -284,8 +346,21 @@ class ExecutionPlan:
                 for _ in range(rounds):
                     state = step(state)
         if tail:
-            state = self._tail_plan(tail).step(state)
+            state = self.round_plan(tail).step(state)
         return state
+
+    def round_plan(self, k: int) -> "ExecutionPlan":
+        """The plan that advances a round of exactly `k` timesteps: `self`
+        when `k == k_steps`, else a derived plan for the shorter round
+        (cached — this is `run()`'s ragged-TAIL machinery, public so a
+        serving engine can retire ragged step counts at round boundaries
+        through the exact same lowering a solo `run()` would use)."""
+        if not isinstance(k, int) or not 1 <= k <= self.k_steps:
+            raise ValueError(f"round_plan(k={k!r}): k must be an int in "
+                             f"[1, k_steps={self.k_steps}]")
+        if k == self.k_steps:
+            return self
+        return self._tail_plan(k)
 
     def report(self) -> Dict[str, Any]:
         """Machine-readable strategy: the resolved op + variant + tile + k

@@ -291,3 +291,72 @@ def test_exchange_schedule_describe():
                          wire_dtype=None)
     assert "wcon_depth_x" not in h.describe()
     assert h.wcon_depth_x is None
+
+
+def test_plan_cache_key_and_json_roundtrip():
+    """The frozen program IS the plan-cache key: ensemble rebinding is the
+    only transform, the spec survives a JSON round-trip bit-for-bit, and
+    rebound keys hash/compare like the directly-constructed spec (the
+    serving engine keys its plan cache on exactly this)."""
+    import jax.numpy as jnp
+
+    from repro.weather.program import StencilProgram, plan_cache_key
+    p = StencilProgram(grid_shape=(4, 8, 8), op="hdiff",
+                       dtype=jnp.bfloat16)   # non-canonical spelling
+    assert plan_cache_key(p) is p                   # no rebind, no copy
+    assert plan_cache_key(p, ensemble=1) is p       # ensemble already 1
+    k4 = plan_cache_key(p, ensemble=4)
+    assert k4.ensemble == 4 and k4.dtype == "bfloat16"    # normalized
+    assert k4 == StencilProgram(grid_shape=(4, 8, 8), op="hdiff",
+                                dtype="bfloat16", ensemble=4)
+    assert {k4: "plan"}[plan_cache_key(p, ensemble=4)] == "plan"
+    # JSON round-trip: to_json is plain-serializable, from_json rebuilds
+    # an equal (hence same-cache-slot) spec
+    d = json.loads(json.dumps(k4.to_json()))
+    back = StencilProgram.from_json(d)
+    assert back == k4 and hash(back) == hash(k4)
+
+
+def test_ensemble_slot_helpers():
+    """Slot view/assign/select are the engine's admission/retire/rollback
+    primitives: a view keeps the leading axis, assign scatters member
+    states into batch slots, select mixes per-slot old/new."""
+    from repro.weather.program import (ensemble_slot_assign,
+                                       ensemble_slot_select,
+                                       ensemble_slot_view)
+    grid = (3, 8, 8)
+    batch = fields.initial_state(jax.random.PRNGKey(0), grid, ensemble=3)
+    one = fields.initial_state(jax.random.PRNGKey(1), grid, ensemble=1)
+    v = ensemble_slot_view(batch, 1)
+    for name in fields.PROGNOSTIC:
+        assert v.fields[name].shape[0] == 1
+        assert np.array_equal(np.asarray(v.fields[name]),
+                              np.asarray(batch.fields[name][1:2]))
+    put = ensemble_slot_assign(batch, np.asarray([2]), one)
+    for name in fields.PROGNOSTIC:
+        assert np.array_equal(np.asarray(put.fields[name][2]),
+                              np.asarray(one.fields[name][0]))
+        assert np.array_equal(np.asarray(put.fields[name][:2]),
+                              np.asarray(batch.fields[name][:2]))
+    mask = np.asarray([True, False, True])
+    mixed = ensemble_slot_select(mask, put, batch)
+    for name in fields.PROGNOSTIC:
+        got = np.asarray(mixed.fields[name])
+        assert np.array_equal(got[0], np.asarray(put.fields[name][0]))
+        assert np.array_equal(got[1], np.asarray(batch.fields[name][1]))
+
+
+def test_round_plan_depths_and_validation():
+    """round_plan(k) is run()'s ragged-tail machinery made public: the
+    full-depth round is `self` (no recompilation), shallower rounds are
+    derived plans with the same strategy at k' steps, and out-of-range
+    depths fail loudly."""
+    plan = compile_dycore(DycoreProgram(grid_shape=(4, 12, 16),
+                                        variant="kstep", k_steps=3))
+    assert plan.round_plan(3) is plan
+    two = plan.round_plan(2)
+    assert two.k_steps == 2 and two.variant == plan.variant
+    assert two is plan.round_plan(2)                # derived plans cached
+    for bad in (0, 4, -1, "2", 2.0):
+        with pytest.raises(ValueError, match="round_plan"):
+            plan.round_plan(bad)

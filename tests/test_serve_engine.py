@@ -52,6 +52,23 @@ def test_greedy_matches_stepwise_reference(served):
     assert got == want
 
 
+def test_latency_is_per_request_not_per_wave(served):
+    """A request's latency clock stops at ITS last token, not the wave's.
+
+    Two requests share one decode wave; the short one must report a
+    strictly smaller latency than the long one (the old accounting gave
+    every request the whole-wave wall time)."""
+    cfg, model, params = served
+    eng = ServeEngine(model, params, batch=2, max_len=64)
+    short = Request(rid=0, prompt=np.asarray([1, 2, 3], np.int32),
+                    max_new_tokens=1)
+    long_ = Request(rid=1, prompt=np.asarray([4, 5, 6], np.int32),
+                    max_new_tokens=12)
+    out = eng.run([short, long_])
+    assert len(out[0]) == 1 and len(out[1]) == 12
+    assert 0.0 < short.latency_s < long_.latency_s
+
+
 def test_sampled_tokens_stay_in_logical_vocab(served):
     """Temperature sampling must never emit a padded-vocab token."""
     cfg, model, params = served
