@@ -8,9 +8,15 @@ each request at the round boundary where its step count completes, and
 backfills the freed slot from the queue.  Every served result is
 bit-identical to a solo `compile(program).run(state, steps)`.
 
+`--chaos` turns on the supervision demo (docs/robustness.md): a NaN
+poison and a transient device loss are injected mid-run; the engine
+quarantines the poisoned request (with a per-field diagnosis), retries
+through the device loss, and serves everyone else bit-identically.
+
 Run:  PYTHONPATH=src python examples/forecast_service.py
       PYTHONPATH=src python examples/forecast_service.py \
           --slots 4 --requests 10 --ckpt /tmp/forecast_ckpt
+      PYTHONPATH=src python examples/forecast_service.py --chaos
 """
 
 import argparse
@@ -18,6 +24,7 @@ import argparse
 import jax
 
 from repro.serve.forecast import ForecastEngine, ForecastRequest
+from repro.testing.faults import FaultInjector, FaultSpec
 from repro.weather import fields
 from repro.weather.program import StencilProgram
 
@@ -31,7 +38,19 @@ def main():
     ap.add_argument("--ckpt", default=None,
                     help="checkpoint dir: snapshot the warm engine mid-"
                          "drain and finish from the restored engine")
+    ap.add_argument("--chaos", action="store_true",
+                    help="inject a NaN poison + a transient device loss "
+                         "and show quarantine/retry in action")
+    ap.add_argument("--max-queue", type=int, default=None,
+                    help="bounded queue: submit() raises QueueFullError "
+                         "past this (backpressure)")
     args = ap.parse_args()
+
+    inj = None
+    if args.chaos:
+        inj = FaultInjector([FaultSpec(kind="poison_nan", round=1),
+                             FaultSpec(kind="device_loss", round=2)],
+                            seed=0)
 
     catalog = (
         StencilProgram(grid_shape=(4, 16, 16), op="dycore"),
@@ -39,7 +58,8 @@ def main():
                        dtype="bfloat16"),
         StencilProgram(grid_shape=(3, 8, 8), op="hdiff"),
     )
-    eng = ForecastEngine(slots=args.slots, ckpt_dir=args.ckpt)
+    eng = ForecastEngine(slots=args.slots, ckpt_dir=args.ckpt,
+                         max_queue=args.max_queue, fault_injector=inj)
     print(f"== forecast service: {args.requests} requests over "
           f"{len(catalog)} programs, {args.slots} slots ==")
     for i in range(args.requests):
@@ -64,17 +84,25 @@ def main():
 
     results = eng.drain()
     print(f"{'rid':>3} {'op':>6} {'dtype':>8} {'steps':>5} "
-          f"{'rounds':>6} {'wait_ms':>8} {'latency_ms':>10}")
+          f"{'rounds':>6} {'wait_ms':>8} {'latency_ms':>10} {'status':>8}")
     for rid in sorted(results):
         r = results[rid]
         print(f"{rid:>3} {r.program.op:>6} {r.program.dtype:>8} "
               f"{r.steps:>5} {r.rounds:>6} {r.queue_wait_s * 1e3:>8.1f} "
-              f"{r.latency_s * 1e3:>10.1f}")
+              f"{r.latency_s * 1e3:>10.1f} {r.status:>8}")
+        if r.diagnosis is not None:
+            print(f"     diagnosis: {r.diagnosis.get('reason')} "
+                  f"{r.diagnosis.get('bad_leaves', '')}")
     s = eng.stats()
     print(f"stats: plans_cached={s['plans_cached']} "
           f"cache_hit_rate={s['plan_cache_hit_rate']:.2f} "
           f"occupancy={s['occupancy']:.2f} rounds={s['rounds']} "
           f"rolled_back={s['rolled_back_slot_rounds']}")
+    if args.chaos:
+        print(f"chaos: faults_fired={inj.fired()} "
+              f"quarantined={s['quarantined']} "
+              f"round_retries={s['round_retries']} "
+              f"failed={s['failed']}")
     print("forecast service OK")
 
 

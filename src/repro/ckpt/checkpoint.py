@@ -12,6 +12,7 @@ import json
 import os
 import shutil
 import threading
+import zlib
 from typing import Any, Optional, Tuple
 
 import jax
@@ -20,6 +21,12 @@ import ml_dtypes
 import numpy as np
 
 _SEP = "/"
+
+
+class CheckpointCorruptError(RuntimeError):
+    """A checkpoint failed integrity verification (truncated archive,
+    bit-flipped array, missing entry).  The message names the offending
+    entry so operators know WHAT rotted, not just that np.load choked."""
 
 # numpy-native dtype names; everything else (bfloat16, fp8s) is stored as a
 # same-width unsigned-int view + its name in meta.json (np.load would
@@ -45,6 +52,71 @@ def _unpack(arr: np.ndarray, name: Optional[str]) -> np.ndarray:
     if not name:
         return arr
     return arr.view(np.dtype(getattr(ml_dtypes, name)))
+
+
+def _manifest(packed: dict) -> dict:
+    """Per-array integrity manifest over the PACKED (on-disk) arrays:
+    crc32 + byte count + shape + stored dtype for every entry."""
+    return {k: {"crc32": zlib.crc32(np.ascontiguousarray(v).tobytes()),
+                "nbytes": int(v.nbytes), "shape": list(v.shape),
+                "dtype": str(v.dtype)} for k, v in packed.items()}
+
+
+def _load_verified(base: str) -> Tuple[dict, dict]:
+    """Load `base/arrays.npz` + meta, verifying every entry against the
+    manifest.  Raises `CheckpointCorruptError` naming the bad entry on a
+    truncated file, an unreadable member, or a crc32 mismatch; old
+    manifest-less checkpoints load unverified (nothing to check against)."""
+    meta_path = os.path.join(base, "meta.json")
+    try:
+        with open(meta_path) as f:
+            meta = json.load(f)
+    except (OSError, ValueError) as e:
+        raise CheckpointCorruptError(
+            f"checkpoint {base!r}: meta.json is unreadable ({e})") from e
+    manifest = meta.get("manifest")
+    dtypes = meta.get("dtypes", {})
+    flat = {}
+    npz = os.path.join(base, "arrays.npz")
+    try:
+        with np.load(npz) as z:
+            names = list(z.files)
+            for k in names:
+                try:
+                    arr = z[k]
+                except Exception as e:
+                    raise CheckpointCorruptError(
+                        f"checkpoint {base!r}: entry {k!r} is unreadable "
+                        f"(truncated or bit-flipped archive member: "
+                        f"{e})") from e
+                if manifest is not None:
+                    want = manifest.get(k)
+                    if want is None:
+                        raise CheckpointCorruptError(
+                            f"checkpoint {base!r}: entry {k!r} is not in "
+                            f"the manifest (foreign or stale array)")
+                    got_crc = zlib.crc32(np.ascontiguousarray(arr).tobytes())
+                    if (got_crc != want["crc32"]
+                            or int(arr.nbytes) != want["nbytes"]):
+                        raise CheckpointCorruptError(
+                            f"checkpoint {base!r}: entry {k!r} fails "
+                            f"integrity check (crc32 {got_crc} != manifest "
+                            f"{want['crc32']}) — the array was corrupted "
+                            f"on disk")
+                flat[k] = _unpack(arr, dtypes.get(k))
+    except CheckpointCorruptError:
+        raise
+    except Exception as e:
+        raise CheckpointCorruptError(
+            f"checkpoint {base!r}: arrays.npz is unreadable (truncated or "
+            f"corrupt archive: {e})") from e
+    if manifest is not None:
+        missing = sorted(set(manifest) - set(flat))
+        if missing:
+            raise CheckpointCorruptError(
+                f"checkpoint {base!r}: manifest entries missing from "
+                f"arrays.npz: {missing[:5]}")
+    return flat, meta
 
 
 def _flatten(tree) -> dict:
@@ -79,7 +151,7 @@ def save(ckpt_dir: str, step: int, params, opt_state, keep: int = 3):
     np.savez(os.path.join(tmp, "arrays.npz"), **packed)
     with open(os.path.join(tmp, "meta.json"), "w") as f:
         json.dump({"step": step, "n_arrays": len(arrays),
-                   "dtypes": dtypes}, f)
+                   "dtypes": dtypes, "manifest": _manifest(packed)}, f)
     if os.path.exists(final):
         shutil.rmtree(final)
     os.rename(tmp, final)
@@ -114,10 +186,7 @@ def restore(ckpt_dir: str, step: int, mesh, p_shard, o_shard
             ) -> Tuple[Any, Any, int]:
     """Elastic restore: shardings come from the *current* mesh."""
     base = os.path.join(ckpt_dir, f"step_{step:08d}")
-    with open(os.path.join(base, "meta.json")) as f:
-        dtypes = json.load(f).get("dtypes", {})
-    with np.load(os.path.join(base, "arrays.npz")) as z:
-        flat = {k: _unpack(z[k], dtypes.get(k)) for k in z.files}
+    flat, _ = _load_verified(base)
     p_flat = {k[len("params/"):]: v for k, v in flat.items()
               if k.startswith("params/")}
     o_flat = {k[len("opt/"):]: v for k, v in flat.items()
@@ -158,7 +227,7 @@ def save_tree(ckpt_dir: str, step: int, tree, extra: Optional[dict] = None,
     np.savez(os.path.join(tmp, "arrays.npz"), **packed)
     with open(os.path.join(tmp, "meta.json"), "w") as f:
         json.dump({"step": step, "n_arrays": len(arrays), "dtypes": dtypes,
-                   "extra": extra}, f)
+                   "manifest": _manifest(packed), "extra": extra}, f)
     if os.path.exists(final):
         shutil.rmtree(final)
     os.rename(tmp, final)
@@ -171,13 +240,12 @@ def restore_tree(ckpt_dir: str, step: int, template
 
     `template` supplies the pytree structure and leaf dtypes (e.g. a
     zeros-built state of the right shape); arrays are cast onto it the
-    same way elastic `restore` does."""
+    same way elastic `restore` does.  Every array is verified against the
+    per-entry crc32 manifest written by `save_tree`; a truncated or
+    bit-flipped checkpoint raises `CheckpointCorruptError` naming the bad
+    entry instead of silently loading garbage."""
     base = os.path.join(ckpt_dir, f"step_{step:08d}")
-    with open(os.path.join(base, "meta.json")) as f:
-        meta = json.load(f)
-    dtypes = meta.get("dtypes", {})
-    with np.load(os.path.join(base, "arrays.npz")) as z:
-        flat = {k: _unpack(z[k], dtypes.get(k)) for k in z.files}
+    flat, meta = _load_verified(base)
     return _unflatten(template, flat), meta.get("extra")
 
 
@@ -216,7 +284,8 @@ class AsyncSaver:
             np.savez(os.path.join(tmp, "arrays.npz"), **packed)
             with open(os.path.join(tmp, "meta.json"), "w") as f:
                 json.dump({"step": step, "n_arrays": len(arrays),
-                           "dtypes": dtypes}, f)
+                           "dtypes": dtypes,
+                           "manifest": _manifest(packed)}, f)
             if os.path.exists(final):
                 shutil.rmtree(final)
             os.rename(tmp, final)

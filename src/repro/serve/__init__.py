@@ -7,6 +7,7 @@ ExecutionPlans (see docs/serving.md).
 """
 
 from repro.serve.forecast import (ForecastEngine, ForecastRequest,
-                                  ForecastResult)
+                                  ForecastResult, QueueFullError)
 
-__all__ = ["ForecastEngine", "ForecastRequest", "ForecastResult"]
+__all__ = ["ForecastEngine", "ForecastRequest", "ForecastResult",
+           "QueueFullError"]

@@ -47,6 +47,31 @@ over the plan API (`weather/program.py`):
   checkpointed step (no respin to step 0), and the plan cache rebuilds
   lazily from the persisted program keys.
 
+* **Supervised, safe to run unattended.**  One shared batch means one
+  poisoned request could take down every co-scheduled forecast — so the
+  engine supervises itself (docs/robustness.md):
+
+  - *Validity guards*: at every round boundary a cheap fused NaN/Inf +
+    bounds reduction (`program.slot_validity`) checks every slot; an
+    invalid slot is QUARANTINED — its request returns `status="failed"`
+    with a per-field diagnosis, the slot is re-zeroed (zeros are a
+    stencil fixed point) and backfills from the queue — while every
+    healthy slot keeps its exact bits (the guard only reads).
+  - *Graceful degradation*: plan compilation goes through
+    `program.compile_with_fallback` (native → interpret → reference
+    lowering); a failed round retries with exponential backoff, then
+    degrades the plan, then fails only that lane's in-flight requests
+    with a diagnosis — never the whole engine.
+  - *Backpressure + deadlines*: `max_queue` bounds the queue (`submit`
+    raises `QueueFullError` instead of accepting unbounded work);
+    per-request `deadline_s` expires stale work at round boundaries.
+  - *Watchdog*: `ckpt_every_rounds=N` auto-checkpoints every N rounds so
+    a crash resumes from the last round boundary bitwise-equal to an
+    uninterrupted run.
+  - *Rehearsed in CI*: every one of these paths is driven
+    deterministically by `repro.testing.faults.FaultInjector` (the
+    engine's `fault_injector` hook) in the chaos test suite.
+
 See docs/serving.md for the lifecycle diagrams and BENCH_serve.json for
 the latency/occupancy numbers under synthetic load.
 """
@@ -68,7 +93,21 @@ from repro.weather import fields as _fields
 from repro.weather import program as _wprog
 from repro.weather.fields import WeatherState
 
-__all__ = ["ForecastRequest", "ForecastResult", "ForecastEngine"]
+__all__ = ["ForecastRequest", "ForecastResult", "ForecastEngine",
+           "QueueFullError", "STATUSES"]
+
+# Result statuses (see docs/serving.md for the full table):
+#   ok       — served; state is bit-identical to the solo run
+#   failed   — quarantined by the validity guard or a persistent round
+#              failure; `diagnosis` says why, `state` is the last state
+#   expired  — per-request deadline passed before completion
+STATUSES = ("ok", "failed", "expired")
+
+
+class QueueFullError(RuntimeError):
+    """`submit()` refused a request: the bounded queue is full.  This is
+    explicit backpressure — retry later or raise `max_queue`; silently
+    buffering unbounded work is how a service dies of memory instead."""
 
 
 @dataclasses.dataclass
@@ -80,8 +119,12 @@ class ForecastRequest:
     state: WeatherState
     steps: int
     rid: Optional[int] = None                   # assigned by submit()
+    deadline_s: Optional[float] = None          # wall-clock budget from submit
 
     def validate(self) -> None:
+        if self.deadline_s is not None and not self.deadline_s > 0:
+            raise ValueError(f"deadline_s={self.deadline_s!r} must be a "
+                             f"positive number of seconds (or None)")
         if self.program.ensemble != 1:
             raise ValueError(f"a request is ONE forecast: program.ensemble "
                              f"must be 1, got {self.program.ensemble}")
@@ -115,6 +158,13 @@ class ForecastResult:
     latency_s: float
     queue_wait_s: float
     rounds: int
+    status: str = "ok"                          # one of STATUSES
+    steps_done: Optional[int] = None            # == steps when status=="ok"
+    diagnosis: Optional[Dict[str, Any]] = None  # why, when status != "ok"
+
+    @property
+    def ok(self) -> bool:
+        return self.status == "ok"
 
 
 @dataclasses.dataclass
@@ -125,6 +175,11 @@ class _Slot:
     admit_t: float
     queue_wait_s: float
     rounds: int = 0
+    deadline_s: Optional[float] = None
+
+    @property
+    def submit_t(self) -> float:
+        return self.admit_t - self.queue_wait_s
 
 
 @dataclasses.dataclass
@@ -154,26 +209,47 @@ class ForecastEngine:
     def __init__(self, slots: int = 4, mesh=None,
                  interpret: Optional[bool] = None, ax_e: str = "pod",
                  ax_y: str = "data", ax_x: str = "model",
-                 ckpt_dir: Optional[str] = None, ckpt_keep: int = 3):
+                 ckpt_dir: Optional[str] = None, ckpt_keep: int = 3,
+                 max_queue: Optional[int] = None, guard: bool = True,
+                 guard_limit: float = 1e6,
+                 ckpt_every_rounds: Optional[int] = None,
+                 max_round_retries: int = 2, retry_backoff_s: float = 0.05,
+                 fault_injector=None):
         if slots < 1:
             raise ValueError(f"slots={slots} must be >= 1")
+        if max_queue is not None and max_queue < 1:
+            raise ValueError(f"max_queue={max_queue} must be >= 1 (or None "
+                             f"for unbounded)")
         self.slots = slots
         self.mesh = mesh
         self.interpret = interpret
         self.mesh_axes = (ax_e, ax_y, ax_x)
         self.ckpt_dir = ckpt_dir
         self.ckpt_keep = ckpt_keep
+        self.max_queue = max_queue
+        self.guard = guard
+        self.guard_limit = float(guard_limit)
+        self.ckpt_every_rounds = ckpt_every_rounds
+        self.max_round_retries = max_round_retries
+        self.retry_backoff_s = retry_backoff_s
+        self.fault_injector = fault_injector
 
         self._queue: collections.deque[_Pending] = collections.deque()
         self._lanes: Dict[_wprog.StencilProgram, _Lane] = {}
         self._plans: Dict[_wprog.StencilProgram, _wprog.ExecutionPlan] = {}
+        self._fallbacks: Dict[_wprog.StencilProgram, Dict[str, Any]] = {}
         self._results: Dict[int, ForecastResult] = {}
         self._next_rid = 0
         self._ckpt_step = 0
+        self._last_ckpt_round = 0
         self._stats = {"plan_cache_hits": 0, "plan_cache_misses": 0,
                        "rounds": 0, "admitted": 0, "completed": 0,
                        "rolled_back_slot_rounds": 0,
-                       "occupancy_sum": 0.0, "occupancy_samples": 0}
+                       "occupancy_sum": 0.0, "occupancy_samples": 0,
+                       "quarantined": 0, "scrubbed_idle_slots": 0,
+                       "round_retries": 0, "lane_failures": 0,
+                       "fallback_compiles": 0, "rejected": 0,
+                       "deadline_expired": 0, "watchdog_checkpoints": 0}
         # Donating the pre-admission batch buffer lets XLA reuse it for
         # the scattered batch; CPU has no donation (it would only warn).
         donate = (0,) if jax.default_backend() in ("tpu", "gpu") else ()
@@ -184,8 +260,19 @@ class ForecastEngine:
     def submit(self, request: ForecastRequest) -> int:
         """Enqueue one forecast; returns its rid.  The initial state is
         device_put NOW (async) so admission later is a device-side
-        scatter — staging hides behind whatever round is running."""
+        scatter — staging hides behind whatever round is running.
+
+        Raises `QueueFullError` when `max_queue` is set and the queue is
+        at capacity — explicit backpressure, not silent buffering."""
         request.validate()
+        if (self.max_queue is not None
+                and len(self._queue) >= self.max_queue):
+            self._stats["rejected"] += 1
+            raise QueueFullError(
+                f"queue is full ({len(self._queue)}/{self.max_queue} "
+                f"pending, slots={self.slots}): the engine is saturated — "
+                f"retry after a pump()/drain(), shed load upstream, or "
+                f"raise max_queue")
         if request.rid is None:
             request.rid = self._next_rid
         self._next_rid = max(self._next_rid, request.rid) + 1
@@ -200,11 +287,20 @@ class ForecastEngine:
 
     def pump(self) -> bool:
         """Admit whatever fits, advance every busy lane ONE round, retire
-        finished slots.  Returns `has_work()`."""
+        finished slots.  Returns `has_work()`.  With `ckpt_every_rounds`
+        set (and a ckpt_dir), the watchdog auto-checkpoints at the pump
+        boundary — every lane sits at a round boundary there, so a crash
+        resumes bitwise-equal to an uninterrupted run."""
         self._admit()
         for lane in self._lanes.values():
             if any(s is not None for s in lane.slots):
                 self._round(lane)
+        if (self.ckpt_every_rounds and self.ckpt_dir is not None
+                and self._stats["rounds"] - self._last_ckpt_round
+                >= self.ckpt_every_rounds):
+            self.checkpoint()
+            self._last_ckpt_round = self._stats["rounds"]
+            self._stats["watchdog_checkpoints"] += 1
         return self.has_work()
 
     def drain(self) -> Dict[int, ForecastResult]:
@@ -230,6 +326,12 @@ class ForecastEngine:
         s["queued"] = len(self._queue)
         s["active"] = sum(sum(sl is not None for sl in lane.slots)
                           for lane in self._lanes.values())
+        s["failed"] = sum(1 for r in self._results.values()
+                          if r.status == "failed")
+        s["expired"] = sum(1 for r in self._results.values()
+                           if r.status == "expired")
+        s["plan_fallbacks"] = {k.op: v["stage"]
+                               for k, v in self._fallbacks.items()}
         return s
 
     # -- scheduling ---------------------------------------------------------
@@ -237,10 +339,17 @@ class ForecastEngine:
         plan = self._plans.get(key)
         if plan is None:
             ax_e, ax_y, ax_x = self.mesh_axes
-            # Call through the module so a test spy on
+            inj = self.fault_injector
+            # Compile through the fallback chain (native -> interpret ->
+            # reference lowering), via the module so a test spy on
             # repro.weather.program.compile observes every compilation.
-            plan = _wprog.compile(key, mesh=self.mesh, ax_e=ax_e, ax_y=ax_y,
-                                  ax_x=ax_x, interpret=self.interpret)
+            plan, fallback, errors = _wprog.compile_with_fallback(
+                key, mesh=self.mesh, ax_e=ax_e, ax_y=ax_y, ax_x=ax_x,
+                interpret=self.interpret,
+                attempt_hook=inj.on_compile if inj is not None else None)
+            if fallback is not None:
+                self._stats["fallback_compiles"] += 1
+                self._fallbacks[key] = {"stage": fallback, "errors": errors}
             self._plans[key] = plan
         return plan
 
@@ -268,6 +377,21 @@ class ForecastEngine:
         free: Dict[_wprog.StencilProgram, List[int]] = {}
         for pend in self._queue:
             req = pend.request
+            if (req.deadline_s is not None
+                    and now - pend.submit_t > req.deadline_s):
+                # Expired while queued: serving it now would waste a slot
+                # on an answer nobody is waiting for.
+                self._stats["deadline_expired"] += 1
+                self._finish(req.rid, req.program,
+                             jax.tree_util.tree_map(np.asarray, req.state),
+                             steps=req.steps, admit_t=now,
+                             queue_wait_s=now - pend.submit_t, rounds=0,
+                             status="expired", steps_done=0,
+                             diagnosis={"reason": "deadline_exceeded",
+                                        "deadline_s": req.deadline_s,
+                                        "waited_s": now - pend.submit_t,
+                                        "where": "queue"})
+                continue
             if req.steps == 0:
                 # A 0-step forecast is its own answer (solo run(state, 0)
                 # is the identity) — finish without occupying a slot.
@@ -308,22 +432,36 @@ class ForecastEngine:
                 req = pend.request
                 lane.slots[i] = _Slot(rid=req.rid, remaining=req.steps,
                                       steps=req.steps, admit_t=admit_t,
-                                      queue_wait_s=admit_t - pend.submit_t)
+                                      queue_wait_s=admit_t - pend.submit_t,
+                                      deadline_s=req.deadline_s)
                 self._stats["admitted"] += 1
 
     def _round(self, lane: _Lane) -> None:
-        """One lane round: the shortest next canonical part among active
-        slots picks the round depth; slots whose next part is deeper run
-        along but are rolled back (uncredited) so every request's realized
-        round sequence equals its solo `run()` sequence."""
+        """One SUPERVISED lane round.
+
+        Scheduling is unchanged from the unsupervised engine: the shortest
+        next canonical part among active slots picks the round depth;
+        slots whose next part is deeper run along but are rolled back
+        (uncredited) so every request's realized round sequence equals its
+        solo `run()` sequence.  Around that, supervision: the step retries
+        with exponential backoff on runtime failure (degrading the plan,
+        then failing only this lane's in-flight requests), the fault
+        injector's poison hook fires post-step, the validity guard
+        quarantines invalid slots pre-credit, and per-request deadlines
+        expire at the boundary."""
         plan = self._plan_for(lane.key)
         k = plan.k_steps
         parts = {i: min(s.remaining, k)
                  for i, s in enumerate(lane.slots) if s is not None}
         kk = min(parts.values())
         participants = [i for i, p in parts.items() if p == kk]
+        rnd = self._stats["rounds"]
         prev = lane.batch if len(participants) < len(parts) else None
-        lane.batch = plan.round_plan(kk).step(lane.batch)
+        new_batch = self._step_with_retry(lane, plan, kk, rnd)
+        if new_batch is None:                    # escalation exhausted
+            self._fail_lane(lane, rnd)
+            return
+        lane.batch = new_batch
         if prev is not None:
             mask = np.zeros(self.slots, bool)
             mask[participants] = True
@@ -333,12 +471,186 @@ class ForecastEngine:
         self._stats["rounds"] += 1
         self._stats["occupancy_sum"] += len(parts) / self.slots
         self._stats["occupancy_samples"] += 1
+        inj = self.fault_injector
+        if inj is not None:
+            lane.batch = inj.poison(lane.batch, lane.key.op, rnd,
+                                    tuple(parts))
+        bad = self._guard_check(lane, parts, rnd) if self.guard else {}
+        for i, (diag, state) in bad.items():
+            self._quarantine(lane, i, diag, state)
         for i in participants:
+            if i in bad:
+                continue
             slot = lane.slots[i]
             slot.remaining -= kk
             slot.rounds += 1
             if slot.remaining == 0:
                 self._retire(lane, i)
+        now = time.perf_counter()
+        for i, slot in enumerate(lane.slots):
+            if (slot is not None and slot.deadline_s is not None
+                    and now - slot.submit_t > slot.deadline_s):
+                self._expire_slot(lane, i, now)
+
+    def _step_with_retry(self, lane: _Lane, plan, kk: int, rnd: int):
+        """Run one round, retrying transient failures with exponential
+        backoff; after `max_round_retries`, degrade the plan (force the
+        interpreter) and try once more.  Returns the new batch, or None
+        when every recourse failed (the caller fails the lane)."""
+        inj = self.fault_injector
+        delay = self.retry_backoff_s
+        last = None
+        for attempt in range(self.max_round_retries + 1):
+            try:
+                if inj is not None:
+                    inj.on_round(lane.key.op, rnd)
+                out = plan.round_plan(kk).step(lane.batch)
+                if self.guard or inj is not None:
+                    # Surface async runtime failures HERE, inside the
+                    # retry scope, rather than at some later readback
+                    # (the guard reads the batch right after anyway).
+                    jax.block_until_ready(out)
+                return out
+            except Exception as e:  # noqa: BLE001 — supervised boundary
+                self._stats["round_retries"] += 1
+                last = e
+                if attempt < self.max_round_retries:
+                    time.sleep(delay)
+                    delay *= 2
+        # Retries exhausted: degrade to the interpreter lowering once.
+        if not plan.interpret:
+            try:
+                ax_e, ax_y, ax_x = self.mesh_axes
+                plan2 = _wprog.compile(lane.key, mesh=self.mesh, ax_e=ax_e,
+                                       ax_y=ax_y, ax_x=ax_x, interpret=True)
+                out = plan2.round_plan(kk).step(lane.batch)
+                jax.block_until_ready(out)
+                self._plans[lane.key] = plan2
+                self._fallbacks[lane.key] = {
+                    "stage": "interpret", "errors": [("runtime", repr(last))]}
+                self._stats["fallback_compiles"] += 1
+                return out
+            except Exception as e:  # noqa: BLE001
+                last = e
+        self._last_round_error = repr(last)
+        return None
+
+    def _fail_lane(self, lane: _Lane, rnd: int) -> None:
+        """A round failed beyond retry and degradation: fail ONLY this
+        lane's in-flight requests (each gets a diagnosis and its pre-round
+        state) and reset the lane so the rest of the engine keeps
+        serving."""
+        self._stats["lane_failures"] += 1
+        err = getattr(self, "_last_round_error", "unknown")
+        for i, slot in enumerate(lane.slots):
+            if slot is None:
+                continue
+            lane.slots[i] = None
+            state = jax.tree_util.tree_map(
+                np.asarray, _wprog.ensemble_slot_view(lane.batch, i))
+            self._finish(slot.rid,
+                         dataclasses.replace(lane.key, ensemble=1), state,
+                         steps=slot.steps, admit_t=slot.admit_t,
+                         queue_wait_s=slot.queue_wait_s, rounds=slot.rounds,
+                         status="failed",
+                         steps_done=slot.steps - slot.remaining,
+                         diagnosis={"reason": "round_failure", "round": rnd,
+                                    "error": err})
+        lane.batch = jax.device_put(_fields.zeros_state(
+            lane.key.grid_shape, ensemble=self.slots, dtype=lane.key.dtype,
+            names=lane.key.fields))
+        if self.mesh is not None:
+            lane.batch = _domain.shard_state(
+                lane.batch, self.mesh, self._plan_for(lane.key).state_spec)
+
+    # -- validity guard / quarantine ---------------------------------------
+    def _guard_check(self, lane: _Lane, parts: Dict[int, int],
+                     rnd: int) -> Dict[int, Tuple[Dict[str, Any],
+                                                  WeatherState]]:
+        """The per-slot physics validity guard: ONE fused NaN/Inf + bounds
+        reduction over the whole lane batch at the round boundary.  Active
+        invalid slots are diagnosed (host readback of just that slot);
+        idle slots that rot (e.g. a poisoned-then-freed slot) are scrubbed
+        back to zeros.  Healthy slots are only READ — their bits cannot
+        change."""
+        ok = np.asarray(_wprog.slot_validity(lane.batch, self.guard_limit))
+        bad: Dict[int, Tuple[Dict[str, Any], WeatherState]] = {}
+        for i in parts:
+            if not bool(ok[i]):
+                bad[i] = self._diagnose(lane, i, rnd)
+        for i, slot in enumerate(lane.slots):
+            if slot is None and not bool(ok[i]):
+                self._scrub(lane, i)
+                self._stats["scrubbed_idle_slots"] += 1
+        return bad
+
+    def _diagnose(self, lane: _Lane, i: int,
+                  rnd: int) -> Tuple[Dict[str, Any], WeatherState]:
+        """Host-side diagnosis of one invalid slot (the slow path — it
+        only runs on quarantine): per-leaf NaN/Inf/out-of-bounds counts."""
+        state = jax.tree_util.tree_map(
+            np.asarray, _wprog.ensemble_slot_view(lane.batch, i))
+        leaves = {}
+        for name, a in sorted(state.fields.items()):
+            leaves[f"fields/{name}"] = a
+        leaves["wcon"] = np.asarray(state.wcon)
+        for name, a in sorted(state.tens.items()):
+            leaves[f"tens/{name}"] = a
+        for name, a in sorted(state.stage_tens.items()):
+            leaves[f"stage_tens/{name}"] = a
+        per_leaf = {}
+        for key, a in leaves.items():
+            a = np.asarray(a, np.float64)
+            nan = int(np.isnan(a).sum())
+            inf = int(np.isinf(a).sum())
+            finite = a[np.isfinite(a)]
+            oob = int((np.abs(finite) > self.guard_limit).sum())
+            if nan or inf or oob:
+                per_leaf[key] = {"nan": nan, "inf": inf,
+                                 "out_of_bounds": oob}
+        diag = {"reason": "validity_guard", "round": rnd,
+                "limit": self.guard_limit, "bad_leaves": per_leaf,
+                "first_bad": next(iter(per_leaf), None)}
+        return diag, state
+
+    def _quarantine(self, lane: _Lane, i: int, diag: Dict[str, Any],
+                    state: WeatherState) -> None:
+        """Remove ONE offending slot: its request finishes `failed` with
+        the diagnosis (and the offending state, for forensics), the slot
+        is re-zeroed so the lane stays healthy, and the freed slot
+        backfills from the queue at the next admit."""
+        slot = lane.slots[i]
+        lane.slots[i] = None
+        self._stats["quarantined"] += 1
+        self._scrub(lane, i)
+        self._finish(slot.rid, dataclasses.replace(lane.key, ensemble=1),
+                     state, steps=slot.steps, admit_t=slot.admit_t,
+                     queue_wait_s=slot.queue_wait_s, rounds=slot.rounds,
+                     status="failed",
+                     steps_done=slot.steps - slot.remaining, diagnosis=diag)
+
+    def _scrub(self, lane: _Lane, i: int) -> None:
+        zero = _fields.zeros_state(lane.key.grid_shape, ensemble=1,
+                                   dtype=lane.key.dtype,
+                                   names=lane.key.fields)
+        lane.batch = self._assign(lane.batch, jnp.asarray([i]), zero)
+
+    def _expire_slot(self, lane: _Lane, i: int, now: float) -> None:
+        slot = lane.slots[i]
+        lane.slots[i] = None
+        self._stats["deadline_expired"] += 1
+        state = jax.tree_util.tree_map(
+            np.asarray, _wprog.ensemble_slot_view(lane.batch, i))
+        self._scrub(lane, i)
+        self._finish(slot.rid, dataclasses.replace(lane.key, ensemble=1),
+                     state, steps=slot.steps, admit_t=slot.admit_t,
+                     queue_wait_s=slot.queue_wait_s, rounds=slot.rounds,
+                     status="expired",
+                     steps_done=slot.steps - slot.remaining,
+                     diagnosis={"reason": "deadline_exceeded",
+                                "deadline_s": slot.deadline_s,
+                                "elapsed_s": now - slot.submit_t,
+                                "where": "in_flight"})
 
     def _retire(self, lane: _Lane, i: int) -> None:
         slot = lane.slots[i]
@@ -352,11 +664,15 @@ class ForecastEngine:
                      rounds=slot.rounds)
 
     def _finish(self, rid: int, prog, state, *, steps: int, admit_t: float,
-                queue_wait_s: float, rounds: int) -> None:
+                queue_wait_s: float, rounds: int, status: str = "ok",
+                steps_done: Optional[int] = None,
+                diagnosis: Optional[Dict[str, Any]] = None) -> None:
         self._results[rid] = ForecastResult(
             rid=rid, program=prog, state=state, steps=steps,
             latency_s=time.perf_counter() - admit_t,
-            queue_wait_s=queue_wait_s, rounds=rounds)
+            queue_wait_s=queue_wait_s, rounds=rounds, status=status,
+            steps_done=steps if steps_done is None else steps_done,
+            diagnosis=diagnosis)
         self._stats["completed"] += 1
 
     # -- warm-state checkpointing ------------------------------------------
@@ -385,6 +701,16 @@ class ForecastEngine:
             "next_rid": self._next_rid,
             "ckpt_step": self._ckpt_step,
             "stats": {k: v for k, v in self._stats.items()},
+            "mesh_devices": (None if self.mesh is None
+                             else int(self.mesh.devices.size)),
+            "config": {
+                "max_queue": self.max_queue, "guard": self.guard,
+                "guard_limit": self.guard_limit,
+                "ckpt_every_rounds": self.ckpt_every_rounds,
+                "max_round_retries": self.max_round_retries,
+                "retry_backoff_s": self.retry_backoff_s,
+                "last_ckpt_round": self._last_ckpt_round,
+            },
             "lanes": [{
                 "program": lane.key.to_json(),
                 "slots": [None if s is None else {
@@ -392,6 +718,7 @@ class ForecastEngine:
                     "steps": s.steps, "rounds": s.rounds,
                     "elapsed_s": now - s.admit_t,
                     "queue_wait_s": s.queue_wait_s,
+                    "deadline_s": s.deadline_s,
                 } for s in lane.slots],
             } for lane in lanes],
             "queue": [{
@@ -399,11 +726,14 @@ class ForecastEngine:
                 "steps": p.request.steps,
                 "program": p.request.program.to_json(),
                 "waited_s": now - p.submit_t,
+                "deadline_s": p.request.deadline_s,
             } for p in self._queue],
             "results": [{
                 "rid": r.rid, "steps": r.steps, "rounds": r.rounds,
                 "latency_s": r.latency_s, "queue_wait_s": r.queue_wait_s,
                 "program": r.program.to_json(),
+                "status": r.status, "steps_done": r.steps_done,
+                "diagnosis": r.diagnosis,
             } for r in self._results.values()],
         }
         ckpt.save_tree(ckpt_dir, step, tree, extra=extra,
@@ -414,18 +744,34 @@ class ForecastEngine:
     def restore(cls, ckpt_dir: str, step: Optional[int] = None, *,
                 mesh=None, interpret: Optional[bool] = None,
                 ax_e: str = "pod", ax_y: str = "data", ax_x: str = "model",
-                ckpt_keep: int = 3) -> "ForecastEngine":
+                ckpt_keep: int = 3, fault_injector=None) -> "ForecastEngine":
         """Resume a checkpointed engine: in-flight forecasts continue from
         their persisted step (no respin), queued requests stay queued,
         finished results are preserved.  Plans are NOT serialized — the
         cache rebuilds lazily from the persisted program keys on the
-        first round each lane runs."""
+        first round each lane runs.  Supervision config (max_queue, guard,
+        watchdog cadence, retry policy) is restored from the checkpoint;
+        a mesh whose device count differs from the writing engine's is
+        refused with an actionable error."""
         if step is None:
             step = ckpt.latest_step(ckpt_dir)
             if step is None:
                 raise FileNotFoundError(f"no checkpoints in {ckpt_dir!r}")
         extra = ckpt.read_meta(ckpt_dir, step)["extra"]
         slots = extra["slots"]
+        if "mesh_devices" in extra:
+            saved_dev = extra["mesh_devices"]
+            have_dev = None if mesh is None else int(mesh.devices.size)
+            if saved_dev != have_dev:
+                def word(n):
+                    return "single-chip" if n is None else f"{n}-device"
+                raise ValueError(
+                    f"checkpoint {ckpt_dir!r} step {step} was written by a "
+                    f"{word(saved_dev)} engine but restore() was given a "
+                    f"{word(have_dev)} mesh: lane batches would be "
+                    f"re-sharded inconsistently.  Restore with "
+                    + (f"a mesh of exactly {saved_dev} devices"
+                       if saved_dev else "mesh=None") + ".")
 
         def prog_of(d):
             return _wprog.StencilProgram.from_json(d)
@@ -444,11 +790,20 @@ class ForecastEngine:
         }
         tree, _ = ckpt.restore_tree(ckpt_dir, step, tmpl)
 
+        cfg = extra.get("config", {})
         eng = cls(slots=slots, mesh=mesh, interpret=interpret, ax_e=ax_e,
                   ax_y=ax_y, ax_x=ax_x, ckpt_dir=ckpt_dir,
-                  ckpt_keep=ckpt_keep)
+                  ckpt_keep=ckpt_keep,
+                  max_queue=cfg.get("max_queue"),
+                  guard=cfg.get("guard", True),
+                  guard_limit=cfg.get("guard_limit", 1e6),
+                  ckpt_every_rounds=cfg.get("ckpt_every_rounds"),
+                  max_round_retries=cfg.get("max_round_retries", 2),
+                  retry_backoff_s=cfg.get("retry_backoff_s", 0.05),
+                  fault_injector=fault_injector)
         eng._next_rid = extra["next_rid"]
         eng._ckpt_step = extra["ckpt_step"]
+        eng._last_ckpt_round = cfg.get("last_ckpt_round", 0)
         eng._stats.update(extra["stats"])
         now = time.perf_counter()
         for ln, batch in zip(extra["lanes"], tree["lanes"]):
@@ -465,12 +820,14 @@ class ForecastEngine:
                     rid=s["rid"], remaining=s["remaining"],
                     steps=s["steps"], rounds=s["rounds"],
                     admit_t=now - s["elapsed_s"],
-                    queue_wait_s=s["queue_wait_s"])
+                    queue_wait_s=s["queue_wait_s"],
+                    deadline_s=s.get("deadline_s"))
                     for s in ln["slots"]])
         for q, state in zip(extra["queue"], tree["queue"]):
             req = ForecastRequest(program=prog_of(q["program"]),
                                   state=jax.device_put(state),
-                                  steps=q["steps"], rid=q["rid"])
+                                  steps=q["steps"], rid=q["rid"],
+                                  deadline_s=q.get("deadline_s"))
             eng._queue.append(_Pending(req, now - q["waited_s"]))
         for r in extra["results"]:
             eng._results[r["rid"]] = ForecastResult(
@@ -478,5 +835,8 @@ class ForecastEngine:
                 state=jax.tree_util.tree_map(np.asarray,
                                              tree["results"][str(r["rid"])]),
                 steps=r["steps"], latency_s=r["latency_s"],
-                queue_wait_s=r["queue_wait_s"], rounds=r["rounds"])
+                queue_wait_s=r["queue_wait_s"], rounds=r["rounds"],
+                status=r.get("status", "ok"),
+                steps_done=r.get("steps_done", r["steps"]),
+                diagnosis=r.get("diagnosis"))
         return eng

@@ -1,0 +1,16 @@
+"""repro.testing subpackage: deterministic fault injection for chaos tests.
+
+`faults` is the seedable fault-injection harness the supervised serving
+stack (`serve/forecast.py`) and the CI chaos job drive — NaN/Inf slot
+poisoning, simulated compile-lowering failures, mid-round device loss,
+and checkpoint file corruption (see docs/robustness.md).
+"""
+
+from repro.testing.faults import (FaultInjector, FaultSpec, InjectedFault,
+                                  InjectedCompileError, InjectedDeviceLoss,
+                                  bitflip_file, corrupt_checkpoint,
+                                  truncate_file)
+
+__all__ = ["FaultInjector", "FaultSpec", "InjectedFault",
+           "InjectedCompileError", "InjectedDeviceLoss", "bitflip_file",
+           "corrupt_checkpoint", "truncate_file"]

@@ -1,0 +1,229 @@
+"""Deterministic fault injection for the supervised forecasting stack.
+
+An always-on forecast service is only trustworthy unattended if every
+failure mode it claims to survive is *rehearsed*, deterministically, in
+CI.  This module is that rehearsal harness: a seedable `FaultInjector`
+the `ForecastEngine` consults at its supervision points, plus file-level
+corruption helpers for the checkpoint integrity tests.
+
+Faults are *declared* as `FaultSpec`s — what kind, at which engine round,
+into which slot — so a test (or the CI chaos job) can pin a failure to an
+exact scheduling point and assert the recovery bit-for-bit:
+
+* ``poison_nan`` / ``poison_inf``: overwrite elements of one ensemble
+  slot's state with NaN/Inf at a chosen round boundary (a blown-up
+  forecast / corrupt request).  Positions are drawn from the injector's
+  seeded rng, so the same seed poisons the same elements.
+* ``compile_fail``: raise `InjectedCompileError` from a chosen attempt of
+  the engine's compile fallback chain (``native`` → ``interpret`` →
+  ``reference``), forcing the chain to degrade.
+* ``device_loss``: raise `InjectedDeviceLoss` when a chosen round starts
+  — a transient backend/runtime failure the engine must retry with
+  backoff.
+
+Every fired fault is appended to ``injector.log`` (kind, round, slot) so
+tests and the robustness benchmark can assert what actually happened.
+
+Checkpoint corruption is file-level, not hook-level: `truncate_file`,
+`bitflip_file`, and `corrupt_checkpoint` damage a written checkpoint in
+place so `ckpt.restore_tree`'s manifest verification can be tested
+against real on-disk rot.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import os
+from typing import Any, Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["FaultSpec", "FaultInjector", "InjectedFault",
+           "InjectedCompileError", "InjectedDeviceLoss", "truncate_file",
+           "bitflip_file", "corrupt_checkpoint"]
+
+KINDS = ("poison_nan", "poison_inf", "compile_fail", "device_loss")
+
+
+class InjectedFault(RuntimeError):
+    """Base class of all injected failures (never raised by real code)."""
+
+
+class InjectedCompileError(InjectedFault):
+    """Simulated backend lowering/compile failure."""
+
+
+class InjectedDeviceLoss(InjectedFault):
+    """Simulated device loss / transient runtime failure mid-round."""
+
+
+@dataclasses.dataclass
+class FaultSpec:
+    """One declared fault.
+
+    `round` indexes the engine's global round counter (poison and
+    device-loss faults fire when that round runs).  `slot` picks the lane
+    slot to poison; None (or an inactive slot) falls back to a seeded
+    choice among the slots actually busy that round.  `op` restricts the
+    fault to lanes/compiles of one stencil op (None = any).  `attempt`
+    names which stage of the compile fallback chain a ``compile_fail``
+    kills (``"native"``, ``"interpret"``, ``"reference"``, or ``"all"``).
+    `once` (default) retires the spec after it fires — the transient-fault
+    model; set False for a persistent fault."""
+
+    kind: str
+    round: int = 0
+    slot: Optional[int] = None
+    field: Optional[str] = None                 # poison: field name, None=all
+    op: Optional[str] = None
+    attempt: str = "native"
+    once: bool = True
+
+    def __post_init__(self):
+        if self.kind not in KINDS:
+            raise ValueError(f"kind={self.kind!r} not one of {KINDS}")
+
+
+class FaultInjector:
+    """Seeded, deterministic fault source.  The engine calls the hooks;
+    specs decide whether they fire.  Thread-hostile by design (the engine
+    is single-threaded); same (specs, seed) => same faults."""
+
+    def __init__(self, specs: Sequence[FaultSpec] = (), seed: int = 0):
+        self.specs: List[FaultSpec] = list(specs)
+        self.seed = seed
+        self.rng = np.random.default_rng(seed)
+        self.log: List[Dict[str, Any]] = []
+        self._spent: List[FaultSpec] = []
+
+    # -- bookkeeping --------------------------------------------------------
+    def _fire(self, spec: FaultSpec, **event) -> None:
+        self.log.append({"kind": spec.kind, **event})
+        if spec.once:
+            self.specs.remove(spec)
+            self._spent.append(spec)
+
+    def fired(self, kind: Optional[str] = None) -> int:
+        return sum(1 for e in self.log if kind is None or e["kind"] == kind)
+
+    # -- engine hooks -------------------------------------------------------
+    def on_compile(self, program, attempt: str) -> None:
+        """Called before each stage of the compile fallback chain; raises
+        `InjectedCompileError` when a ``compile_fail`` spec matches."""
+        for spec in list(self.specs):
+            if spec.kind != "compile_fail":
+                continue
+            if spec.op is not None and spec.op != program.op:
+                continue
+            if spec.attempt not in ("all", attempt):
+                continue
+            self._fire(spec, op=program.op, attempt=attempt)
+            raise InjectedCompileError(
+                f"injected lowering failure: op={program.op!r} "
+                f"attempt={attempt!r}")
+
+    def on_round(self, op: str, round_index: int) -> None:
+        """Called as a lane round starts; raises `InjectedDeviceLoss` when
+        a ``device_loss`` spec matches this round."""
+        for spec in list(self.specs):
+            if spec.kind != "device_loss" or spec.round != round_index:
+                continue
+            if spec.op is not None and spec.op != op:
+                continue
+            self._fire(spec, op=op, round=round_index)
+            raise InjectedDeviceLoss(
+                f"injected device loss: op={op!r} round={round_index}")
+
+    def poison(self, batch, op: str, round_index: int,
+               active_slots: Sequence[int]):
+        """Called at the round boundary (post-step, pre-guard); returns
+        `batch` with matching poison specs applied to ONE active slot each
+        — only that slot's leaves are written, so healthy slots keep their
+        exact bits."""
+        for spec in list(self.specs):
+            if spec.kind not in ("poison_nan", "poison_inf"):
+                continue
+            if spec.round != round_index:
+                continue
+            if spec.op is not None and spec.op != op:
+                continue
+            if not active_slots:
+                continue                     # nothing to poison this round
+            slot = (spec.slot if spec.slot in active_slots
+                    else int(self.rng.choice(list(active_slots))))
+            val = np.nan if spec.kind == "poison_nan" else np.inf
+            batch = self._poison_slot(batch, slot, spec.field, val)
+            self._fire(spec, op=op, round=round_index, slot=slot)
+        return batch
+
+    def _poison_slot(self, batch, slot: int, field: Optional[str],
+                     val: float):
+        """Overwrite a seeded handful of elements of `slot` with `val`."""
+        def bad(leaf):
+            e = leaf[slot]
+            n = max(1, int(e.size) // 8)
+            idx = self.rng.choice(e.size, size=n, replace=False)
+            flat = jnp.ravel(e).at[jnp.asarray(idx)].set(
+                jnp.asarray(val, leaf.dtype))
+            return leaf.at[slot].set(jnp.reshape(flat, e.shape))
+
+        if field is None:
+            return jax.tree_util.tree_map(bad, batch)
+        out = jax.tree_util.tree_map(lambda a: a, batch)
+        out.fields = dict(out.fields)
+        out.fields[field] = bad(out.fields[field])
+        return out
+
+
+# ---------------------------------------------------------------------------
+# Checkpoint file corruption (drives ckpt's manifest verification tests)
+# ---------------------------------------------------------------------------
+
+
+def truncate_file(path: str, frac: float = 0.5) -> int:
+    """Truncate `path` to `frac` of its size (a torn write / full disk);
+    returns the new size."""
+    size = os.path.getsize(path)
+    new = max(1, int(size * frac))
+    with open(path, "r+b") as f:
+        f.truncate(new)
+    return new
+
+
+def bitflip_file(path: str, seed: int = 0, nbits: int = 1) -> List[int]:
+    """Flip `nbits` seeded-random bits of `path` in place (silent media
+    corruption); returns the byte offsets touched.  Offsets avoid the
+    head/tail of the file so an npz flip lands in archive member data
+    (detected by the manifest crc), not in the zip trailer."""
+    rng = np.random.default_rng(seed)
+    size = os.path.getsize(path)
+    lo = min(512, size // 4)
+    hi = max(lo + 1, size - min(1024, size // 4))
+    offsets = sorted(int(o) for o in
+                     rng.choice(np.arange(lo, hi),
+                                size=min(nbits, hi - lo), replace=False))
+    with open(path, "r+b") as f:
+        for off in offsets:
+            f.seek(off)
+            byte = f.read(1)[0]
+            f.seek(off)
+            f.write(bytes([byte ^ (1 << int(rng.integers(8)))]))
+    return offsets
+
+
+def corrupt_checkpoint(ckpt_dir: str, step: int, mode: str = "truncate",
+                       seed: int = 0) -> str:
+    """Damage one written checkpoint's arrays.npz in place.  `mode` is
+    ``"truncate"`` or ``"bitflip"``; returns the corrupted path."""
+    path = os.path.join(ckpt_dir, f"step_{step:08d}", "arrays.npz")
+    if not os.path.exists(path):
+        raise FileNotFoundError(path)
+    if mode == "truncate":
+        truncate_file(path)
+    elif mode == "bitflip":
+        bitflip_file(path, seed=seed, nbits=8)
+    else:
+        raise ValueError(f"mode={mode!r} must be 'truncate' or 'bitflip'")
+    return path

@@ -58,11 +58,12 @@ from repro.weather.stencil_ops import (StencilOpDef, get_stencil_op,
 VARIANTS = _sops.VARIANTS
 
 __all__ = ["StencilProgram", "DycoreProgram", "ExchangeSchedule",
-           "ExecutionPlan", "compile", "compile_dycore", "StencilOpDef",
+           "ExecutionPlan", "compile", "compile_dycore",
+           "compile_with_fallback", "reference_program", "StencilOpDef",
            "get_stencil_op", "register_stencil_op",
            "registered_stencil_ops", "VARIANTS", "plan_cache_key",
            "ensemble_slot_view", "ensemble_slot_assign",
-           "ensemble_slot_select"]
+           "ensemble_slot_select", "slot_validity"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -215,6 +216,24 @@ def ensemble_slot_select(mask, new: WeatherState,
         m = jnp.reshape(jnp.asarray(mask), (-1,) + (1,) * (n.ndim - 1))
         return jnp.where(m, n, o)
     return jax.tree_util.tree_map(sel, new, old)
+
+
+@jax.jit
+def slot_validity(state: WeatherState, limit) -> jnp.ndarray:
+    """Per-slot physics validity: a fused NaN/Inf + magnitude-bound
+    reduction over every leaf, returning a ``(E,)`` bool — True where the
+    member is entirely finite and within ``|x| <= limit``.  One cheap
+    jitted reduction per round boundary is the serving engine's guard; it
+    reads every leaf once and writes E booleans, so it cannot perturb any
+    slot's bits."""
+    def per_leaf(a):
+        axes = tuple(range(1, a.ndim))      # no reshape: stays shardable
+        finite = jnp.all(jnp.isfinite(a), axis=axes)
+        mag = jnp.max(jnp.where(jnp.isfinite(a), jnp.abs(a), 0.0),
+                      axis=axes)
+        return finite & (mag <= limit)
+    per = [per_leaf(leaf) for leaf in jax.tree_util.tree_leaves(state)]
+    return jnp.all(jnp.stack(per), axis=0)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -646,6 +665,66 @@ def compile(program: StencilProgram, mesh: Optional[Mesh] = None, *,
 
 # The historical dycore entry point: same planner, op defaults to "dycore".
 compile_dycore = compile
+
+
+def reference_program(program: StencilProgram) -> StencilProgram:
+    """`program` rebound to its op's REFERENCE lowering: the unfused
+    (oracle) variant when the op declares one, step-at-a-time rounds, no
+    wire compression — the maximally-conservative availability fallback.
+    Numerics are the same physics but NOT guaranteed bitwise-equal to the
+    fused variants (different loop structure); callers that degrade this
+    far must surface it (see `compile_with_fallback`)."""
+    opdef = get_stencil_op(program.op)
+    ref = "unfused" if "unfused" in opdef.variants else opdef.variants[0]
+    return dataclasses.replace(program, variant=ref, k_steps=1,
+                               exchange_dtype=None)
+
+
+def compile_with_fallback(program: StencilProgram,
+                          mesh: Optional[Mesh] = None, *,
+                          ax_e: Optional[str] = "pod", ax_y: str = "data",
+                          ax_x: str = "model",
+                          interpret: Optional[bool] = None,
+                          prefetch_w: Optional[bool] = None,
+                          attempt_hook=None
+                          ) -> Tuple[ExecutionPlan, Optional[str], list]:
+    """`compile` with graceful degradation: a retry chain over
+
+      1. ``native``    — the program exactly as asked (Pallas lowering,
+         `interpret` as given / auto),
+      2. ``interpret`` — the SAME plan forced through the Pallas
+         interpreter (survives backend codegen/lowering failures; on a
+         backend where auto-interpret already resolves True this is the
+         identical plan, so results stay bit-identical),
+      3. ``reference`` — `reference_program(program)`: the op's unfused
+         oracle lowering, one step per round (availability over
+         bit-identity — the last resort).
+
+    Returns ``(plan, fallback, errors)``: `fallback` is None when the
+    native attempt won, else the winning stage name; `errors` lists
+    ``(stage, repr(exc))`` for every failed attempt.  Raises the LAST
+    error only if every stage fails.  `attempt_hook(program, stage)` is
+    the fault-injection seam — `testing.faults.FaultInjector.on_compile`
+    plugs in here to rehearse lowering failures deterministically."""
+    attempts = [
+        ("native", program, {"interpret": interpret}),
+        ("interpret", program, {"interpret": True}),
+        ("reference", reference_program(program), {"interpret": True}),
+    ]
+    errors: list = []
+    for stage, prog, kw in attempts:
+        try:
+            if attempt_hook is not None:
+                attempt_hook(prog, stage)
+            plan = compile(prog, mesh=mesh, ax_e=ax_e, ax_y=ax_y, ax_x=ax_x,
+                           prefetch_w=prefetch_w, **kw)
+            return plan, (None if stage == "native" else stage), errors
+        except Exception as e:  # noqa: BLE001 — any lowering failure degrades
+            errors.append((stage, repr(e)))
+            last = e
+    raise RuntimeError(
+        f"compile fallback chain exhausted for op={program.op!r}: "
+        f"{errors}") from last
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,377 @@
+"""Fault-injection harness + supervised-engine failure paths (ISSUE 7).
+
+Every failure mode the serving stack claims to survive is rehearsed here
+deterministically: NaN/Inf slot poisoning (quarantine), injected compile
+failures (fallback chain), injected device loss (retry with backoff, lane
+failure on persistence), checkpoint file corruption (manifest
+verification), bounded-queue backpressure, per-request deadlines, and
+mismatched-mesh restore.  CI's chaos job runs this module under
+``-W error::DeprecationWarning``.
+"""
+
+import time
+import types
+
+import jax
+import numpy as np
+import pytest
+
+from repro.ckpt import checkpoint as ckpt
+from repro.ckpt.checkpoint import CheckpointCorruptError
+from repro.serve.forecast import (ForecastEngine, ForecastRequest,
+                                  QueueFullError)
+from repro.testing import faults
+from repro.testing.faults import FaultInjector, FaultSpec
+from repro.weather import fields
+from repro.weather import program as wprog
+from repro.weather.program import StencilProgram
+
+GRID = (3, 8, 8)
+PROG = StencilProgram(grid_shape=GRID, ensemble=1)
+
+
+def _state(seed, grid=GRID, dtype="float32"):
+    return fields.initial_state(jax.random.PRNGKey(seed), grid, ensemble=1,
+                                dtype=dtype)
+
+
+def _solo(prog, state, steps):
+    return wprog.compile(prog).run(state, steps)
+
+
+def _assert_bits(result, state):
+    want = _solo(result.program, state, result.steps)
+    for name in result.program.fields:
+        np.testing.assert_array_equal(np.asarray(result.state.fields[name]),
+                                      np.asarray(want.fields[name]),
+                                      err_msg=name)
+
+
+# ---------------------------------------------------------------------------
+# The harness itself
+# ---------------------------------------------------------------------------
+
+
+def test_fault_spec_validation():
+    with pytest.raises(ValueError, match="kind"):
+        FaultSpec(kind="meteor_strike")
+
+
+def test_injector_poison_is_deterministic():
+    """Same (specs, seed) => the same elements poisoned — the whole point
+    of a seedable harness."""
+    batch = fields.initial_state(jax.random.PRNGKey(0), GRID, ensemble=3)
+
+    def poisoned():
+        inj = FaultInjector([FaultSpec(kind="poison_nan", round=0)], seed=9)
+        out = inj.poison(batch, "dycore", 0, (0, 1, 2))
+        return np.asarray(out.fields["u"]), inj.log[0]["slot"]
+
+    a, slot_a = poisoned()
+    b, slot_b = poisoned()
+    assert slot_a == slot_b
+    np.testing.assert_array_equal(a, b)
+    assert np.isnan(a[slot_a]).any()
+    # other slots untouched, bitwise
+    for s in range(3):
+        if s != slot_a:
+            np.testing.assert_array_equal(a[s],
+                                          np.asarray(batch.fields["u"][s]))
+
+
+def test_injector_once_retires_spec():
+    inj = FaultInjector([FaultSpec(kind="device_loss", round=1)])
+    inj.on_round("dycore", 0)                    # wrong round: no fire
+    with pytest.raises(faults.InjectedDeviceLoss):
+        inj.on_round("dycore", 1)
+    inj.on_round("dycore", 1)                    # spec spent: no fire
+    assert inj.fired("device_loss") == 1
+
+
+# ---------------------------------------------------------------------------
+# Compile fallback chain
+# ---------------------------------------------------------------------------
+
+
+def test_compile_with_fallback_stages():
+    def fail(stages):
+        def hook(prog, stage):
+            if stage in stages:
+                raise faults.InjectedCompileError(stage)
+        return hook
+
+    plan, fb, errors = wprog.compile_with_fallback(PROG)
+    assert fb is None and errors == []
+
+    plan, fb, errors = wprog.compile_with_fallback(
+        PROG, attempt_hook=fail({"native"}))
+    assert fb == "interpret" and plan.interpret
+    assert [s for s, _ in errors] == ["native"]
+
+    plan, fb, errors = wprog.compile_with_fallback(
+        PROG, attempt_hook=fail({"native", "interpret"}))
+    assert fb == "reference"
+    assert plan.variant == "unfused" and plan.k_steps == 1
+
+    with pytest.raises(RuntimeError, match="exhausted"):
+        wprog.compile_with_fallback(
+            PROG, attempt_hook=fail({"native", "interpret", "reference"}))
+
+
+def test_reference_program_is_conservative():
+    prog = StencilProgram(grid_shape=GRID, ensemble=1, variant="kstep",
+                          k_steps=2, exchange_dtype="bfloat16")
+    ref = wprog.reference_program(prog)
+    assert ref.variant == "unfused" and ref.k_steps == 1
+    assert ref.exchange_dtype is None
+    wprog.compile(ref)                           # must be compilable
+
+
+def test_engine_forced_lowering_fallback_bit_identical():
+    """An injected native-compile failure degrades to the interpreter —
+    on CPU the identical plan — and every result stays bit-identical."""
+    inj = FaultInjector([FaultSpec(kind="compile_fail", op="dycore",
+                                   attempt="native")])
+    eng = ForecastEngine(slots=2, fault_injector=inj)
+    sts = [_state(40 + i) for i in range(3)]
+    rids = [eng.submit(ForecastRequest(program=PROG, state=s, steps=2))
+            for s in sts]
+    res = eng.drain()
+    assert eng.stats()["fallback_compiles"] == 1
+    assert eng.stats()["plan_fallbacks"] == {"dycore": "interpret"}
+    assert inj.fired("compile_fail") == 1
+    for rid, s in zip(rids, sts):
+        assert res[rid].status == "ok"
+        _assert_bits(res[rid], s)
+
+
+# ---------------------------------------------------------------------------
+# Device loss: transient retry, persistent lane failure
+# ---------------------------------------------------------------------------
+
+
+def test_transient_device_loss_retries_and_serves():
+    inj = FaultInjector([FaultSpec(kind="device_loss", round=1)])
+    eng = ForecastEngine(slots=2, retry_backoff_s=0.0, fault_injector=inj)
+    sts = [_state(50 + i) for i in range(2)]
+    rids = [eng.submit(ForecastRequest(program=PROG, state=s, steps=3))
+            for s in sts]
+    res = eng.drain()
+    assert eng.stats()["round_retries"] == 1
+    assert eng.stats()["lane_failures"] == 0
+    for rid, s in zip(rids, sts):
+        assert res[rid].status == "ok"
+        _assert_bits(res[rid], s)
+
+
+def test_persistent_device_loss_fails_lane_not_engine():
+    """A fault that survives every retry fails ONLY the lane's in-flight
+    requests (each with a round_failure diagnosis) — the engine itself
+    keeps draining and stays usable."""
+    inj = FaultInjector([FaultSpec(kind="device_loss", round=1, once=False)])
+    eng = ForecastEngine(slots=2, max_round_retries=1, retry_backoff_s=0.0,
+                         fault_injector=inj)
+    sts = [_state(60 + i) for i in range(2)]
+    rids = [eng.submit(ForecastRequest(program=PROG, state=s, steps=3))
+            for s in sts]
+    res = eng.drain()
+    assert not eng.has_work()
+    assert eng.stats()["lane_failures"] == 1
+    for rid in rids:
+        assert res[rid].status == "failed"
+        assert res[rid].diagnosis["reason"] == "round_failure"
+        assert "InjectedDeviceLoss" in res[rid].diagnosis["error"]
+    # the engine is still alive once the fault clears ("device replaced"):
+    inj.specs.clear()
+    s = _state(70)
+    rid = eng.submit(ForecastRequest(program=PROG, state=s, steps=2))
+    r = eng.drain()[rid]
+    assert r.status == "ok"
+    _assert_bits(r, s)
+
+
+# ---------------------------------------------------------------------------
+# Guard + quarantine
+# ---------------------------------------------------------------------------
+
+
+def test_poisoned_field_diagnosis_names_the_leaf():
+    inj = FaultInjector([FaultSpec(kind="poison_inf", round=0, slot=0,
+                                   field="u")])
+    eng = ForecastEngine(slots=1, fault_injector=inj)
+    s = _state(80)
+    rid = eng.submit(ForecastRequest(program=PROG, state=s, steps=4))
+    r = eng.drain()[rid]
+    assert r.status == "failed"
+    d = r.diagnosis
+    assert d["reason"] == "validity_guard"
+    assert set(d["bad_leaves"]) == {"fields/u"}
+    assert d["bad_leaves"]["fields/u"]["inf"] > 0
+    assert d["first_bad"] == "fields/u"
+    assert r.steps_done < r.steps
+    assert eng.stats()["quarantined"] == 1
+
+
+def test_guard_bounds_catch_nonfinite_free_blowup():
+    """The guard is a physics bound, not just isfinite: huge-but-finite
+    values quarantine too."""
+    eng = ForecastEngine(slots=1, guard_limit=10.0)   # tight physics bound
+    s = _state(81)
+    big = jax.tree_util.tree_map(lambda a: a * 1e3, s)
+    rid = eng.submit(ForecastRequest(program=PROG, state=big, steps=2))
+    r = eng.drain()[rid]
+    assert r.status == "failed"
+    assert r.diagnosis["reason"] == "validity_guard"
+    bad = r.diagnosis["bad_leaves"]
+    assert any(v["out_of_bounds"] > 0 for v in bad.values()), bad
+
+
+def test_guard_off_returns_poison_as_ok():
+    """guard=False is the unsupervised engine: poison flows through to the
+    result (status 'ok', NaNs and all) — documents what the guard buys."""
+    inj = FaultInjector([FaultSpec(kind="poison_nan", round=0, slot=0)])
+    eng = ForecastEngine(slots=1, guard=False, fault_injector=inj)
+    s = _state(82)
+    rid = eng.submit(ForecastRequest(program=PROG, state=s, steps=2))
+    r = eng.drain()[rid]
+    assert r.status == "ok"
+    assert any(np.isnan(np.asarray(a)).any()
+               for a in jax.tree_util.tree_leaves(r.state))
+
+
+# ---------------------------------------------------------------------------
+# Backpressure + deadlines
+# ---------------------------------------------------------------------------
+
+
+def test_bounded_queue_backpressure():
+    eng = ForecastEngine(slots=1, max_queue=2)
+    for i in range(2):
+        eng.submit(ForecastRequest(program=PROG, state=_state(90 + i),
+                                   steps=1))
+    with pytest.raises(QueueFullError, match="queue is full"):
+        eng.submit(ForecastRequest(program=PROG, state=_state(93), steps=1))
+    assert eng.stats()["rejected"] == 1
+    eng.drain()                                  # queue drains; space again
+    eng.submit(ForecastRequest(program=PROG, state=_state(94), steps=1))
+    with pytest.raises(ValueError, match="max_queue"):
+        ForecastEngine(slots=1, max_queue=0)
+
+
+def test_deadline_expires_queued_and_in_flight():
+    eng = ForecastEngine(slots=1)
+    s0, s1 = _state(95), _state(96)
+    # r0's budget outlives admission (sub-ms) but not a 1000-step run
+    r0 = eng.submit(ForecastRequest(program=PROG, state=s0, steps=1000,
+                                    deadline_s=0.2))
+    r1 = eng.submit(ForecastRequest(program=PROG, state=s1, steps=1,
+                                    deadline_s=1e-6))
+    eng.pump()             # admits r0; r1 sits behind it in the queue
+    time.sleep(0.25)       # r0's wall-clock budget runs out mid-flight
+    res = eng.drain()
+    assert res[r0].status == "expired"
+    assert res[r0].diagnosis["where"] == "in_flight"
+    assert 0 < res[r0].steps_done < res[r0].steps
+    # r1 sat behind it in the queue and expires there
+    assert res[r1].status == "expired"
+    assert res[r1].diagnosis["where"] == "queue"
+    assert eng.stats()["deadline_expired"] == 2
+    with pytest.raises(ValueError, match="deadline_s"):
+        ForecastRequest(program=PROG, state=s0, steps=1,
+                        deadline_s=-1.0).validate()
+
+
+# ---------------------------------------------------------------------------
+# Checkpoint integrity (manifest + CheckpointCorruptError)
+# ---------------------------------------------------------------------------
+
+
+def _tree():
+    return {"a": np.arange(512, dtype=np.float32).reshape(4, 128),
+            "b": np.full((64,), 2.5, np.float32)}
+
+
+def test_checkpoint_manifest_roundtrip(tmp_path):
+    d = str(tmp_path)
+    ckpt.save_tree(d, 0, _tree(), extra={"k": 1})
+    meta = ckpt.read_meta(d, 0)
+    assert set(meta["manifest"]) == {"a", "b"}
+    for ent in meta["manifest"].values():
+        assert {"crc32", "nbytes", "shape", "dtype"} <= set(ent)
+    tree, extra = ckpt.restore_tree(d, 0, _tree())
+    assert extra == {"k": 1}
+    np.testing.assert_array_equal(np.asarray(tree["a"]), _tree()["a"])
+
+
+@pytest.mark.parametrize("mode", ["truncate", "bitflip"])
+def test_corrupt_checkpoint_raises_named_error(tmp_path, mode):
+    d = str(tmp_path)
+    ckpt.save_tree(d, 0, _tree(), extra=None)
+    faults.corrupt_checkpoint(d, 0, mode, seed=3)
+    with pytest.raises(CheckpointCorruptError) as ei:
+        ckpt.restore_tree(d, 0, _tree())
+    msg = str(ei.value)
+    # the error names WHAT is bad: a specific entry or the archive itself
+    assert ("entry" in msg and ("'a'" in msg or "'b'" in msg)) \
+        or "arrays.npz" in msg, msg
+
+
+def test_corrupt_engine_checkpoint_fails_loud(tmp_path):
+    """End-to-end through the engine: a corrupted engine checkpoint must
+    raise CheckpointCorruptError from restore(), not resume on garbage."""
+    d = str(tmp_path)
+    eng = ForecastEngine(slots=1, ckpt_dir=d)
+    eng.submit(ForecastRequest(program=PROG, state=_state(97), steps=3))
+    eng.pump()
+    step = eng.checkpoint()
+    faults.corrupt_checkpoint(d, step, "bitflip", seed=5)
+    with pytest.raises(CheckpointCorruptError):
+        ForecastEngine.restore(d, step)
+
+
+def test_legacy_checkpoint_without_manifest_still_loads(tmp_path):
+    """Pre-manifest checkpoints (no integrity sidecar) load unverified —
+    upgrading must not strand old snapshots."""
+    import json, os
+    d = str(tmp_path)
+    ckpt.save_tree(d, 0, _tree(), extra={"old": True})
+    meta_path = os.path.join(d, "step_00000000", "meta.json")
+    with open(meta_path) as f:
+        meta = json.load(f)
+    del meta["manifest"]
+    with open(meta_path, "w") as f:
+        json.dump(meta, f)
+    tree, extra = ckpt.restore_tree(d, 0, _tree())
+    assert extra == {"old": True}
+
+
+# ---------------------------------------------------------------------------
+# Restore safety
+# ---------------------------------------------------------------------------
+
+
+def test_restore_mismatched_device_count_is_actionable(tmp_path):
+    d = str(tmp_path)
+    eng = ForecastEngine(slots=1, ckpt_dir=d)
+    eng.submit(ForecastRequest(program=PROG, state=_state(98), steps=2))
+    eng.pump()
+    step = eng.checkpoint()
+    fake_mesh = types.SimpleNamespace(devices=np.empty(4))
+    with pytest.raises(ValueError, match="single-chip engine.*4-device"):
+        ForecastEngine.restore(d, step, mesh=fake_mesh)
+
+
+def test_restore_preserves_supervision_config(tmp_path):
+    d = str(tmp_path)
+    eng = ForecastEngine(slots=1, ckpt_dir=d, max_queue=7, guard_limit=123.0,
+                         ckpt_every_rounds=5, max_round_retries=4,
+                         retry_backoff_s=0.01)
+    eng.submit(ForecastRequest(program=PROG, state=_state(99), steps=2))
+    eng.pump()
+    step = eng.checkpoint()
+    eng2 = ForecastEngine.restore(d, step)
+    assert eng2.max_queue == 7 and eng2.guard_limit == 123.0
+    assert eng2.ckpt_every_rounds == 5 and eng2.max_round_retries == 4
+    assert eng2.retry_backoff_s == 0.01 and eng2.guard
+    res = eng2.drain()
+    assert all(r.status == "ok" for r in res.values())

@@ -20,6 +20,7 @@ import pytest
 
 from repro.serve.forecast import (ForecastEngine, ForecastRequest,
                                   ForecastResult)
+from repro.testing.faults import FaultInjector, FaultSpec
 from repro.weather import fields
 from repro.weather import program as wprog
 from repro.weather.program import StencilProgram, plan_cache_key
@@ -367,6 +368,153 @@ def test_checkpoint_restart_matches_uninterrupted(tmp_path):
                 got[f"{rid}/{name}"],
                 np.asarray(res.state.fields[name], np.float32),
                 err_msg=f"rid={rid} field={name}")
+
+
+# ---------------------------------------------------------------------------
+# Supervision (ISSUE 7): poisoned-slot isolation, crash/restore sweep,
+# and the combined acceptance scenario
+# ---------------------------------------------------------------------------
+
+
+def _check_poison_isolation(mix, poison_round, seed):
+    """Serve `mix` with a NaN poison injected at `poison_round` into a
+    seeded-random busy slot: AT MOST the poisoned request fails (with a
+    validity-guard diagnosis) and every other result is bitwise equal to
+    its solo run — the quarantine never perturbs a healthy slot."""
+    inj = FaultInjector([FaultSpec(kind="poison_nan", round=poison_round)],
+                        seed=seed)
+    eng = ForecastEngine(slots=2, fault_injector=inj)
+    reqs = []
+    for s, (grid_i, op_i, dtype_i, steps, pinned) in enumerate(mix):
+        req = _mk_request(200 + 17 * seed + s, grid_i, op_i, dtype_i,
+                          steps, pinned)
+        state = req.state
+        rid = eng.submit(req)
+        reqs.append((rid, state))
+    results = eng.drain()
+    failed = [r for r in results.values() if r.status == "failed"]
+    assert len(failed) == inj.fired("poison_nan") <= 1
+    assert eng.stats()["quarantined"] == len(failed)
+    for r in failed:
+        assert r.diagnosis["reason"] == "validity_guard"
+        assert r.diagnosis["bad_leaves"]
+    for rid, state in reqs:
+        if results[rid].status == "ok":
+            _assert_bit_identical(results[rid], state)
+
+
+_POISON_CASE = st.tuples(
+    st.integers(0, 1), st.integers(0, 2), st.integers(0, 1),
+    st.integers(1, 4), st.booleans()) if HAVE_HYPOTHESIS else None
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=4, deadline=None, derandomize=True)
+    @given(st.lists(_POISON_CASE, min_size=2, max_size=4),
+           st.integers(0, 1), st.integers(0, 5))
+    def test_poisoned_slot_isolation_property(mix, poison_round, seed):
+        _check_poison_isolation(mix, poison_round, seed)
+else:
+    def test_poisoned_slot_isolation_property():
+        """Seeded fallback: same property over deterministic mixes."""
+        rng = np.random.default_rng(7)
+        for case in range(3):
+            n = int(rng.integers(2, 5))
+            mix = [(int(rng.integers(0, 2)), int(rng.integers(0, 3)),
+                    int(rng.integers(0, 2)), int(rng.integers(1, 5)),
+                    bool(rng.integers(0, 2))) for _ in range(n)]
+            _check_poison_isolation(mix, int(rng.integers(0, 2)), case)
+
+
+def test_crash_restore_at_every_round_boundary(tmp_path):
+    """Kill-at-every-round-boundary sweep: run a workload under the
+    watchdog (`ckpt_every_rounds=1`, keep everything), then for EVERY
+    saved checkpoint simulate a crash there — restore, drain — and assert
+    the full result set is bit-identical to the uninterrupted run."""
+    grid = (3, 8, 8)
+    prog = StencilProgram(grid_shape=grid, ensemble=1)
+
+    def submit_all(eng):
+        rids = []
+        for i, steps in enumerate([3, 1, 2, 4]):
+            st_ = fields.initial_state(jax.random.PRNGKey(60 + i), grid,
+                                       ensemble=1)
+            rids.append(eng.submit(ForecastRequest(program=prog, state=st_,
+                                                   steps=steps)))
+        return rids
+
+    ref_eng = ForecastEngine(slots=2)
+    rids = submit_all(ref_eng)
+    want = ref_eng.drain()
+
+    d = str(tmp_path)
+    wd_eng = ForecastEngine(slots=2, ckpt_dir=d, ckpt_every_rounds=1,
+                            ckpt_keep=0)
+    assert submit_all(wd_eng) == rids
+    wd_eng.drain()
+    saved = sorted(int(p.split("_")[1]) for p in os.listdir(d)
+                   if p.startswith("step_"))
+    assert len(saved) == wd_eng.stats()["watchdog_checkpoints"] >= 3
+
+    for step in saved:
+        eng = ForecastEngine.restore(d, step)
+        # the resumed engine inherits the watchdog config; mute it so the
+        # sweep's remaining checkpoints aren't overwritten/GC'd mid-sweep
+        eng.ckpt_every_rounds = None
+        res = eng.drain()
+        assert sorted(res) == sorted(rids), f"crash at checkpoint {step}"
+        for rid in rids:
+            for name in prog.fields:
+                np.testing.assert_array_equal(
+                    np.asarray(res[rid].state.fields[name]),
+                    np.asarray(want[rid].state.fields[name]),
+                    err_msg=f"crash at checkpoint {step}, rid={rid}, "
+                            f"field={name}")
+
+
+def test_supervised_acceptance_combo(tmp_path):
+    """The ISSUE 7 acceptance scenario in one run: a poisoned request, an
+    injected mid-round device loss, a forced lowering fallback, AND a hard
+    crash resumed from the watchdog's checkpoint — every healthy request
+    bit-identical to its solo run, the poisoned request `failed` with a
+    diagnosis, and the engine drains the full queue without intervention."""
+    grid = (3, 8, 8)
+    prog = StencilProgram(grid_shape=grid, ensemble=1)
+    inj = FaultInjector([
+        FaultSpec(kind="compile_fail", op="dycore", attempt="native"),
+        FaultSpec(kind="poison_nan", round=1),
+        FaultSpec(kind="device_loss", round=2),
+    ], seed=3)
+    eng = ForecastEngine(slots=2, ckpt_dir=str(tmp_path),
+                         ckpt_every_rounds=1, ckpt_keep=0,
+                         retry_backoff_s=0.0, fault_injector=inj)
+    sts = [fields.initial_state(jax.random.PRNGKey(300 + i), grid,
+                                ensemble=1) for i in range(4)]
+    rids = [eng.submit(ForecastRequest(program=prog, state=s, steps=5))
+            for s in sts]
+    while eng.stats()["rounds"] < 3 and eng.has_work():
+        eng.pump()
+    assert inj.fired() == 3, inj.log   # all three faults hit pre-crash
+
+    # Hard crash: abandon the warm engine, resume from the watchdog's
+    # last auto-checkpoint in a fresh one (no injector — faults are over).
+    eng2 = ForecastEngine.restore(str(tmp_path))
+    res = eng2.drain()
+    assert not eng2.has_work()
+    assert sorted(res) == sorted(rids)
+
+    failed = [rid for rid in rids if res[rid].status == "failed"]
+    assert len(failed) == 1
+    diag = res[failed[0]].diagnosis
+    assert diag["reason"] == "validity_guard" and diag["bad_leaves"]
+    for rid, s in zip(rids, sts):
+        if rid != failed[0]:
+            assert res[rid].status == "ok"
+            _assert_bit_identical(res[rid], s)
+    st2 = eng2.stats()
+    assert st2["quarantined"] == 1
+    assert st2["fallback_compiles"] >= 1
+    assert st2["round_retries"] >= 1
+    assert st2["watchdog_checkpoints"] >= 3
 
 
 def test_checkpoint_restore_in_process(tmp_path):
