@@ -22,14 +22,22 @@ Plus the supervision overhead and recovery numbers (ISSUE 7):
 
 Also writes BENCH_serve.json: the latency distribution, per-request
 steps/s, batch occupancy, plan-cache hit statistics, the program catalog,
-the load spec, and a `robustness` block (guard overhead + a deterministic
+the load spec, a `robustness` block (guard overhead + a deterministic
 chaos segment: one poisoned request, one device loss, one forced lowering
-fallback) — everything the CI smoke job asserts on and cross-PR perf
-diffs read.  BENCH_SMOKE=1 shrinks the request count and slot pool.
+fallback), and a `failover` block (ISSUE 8: a kill-a-device run on a
+forced-4-device subprocess — recovery rounds, requests preserved across
+the mesh rebuild, reshard wall time, and whether every preserved request
+stayed bit-identical to a solo run on the original mesh) — everything
+the CI smoke job asserts on and cross-PR perf diffs read.  BENCH_SMOKE=1
+shrinks the request count and slot pool.
 """
 
 from __future__ import annotations
 
+import json
+import os
+import subprocess
+import sys
 import time
 
 import jax
@@ -136,6 +144,80 @@ def _chaos_segment(slots: int) -> dict:
             "faults_fired": inj.fired()}
 
 
+_FAILOVER_SNIPPET = r"""
+import json, time
+import numpy as np, jax
+from repro.serve.forecast import ForecastEngine, ForecastRequest
+from repro.testing.faults import FaultInjector, FaultSpec
+from repro.weather import domain, fields
+from repro.weather import program as wprog
+from repro.weather.program import StencilProgram
+
+kw = ({"axis_types": (jax.sharding.AxisType.Auto,) * 2}
+      if hasattr(jax.sharding, "AxisType") else {})
+mesh = jax.make_mesh((2, 2), ("data", "model"), **kw)
+grid = (4, 16, 16)
+prog = StencilProgram(grid_shape=grid, ensemble=1)
+states = [fields.initial_state(jax.random.PRNGKey(s), grid, ensemble=1)
+          for s in (0, 1, 2)]
+steps = (5, 3, 4)
+solo = wprog.compile(prog, mesh=mesh)
+refs = [solo.run(domain.shard_state(s, mesh, solo.state_spec), n)
+        for s, n in zip(states, steps)]
+
+inj = FaultInjector([FaultSpec(kind="device_loss", round=1, device=3,
+                               once=False)])
+eng = ForecastEngine(slots=2, mesh=mesh, fault_injector=inj,
+                     max_round_retries=1, retry_backoff_s=0.01)
+t0 = time.perf_counter()
+rids = [eng.submit(ForecastRequest(program=prog, state=s, steps=n))
+        for s, n in zip(states, steps)]
+res = eng.drain()
+wall = time.perf_counter() - t0
+st = eng.stats()
+bitwise = all(
+    res[rid].status == "ok"
+    and all(np.array_equal(np.asarray(res[rid].state.fields[n]),
+                           np.asarray(ref.fields[n]))
+            for n in prog.fields)
+    for rid, ref in zip(rids, refs))
+fo = st["failovers"][0] if st["failovers"] else {}
+print("FAILOVER_JSON " + json.dumps({
+    "mesh_failovers": st["mesh_failovers"],
+    "recovery_rounds": st["recovery_rounds"],
+    "requests_preserved": st["requests_preserved"],
+    "lane_failures": st["lane_failures"],
+    "reshard_ms": fo.get("reshard_ms"),
+    "lost_device": fo.get("lost_device"),
+    "from_shape": fo.get("from_shape"),
+    "to_shape": fo.get("to_shape"),
+    "drain_wall_s": wall,
+    "all_ok": all(res[r].status == "ok" for r in rids),
+    "bitwise_vs_original_mesh": bool(bitwise),
+}))
+"""
+
+
+def _failover_segment() -> dict:
+    """Kill-a-device chaos on a forced-4-device subprocess (the main
+    bench process pins a single CPU device, so the mesh run needs its own
+    interpreter): device 3 dies persistently at round 1, the engine
+    rebuilds 2x2 -> 2x1 and preserves every in-flight request.  Reports
+    the recovery accounting BENCH_serve.json's `failover` block carries
+    and CI asserts on."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    env["JAX_PLATFORMS"] = "cpu"
+    env["PYTHONPATH"] = "src"
+    r = subprocess.run([sys.executable, "-c", _FAILOVER_SNIPPET], env=env,
+                       capture_output=True, text=True, timeout=600)
+    for line in r.stdout.splitlines():
+        if line.startswith("FAILOVER_JSON "):
+            return json.loads(line[len("FAILOVER_JSON "):])
+    raise RuntimeError(f"failover segment produced no report: "
+                       f"{r.stderr[-2000:]}")
+
+
 def run() -> None:
     smoke = smoke_mode()
     slots = 2 if smoke else 4
@@ -179,12 +261,16 @@ def run() -> None:
 
     guard = _guard_overhead(smoke)
     chaos = _chaos_segment(slots)
+    failover = _failover_segment()
     emit("serve_forecast/guard_overhead", guard["guard_overhead_frac"],
          f"guard {guard['guard_us']:.0f}us / round "
          f"{guard['round_us']:.0f}us on {tuple(guard['grid'])}")
     emit("serve_forecast/recovery_rounds", chaos["recovery_rounds"],
          f"{chaos['faults_fired']} faults, "
          f"{chaos['quarantined']} quarantined")
+    emit("serve_forecast/failover_reshard_ms", failover["reshard_ms"],
+         f"{failover['from_shape']}->{failover['to_shape']}, "
+         f"{failover['requests_preserved']} requests preserved")
 
     write_json("BENCH_serve.json", {
         "slots": slots,
@@ -199,6 +285,7 @@ def run() -> None:
         "occupancy": stats["occupancy"],
         "plan_cache": cache,
         "robustness": {**guard, **chaos},
+        "failover": failover,
         "programs": [p.to_json() for p in _CATALOG],
         "load": {"model": "open-loop poisson", "seed": 42,
                  "mean_interarrival_s": mean_interarrival_s,

@@ -1,7 +1,10 @@
 """Checkpointing: atomic, keep-N, async save; elastic restore.
 
 Layout: <dir>/step_<n>/arrays.npz + meta.json, written to a tmp dir and
-renamed (atomic on POSIX).  Arrays are saved *unsharded-logical* (gathered),
+swapped in by rename (atomic on POSIX; the previous step dir is renamed
+aside, never rmtree'd first, so a crash mid-swap always leaves at least
+one complete checkpoint — see `_swap`/`_recover`).  Arrays are saved
+*unsharded-logical* (gathered),
 so a checkpoint written on one mesh restores onto any other mesh — the
 elastic-scaling path: restore() applies the *current* mesh's shardings.
 """
@@ -10,6 +13,7 @@ from __future__ import annotations
 
 import json
 import os
+import re
 import shutil
 import threading
 import zlib
@@ -95,6 +99,16 @@ def _load_verified(base: str) -> Tuple[dict, dict]:
                         raise CheckpointCorruptError(
                             f"checkpoint {base!r}: entry {k!r} is not in "
                             f"the manifest (foreign or stale array)")
+                    if (not isinstance(want, dict) or "crc32" not in want
+                            or "nbytes" not in want):
+                        raise CheckpointCorruptError(
+                            f"checkpoint {base!r}: manifest entry for {k!r} "
+                            f"is missing required fields (need crc32 + "
+                            f"nbytes, have "
+                            f"{sorted(want) if isinstance(want, dict) else type(want).__name__}) "
+                            f"— written by an incompatible or corrupted "
+                            f"writer; re-save the checkpoint or restore an "
+                            f"older step")
                     got_crc = zlib.crc32(np.ascontiguousarray(arr).tobytes())
                     if (got_crc != want["crc32"]
                             or int(arr.nbytes) != want["nbytes"]):
@@ -138,6 +152,45 @@ def _unflatten(template, flat: dict):
     return jax.tree_util.tree_map_with_path(one, template)
 
 
+def _swap(tmp: str, final: str) -> None:
+    """Promote `tmp` to `final` WITHOUT a window where neither exists.
+
+    The naive `rmtree(final); rename(tmp, final)` loses BOTH the previous
+    and the new checkpoint if the process dies between the two calls.
+    Instead the previous `final` is renamed aside (rename is atomic on
+    POSIX, rmtree is not), the tmp dir takes its place, and only then is
+    the old data deleted — a crash at any point leaves at least one
+    complete checkpoint on disk (`final`, `final + ".old"`, or both), and
+    `_recover` reinstates an orphaned `.old` the next time the directory
+    is listed."""
+    old = final + ".old"
+    if os.path.exists(old):
+        shutil.rmtree(old)
+    if os.path.exists(final):
+        os.rename(final, old)
+    os.rename(tmp, final)
+    shutil.rmtree(old, ignore_errors=True)
+
+
+def _recover(ckpt_dir: str) -> None:
+    """Sweep crash leftovers: a `step_*.old` whose `step_*` is missing or
+    incomplete is a swap that died mid-rename — reinstate it; one whose
+    final is complete is a swap that died pre-delete — drop it.  Stray
+    `.tmp` dirs are never touched (they may belong to an in-flight
+    writer and are ignored by `all_steps` anyway)."""
+    for name in os.listdir(ckpt_dir):
+        if not name.endswith(".old") or not _STEP_RE.match(name[:-4]):
+            continue
+        old = os.path.join(ckpt_dir, name)
+        final = old[:-4]
+        if os.path.exists(os.path.join(final, "meta.json")):
+            shutil.rmtree(old, ignore_errors=True)
+        elif os.path.exists(os.path.join(old, "meta.json")):
+            if os.path.exists(final):      # incomplete final: lose it
+                shutil.rmtree(final, ignore_errors=True)
+            os.rename(old, final)
+
+
 def save(ckpt_dir: str, step: int, params, opt_state, keep: int = 3):
     os.makedirs(ckpt_dir, exist_ok=True)
     final = os.path.join(ckpt_dir, f"step_{step:08d}")
@@ -152,9 +205,7 @@ def save(ckpt_dir: str, step: int, params, opt_state, keep: int = 3):
     with open(os.path.join(tmp, "meta.json"), "w") as f:
         json.dump({"step": step, "n_arrays": len(arrays),
                    "dtypes": dtypes, "manifest": _manifest(packed)}, f)
-    if os.path.exists(final):
-        shutil.rmtree(final)
-    os.rename(tmp, final)
+    _swap(tmp, final)
     _gc(ckpt_dir, keep)
 
 
@@ -165,15 +216,25 @@ def _gc(ckpt_dir: str, keep: int):
                       ignore_errors=True)
 
 
+_STEP_RE = re.compile(r"^step_(\d+)$")
+
+
 def all_steps(ckpt_dir: str):
+    """Steps with a COMPLETE checkpoint dir.  Strict `step_<digits>`
+    matching: stray `step_*.tmp` dirs from a mid-save crash, `.old` dirs
+    from a mid-swap crash, and foreign `step_*` junk are all ignored
+    rather than crashing the int() parse (orphaned `.old` dirs are first
+    reinstated by the crash-recovery sweep)."""
     if not os.path.isdir(ckpt_dir):
         return []
+    _recover(ckpt_dir)
     out = []
     for name in os.listdir(ckpt_dir):
-        if name.startswith("step_") and not name.endswith(".tmp"):
+        m = _STEP_RE.match(name)
+        if m is not None:
             meta = os.path.join(ckpt_dir, name, "meta.json")
             if os.path.exists(meta):       # complete checkpoints only
-                out.append(int(name[5:]))
+                out.append(int(m.group(1)))
     return sorted(out)                     # os.listdir order is fs-dependent
 
 
@@ -228,9 +289,7 @@ def save_tree(ckpt_dir: str, step: int, tree, extra: Optional[dict] = None,
     with open(os.path.join(tmp, "meta.json"), "w") as f:
         json.dump({"step": step, "n_arrays": len(arrays), "dtypes": dtypes,
                    "manifest": _manifest(packed), "extra": extra}, f)
-    if os.path.exists(final):
-        shutil.rmtree(final)
-    os.rename(tmp, final)
+    _swap(tmp, final)
     _gc(ckpt_dir, keep)
 
 
@@ -251,10 +310,27 @@ def restore_tree(ckpt_dir: str, step: int, template
 
 def read_meta(ckpt_dir: str, step: int) -> dict:
     """The meta.json of one checkpoint (a `save_tree` restore needs the
-    `extra` sidecar BEFORE it can build the template)."""
-    with open(os.path.join(ckpt_dir, f"step_{step:08d}",
-                           "meta.json")) as f:
-        return json.load(f)
+    `extra` sidecar BEFORE it can build the template).  A missing step
+    dir raises FileNotFoundError; a present-but-rotten meta.json (torn
+    write, truncation, non-dict content) raises `CheckpointCorruptError`
+    naming the file, so callers can fall back to an older step instead of
+    dying on a raw json/KeyError."""
+    path = os.path.join(ckpt_dir, f"step_{step:08d}", "meta.json")
+    if not os.path.exists(path):
+        raise FileNotFoundError(path)
+    try:
+        with open(path) as f:
+            meta = json.load(f)
+    except (OSError, ValueError) as e:
+        raise CheckpointCorruptError(
+            f"checkpoint meta {path!r} is unreadable ({e}) — the "
+            f"checkpoint was torn mid-write or corrupted on disk; restore "
+            f"an older step") from e
+    if not isinstance(meta, dict):
+        raise CheckpointCorruptError(
+            f"checkpoint meta {path!r} is not a JSON object "
+            f"(got {type(meta).__name__}) — foreign or corrupt file")
+    return meta
 
 
 class AsyncSaver:
@@ -286,9 +362,7 @@ class AsyncSaver:
                 json.dump({"step": step, "n_arrays": len(arrays),
                            "dtypes": dtypes,
                            "manifest": _manifest(packed)}, f)
-            if os.path.exists(final):
-                shutil.rmtree(final)
-            os.rename(tmp, final)
+            _swap(tmp, final)
             _gc(self.ckpt_dir, self.keep)
 
         os.makedirs(self.ckpt_dir, exist_ok=True)

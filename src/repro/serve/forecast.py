@@ -40,12 +40,20 @@ over the plan API (`weather/program.py`):
   scatter donates the old batch buffer on backends that support donation.
   Retirement reads back exactly one slot.
 
-* **Warm restarts.**  `checkpoint()` persists the whole engine — batched
-  in-flight state, queue, finished results, per-request bookkeeping —
-  through `ckpt.save_tree`; `ForecastEngine.restore()` resumes mid-
-  forecast in a fresh process: in-flight requests continue from their
-  checkpointed step (no respin to step 0), and the plan cache rebuilds
-  lazily from the persisted program keys.
+* **Warm restarts, on ANY mesh.**  `checkpoint()` persists the whole
+  engine — batched in-flight state (gathered unsharded-logical), queue,
+  finished results, per-request bookkeeping, and each lane's RESOLVED
+  round strategy — through `ckpt.save_tree`; `ForecastEngine.restore()`
+  resumes mid-forecast in a fresh process on whatever mesh it is given:
+  a checkpoint written single-chip restores onto 4 devices and vice
+  versa (lane batches reshard through the new plan's `state_spec`, plans
+  recompile through the plan cache — still compile-once per mesh shape).
+  The persisted (variant, k_steps) pin keeps every in-flight request's
+  canonical round sequence intact across the transition; see
+  docs/robustness.md for the mesh-compatibility matrix of which
+  transitions additionally preserve exact bits.  When the newest
+  checkpoint is corrupt, restore-from-latest falls back to the previous
+  valid one instead of dying.
 
 * **Supervised, safe to run unattended.**  One shared batch means one
   poisoned request could take down every co-scheduled forecast — so the
@@ -57,6 +65,28 @@ over the plan API (`weather/program.py`):
     with a per-field diagnosis, the slot is re-zeroed (zeros are a
     stencil fixed point) and backfills from the queue — while every
     healthy slot keeps its exact bits (the guard only reads).
+  - *Fingerprint guards*: the same fused pass (`program.slot_guard`)
+    digests every slot's exact bits into a sharding-invariant uint32.
+    Slots that did NOT advance a round — rolled-back and idle slots —
+    must keep their digest bit-for-bit; a mismatch is cross-device/shard
+    divergence (a corrupted halo wire buffer, silent per-shard rot) that
+    NaN/magnitude checks can never see, caught at the round boundary
+    where it occurred.  Divergent in-flight slots quarantine with a
+    `fingerprint_divergence` diagnosis; divergent idle slots are
+    scrubbed.
+  - *Mesh failover*: on a persistent device loss, instead of failing the
+    lane the engine rebuilds a mesh from the surviving devices
+    (`domain.failover_meshes`, preferring shapes that keep every
+    sharded axis sharded — the bitwise-safe transitions), recompiles the
+    plans (pinned round depth), reshards every lane's pre-round state,
+    and RERUNS the interrupted round — every in-flight request resumes
+    from the last round boundary; `stats()` records `mesh_failovers`,
+    `recovery_rounds`, `requests_preserved`, and a per-failover detail
+    list.
+  - *Round deadline watchdog*: `round_deadline_s` bounds each round
+    attempt's wall clock; a straggling/hung collective counts as a
+    failed attempt and goes through the same retry/degrade/failover
+    escalation instead of wedging the engine.
   - *Graceful degradation*: plan compilation goes through
     `program.compile_with_fallback` (native → interpret → reference
     lowering); a failed round retries with exponential backoff, then
@@ -94,7 +124,7 @@ from repro.weather import program as _wprog
 from repro.weather.fields import WeatherState
 
 __all__ = ["ForecastRequest", "ForecastResult", "ForecastEngine",
-           "QueueFullError", "STATUSES"]
+           "QueueFullError", "RoundDeadlineError", "STATUSES"]
 
 # Result statuses (see docs/serving.md for the full table):
 #   ok       — served; state is bit-identical to the solo run
@@ -108,6 +138,13 @@ class QueueFullError(RuntimeError):
     """`submit()` refused a request: the bounded queue is full.  This is
     explicit backpressure — retry later or raise `max_queue`; silently
     buffering unbounded work is how a service dies of memory instead."""
+
+
+class RoundDeadlineError(RuntimeError):
+    """A round attempt exceeded `round_deadline_s` — a straggling or hung
+    collective.  Raised inside the supervised retry scope so it escalates
+    through the same retry → degrade → failover ladder as any other round
+    failure instead of wedging the engine."""
 
 
 @dataclasses.dataclass
@@ -189,6 +226,11 @@ class _Lane:
     key: _wprog.StencilProgram                  # canonical, ensemble=slots
     batch: WeatherState                         # (slots, nz, ny, nx) leaves
     slots: List[Optional[_Slot]]
+    # Per-slot content digests recorded at round boundaries (slot index ->
+    # uint32 as int).  Sharding-invariant, so they survive a failover
+    # reshard and keep guarding across it.  Entries are dropped whenever a
+    # slot's bits legitimately get new content (admit, scrub).
+    fps: Dict[int, int] = dataclasses.field(default_factory=dict)
 
 
 @dataclasses.dataclass
@@ -214,7 +256,8 @@ class ForecastEngine:
                  guard_limit: float = 1e6,
                  ckpt_every_rounds: Optional[int] = None,
                  max_round_retries: int = 2, retry_backoff_s: float = 0.05,
-                 fault_injector=None):
+                 fault_injector=None, failover: bool = True,
+                 round_deadline_s: Optional[float] = None):
         if slots < 1:
             raise ValueError(f"slots={slots} must be >= 1")
         if max_queue is not None and max_queue < 1:
@@ -233,11 +276,21 @@ class ForecastEngine:
         self.max_round_retries = max_round_retries
         self.retry_backoff_s = retry_backoff_s
         self.fault_injector = fault_injector
+        self.failover = failover
+        self.round_deadline_s = round_deadline_s
 
         self._queue: collections.deque[_Pending] = collections.deque()
         self._lanes: Dict[_wprog.StencilProgram, _Lane] = {}
         self._plans: Dict[_wprog.StencilProgram, _wprog.ExecutionPlan] = {}
         self._fallbacks: Dict[_wprog.StencilProgram, Dict[str, Any]] = {}
+        # First-resolution (variant, k_steps) per program key.  A lane's
+        # canonical round sequence is fixed the moment its plan first
+        # compiles; recompiles on a DIFFERENT mesh (failover, elastic
+        # restore) re-pin the same round depth so every in-flight
+        # request's realized [k, ..., k, tail] sequence — and therefore
+        # its bit-identity contract — survives the mesh change.
+        self._pinned: Dict[_wprog.StencilProgram, Dict[str, Any]] = {}
+        self._failovers: List[Dict[str, Any]] = []
         self._results: Dict[int, ForecastResult] = {}
         self._next_rid = 0
         self._ckpt_step = 0
@@ -249,7 +302,10 @@ class ForecastEngine:
                        "quarantined": 0, "scrubbed_idle_slots": 0,
                        "round_retries": 0, "lane_failures": 0,
                        "fallback_compiles": 0, "rejected": 0,
-                       "deadline_expired": 0, "watchdog_checkpoints": 0}
+                       "deadline_expired": 0, "watchdog_checkpoints": 0,
+                       "mesh_failovers": 0, "recovery_rounds": 0,
+                       "requests_preserved": 0, "fingerprint_divergence": 0,
+                       "round_deadline_hits": 0, "plan_repins": 0}
         # Donating the pre-admission batch buffer lets XLA reuse it for
         # the scattered batch; CPU has no donation (it would only warn).
         donate = (0,) if jax.default_backend() in ("tpu", "gpu") else ()
@@ -332,6 +388,10 @@ class ForecastEngine:
                            if r.status == "expired")
         s["plan_fallbacks"] = {k.op: v["stage"]
                                for k, v in self._fallbacks.items()}
+        s["failovers"] = [dict(f) for f in self._failovers]
+        s["mesh_devices"] = (None if self.mesh is None
+                             else [int(d.id) for d in
+                                   self.mesh.devices.flat])
         return s
 
     # -- scheduling ---------------------------------------------------------
@@ -340,17 +400,38 @@ class ForecastEngine:
         if plan is None:
             ax_e, ax_y, ax_x = self.mesh_axes
             inj = self.fault_injector
+            prog = key
+            pinned = self._pinned.get(key)
+            if pinned is not None:
+                # Recompiling an already-served program (failover/elastic
+                # restore): pin the FIRST resolution's round strategy so
+                # in-flight canonical round sequences stay intact.  If the
+                # pinned depth cannot compile on this mesh (e.g. a deep k
+                # on a tiny shard), fall back to re-resolving — requests
+                # still complete, bit-identity becomes best-effort, and
+                # `plan_repins` records that it happened.
+                prog = dataclasses.replace(key, variant=pinned["variant"],
+                                           k_steps=pinned["k_steps"])
+                try:
+                    _wprog.compile(prog, mesh=self.mesh, ax_e=ax_e,
+                                   ax_y=ax_y, ax_x=ax_x,
+                                   interpret=self.interpret)
+                except Exception:  # noqa: BLE001 — planner rejection
+                    self._stats["plan_repins"] += 1
+                    prog = key
             # Compile through the fallback chain (native -> interpret ->
             # reference lowering), via the module so a test spy on
             # repro.weather.program.compile observes every compilation.
             plan, fallback, errors = _wprog.compile_with_fallback(
-                key, mesh=self.mesh, ax_e=ax_e, ax_y=ax_y, ax_x=ax_x,
+                prog, mesh=self.mesh, ax_e=ax_e, ax_y=ax_y, ax_x=ax_x,
                 interpret=self.interpret,
                 attempt_hook=inj.on_compile if inj is not None else None)
             if fallback is not None:
                 self._stats["fallback_compiles"] += 1
                 self._fallbacks[key] = {"stage": fallback, "errors": errors}
             self._plans[key] = plan
+            self._pinned.setdefault(
+                key, {"variant": plan.variant, "k_steps": plan.k_steps})
         return plan
 
     def _lane_for(self, key: _wprog.StencilProgram) -> _Lane:
@@ -429,6 +510,7 @@ class ForecastEngine:
             lane.batch = self._assign(lane.batch, jnp.asarray(idx), sub)
             admit_t = time.perf_counter()
             for i, pend in wave:
+                lane.fps.pop(i, None)   # fresh content in this slot
                 req = pend.request
                 lane.slots[i] = _Slot(rid=req.rid, remaining=req.steps,
                                       steps=req.steps, admit_t=admit_t,
@@ -459,6 +541,8 @@ class ForecastEngine:
         prev = lane.batch if len(participants) < len(parts) else None
         new_batch = self._step_with_retry(lane, plan, kk, rnd)
         if new_batch is None:                    # escalation exhausted
+            if self._try_failover(lane, rnd):
+                return          # round re-ran on the rebuilt mesh
             self._fail_lane(lane, rnd)
             return
         lane.batch = new_batch
@@ -473,9 +557,13 @@ class ForecastEngine:
         self._stats["occupancy_samples"] += 1
         inj = self.fault_injector
         if inj is not None:
+            nonparts = tuple(i for i in range(self.slots)
+                             if i not in set(participants))
             lane.batch = inj.poison(lane.batch, lane.key.op, rnd,
-                                    tuple(parts))
-        bad = self._guard_check(lane, parts, rnd) if self.guard else {}
+                                    tuple(parts), nonparticipants=nonparts,
+                                    shards=plan.shards)
+        bad = (self._guard_check(lane, parts, participants, rnd)
+               if self.guard else {})
         for i, (diag, state) in bad.items():
             self._quarantine(lane, i, diag, state)
         for i in participants:
@@ -496,20 +584,35 @@ class ForecastEngine:
         """Run one round, retrying transient failures with exponential
         backoff; after `max_round_retries`, degrade the plan (force the
         interpreter) and try once more.  Returns the new batch, or None
-        when every recourse failed (the caller fails the lane)."""
+        when every recourse failed (the caller escalates to mesh failover,
+        then fails the lane).  With `round_deadline_s` set, an attempt
+        whose wall clock exceeds the deadline counts as a failed attempt —
+        a straggling collective goes through the same ladder instead of
+        being waited on forever."""
         inj = self.fault_injector
         delay = self.retry_backoff_s
         last = None
         for attempt in range(self.max_round_retries + 1):
             try:
+                t0 = time.perf_counter()
                 if inj is not None:
-                    inj.on_round(lane.key.op, rnd)
+                    inj.on_round(lane.key.op, rnd,
+                                 device_ids=self._device_ids())
                 out = plan.round_plan(kk).step(lane.batch)
-                if self.guard or inj is not None:
+                if (self.guard or inj is not None
+                        or self.round_deadline_s is not None):
                     # Surface async runtime failures HERE, inside the
                     # retry scope, rather than at some later readback
                     # (the guard reads the batch right after anyway).
                     jax.block_until_ready(out)
+                if (self.round_deadline_s is not None
+                        and time.perf_counter() - t0
+                        > self.round_deadline_s):
+                    self._stats["round_deadline_hits"] += 1
+                    raise RoundDeadlineError(
+                        f"round {rnd} attempt took "
+                        f"{time.perf_counter() - t0:.3f}s > "
+                        f"round_deadline_s={self.round_deadline_s}")
                 return out
             except Exception as e:  # noqa: BLE001 — supervised boundary
                 self._stats["round_retries"] += 1
@@ -517,8 +620,10 @@ class ForecastEngine:
                 if attempt < self.max_round_retries:
                     time.sleep(delay)
                     delay *= 2
-        # Retries exhausted: degrade to the interpreter lowering once.
-        if not plan.interpret:
+        # Retries exhausted: degrade to the interpreter lowering once —
+        # unless the failure names a lost device (degradation cannot
+        # resurrect hardware; that case belongs to mesh failover).
+        if not plan.interpret and getattr(last, "lost_device", None) is None:
             try:
                 ax_e, ax_y, ax_x = self.mesh_axes
                 plan2 = _wprog.compile(lane.key, mesh=self.mesh, ax_e=ax_e,
@@ -533,6 +638,7 @@ class ForecastEngine:
             except Exception as e:  # noqa: BLE001
                 last = e
         self._last_round_error = repr(last)
+        self._last_round_exc = last
         return None
 
     def _fail_lane(self, lane: _Lane, rnd: int) -> None:
@@ -562,18 +668,117 @@ class ForecastEngine:
         if self.mesh is not None:
             lane.batch = _domain.shard_state(
                 lane.batch, self.mesh, self._plan_for(lane.key).state_spec)
+        lane.fps.clear()
+
+    # -- mesh failover ------------------------------------------------------
+    def _device_ids(self) -> Optional[List[int]]:
+        if self.mesh is None:
+            return None
+        return [int(d.id) for d in self.mesh.devices.flat]
+
+    def _probe_devices(self, devs) -> List[Any]:
+        """The devices among `devs` that still answer a trivial
+        transfer + compute + readback (the failure-agnostic way to find
+        survivors when the round error did not name the lost device)."""
+        alive = []
+        for d in devs:
+            try:
+                jax.block_until_ready(jax.device_put(jnp.zeros(()), d) + 1)
+                alive.append(d)
+            except Exception:  # noqa: BLE001 — that IS the probe result
+                pass
+        return alive
+
+    def _try_failover(self, lane: _Lane, rnd: int) -> bool:
+        """The escalation step past retry + degrade: rebuild the mesh from
+        surviving devices and resume EVERY in-flight request from the last
+        round boundary.  Returns True when the interrupted round re-ran on
+        the new mesh (nothing was failed), False when failover is off,
+        no device is identifiably lost, or no surviving shape carries the
+        lanes (the caller then fails the lane as before).
+
+        Sequence: identify the lost device (the raised error's
+        `lost_device`, else a probe of every mesh device); gather every
+        lane's pre-round batch to host (the reshard pivot — `_round` has
+        not credited anything yet, so this IS the last round boundary);
+        walk `domain.failover_meshes` best-first until one shape compiles
+        every lane's plan (pinned round depth, so canonical round
+        sequences survive); reshard; re-run the interrupted round.  Slot
+        fingerprints are sharding-invariant and keep guarding across the
+        transition."""
+        if not self.failover or self.mesh is None:
+            return False
+        devs = list(self.mesh.devices.flat)
+        lost = getattr(getattr(self, "_last_round_exc", None),
+                       "lost_device", None)
+        if lost is not None:
+            survivors = [d for d in devs if int(d.id) != int(lost)]
+        else:
+            survivors = self._probe_devices(devs)
+        if not survivors or len(survivors) == len(devs):
+            return False        # nothing identifiably lost: not a mesh fault
+        t0 = time.perf_counter()
+        host = {key: _domain.gather_state(ln.batch)
+                for key, ln in self._lanes.items()}
+        old_mesh, old_plans, old_fb = self.mesh, self._plans, self._fallbacks
+        like = (self._plans[lane.key].shards
+                if lane.key in self._plans else None)
+        ax_e, ax_y, ax_x = self.mesh_axes
+        grids = [ln.key.grid_shape for ln in self._lanes.values()]
+        chosen = None
+        for mesh2 in _domain.failover_meshes(survivors, grids,
+                                             axes=(ax_y, ax_x), like=like):
+            self.mesh, self._plans, self._fallbacks = mesh2, {}, {}
+            try:
+                for key in self._lanes:
+                    self._plan_for(key)
+                chosen = mesh2
+                break
+            except Exception:  # noqa: BLE001 — try the next shape
+                continue
+        if chosen is None:
+            self.mesh, self._plans, self._fallbacks = (
+                old_mesh, old_plans, old_fb)
+            return False
+        for key, ln in self._lanes.items():
+            ln.batch = _domain.shard_state(
+                host[key], self.mesh, self._plan_for(key).state_spec)
+        active = sum(sum(s is not None for s in ln.slots)
+                     for ln in self._lanes.values())
+        self._stats["mesh_failovers"] += 1
+        self._stats["recovery_rounds"] += 1
+        self._stats["requests_preserved"] += active
+        self._failovers.append({
+            "round": rnd,
+            "lost_device": None if lost is None else int(lost),
+            "from_devices": [int(d.id) for d in devs],
+            "to_devices": [int(d.id) for d in self.mesh.devices.flat],
+            "from_shape": None if like is None else list(like),
+            "to_shape": list(self._plan_for(lane.key).shards),
+            "reshard_ms": (time.perf_counter() - t0) * 1e3,
+            "requests_preserved": active,
+        })
+        self._round(lane)       # re-run the interrupted round
+        return True
 
     # -- validity guard / quarantine ---------------------------------------
     def _guard_check(self, lane: _Lane, parts: Dict[int, int],
+                     participants: List[int],
                      rnd: int) -> Dict[int, Tuple[Dict[str, Any],
                                                   WeatherState]]:
-        """The per-slot physics validity guard: ONE fused NaN/Inf + bounds
-        reduction over the whole lane batch at the round boundary.  Active
-        invalid slots are diagnosed (host readback of just that slot);
-        idle slots that rot (e.g. a poisoned-then-freed slot) are scrubbed
-        back to zeros.  Healthy slots are only READ — their bits cannot
-        change."""
-        ok = np.asarray(_wprog.slot_validity(lane.batch, self.guard_limit))
+        """The per-slot supervision pass: ONE fused reduction over the
+        whole lane batch at the round boundary computing both the physics
+        validity bit (NaN/Inf + bounds) and a content fingerprint per slot
+        (`program.slot_guard`).  Active invalid slots are diagnosed (host
+        readback of just that slot); idle slots that rot are scrubbed back
+        to zeros.  Then the fingerprint check: slots that did NOT advance
+        this round — rolled-back and idle slots — must keep their digest
+        bit-for-bit; a mismatch is cross-device/shard divergence (e.g. a
+        corrupted halo wire buffer) that magnitude checks cannot see.
+        Divergent in-flight slots quarantine, divergent idle slots scrub.
+        Healthy slots are only READ — their bits cannot change."""
+        ok_d, fp_d = _wprog.slot_guard(lane.batch, self.guard_limit)
+        ok, fp = np.asarray(ok_d), np.asarray(fp_d)
         bad: Dict[int, Tuple[Dict[str, Any], WeatherState]] = {}
         for i in parts:
             if not bool(ok[i]):
@@ -582,7 +787,38 @@ class ForecastEngine:
             if slot is None and not bool(ok[i]):
                 self._scrub(lane, i)
                 self._stats["scrubbed_idle_slots"] += 1
+        advanced = set(participants)
+        for i in range(self.slots):
+            if i in bad or not bool(ok[i]):
+                continue        # already handled by the validity pass
+            got = int(fp[i])
+            if i in advanced or i not in lane.fps:
+                # The slot legitimately has new bits (it advanced a round)
+                # or has no recorded digest yet: (re)record.
+                lane.fps[i] = got
+                continue
+            want = lane.fps[i]
+            if want == got:
+                continue
+            self._stats["fingerprint_divergence"] += 1
+            if lane.slots[i] is not None:
+                bad[i] = self._diagnose_fp(lane, i, rnd, want, got)
+            else:
+                self._scrub(lane, i)
+                self._stats["scrubbed_idle_slots"] += 1
         return bad
+
+    def _diagnose_fp(self, lane: _Lane, i: int, rnd: int, want: int,
+                     got: int) -> Tuple[Dict[str, Any], WeatherState]:
+        state = jax.tree_util.tree_map(
+            np.asarray, _wprog.ensemble_slot_view(lane.batch, i))
+        diag = {"reason": "fingerprint_divergence", "round": rnd,
+                "expected_fp": want, "observed_fp": got,
+                "note": "slot did not advance this round but its bits "
+                        "changed: cross-shard/device divergence (e.g. a "
+                        "corrupted halo wire buffer), invisible to "
+                        "NaN/magnitude validity checks"}
+        return diag, state
 
     def _diagnose(self, lane: _Lane, i: int,
                   rnd: int) -> Tuple[Dict[str, Any], WeatherState]:
@@ -634,6 +870,7 @@ class ForecastEngine:
                                    dtype=lane.key.dtype,
                                    names=lane.key.fields)
         lane.batch = self._assign(lane.batch, jnp.asarray([i]), zero)
+        lane.fps.pop(i, None)   # the slot's bits were legitimately replaced
 
     def _expire_slot(self, lane: _Lane, i: int, now: float) -> None:
         slot = lane.slots[i]
@@ -713,6 +950,9 @@ class ForecastEngine:
             },
             "lanes": [{
                 "program": lane.key.to_json(),
+                # The resolved round strategy: restore re-pins it so the
+                # canonical round sequence survives a mesh change.
+                "plan": self._pinned.get(lane.key),
                 "slots": [None if s is None else {
                     "rid": s.rid, "remaining": s.remaining,
                     "steps": s.steps, "rounds": s.rounds,
@@ -745,34 +985,52 @@ class ForecastEngine:
                 mesh=None, interpret: Optional[bool] = None,
                 ax_e: str = "pod", ax_y: str = "data", ax_x: str = "model",
                 ckpt_keep: int = 3, fault_injector=None) -> "ForecastEngine":
-        """Resume a checkpointed engine: in-flight forecasts continue from
-        their persisted step (no respin), queued requests stay queued,
-        finished results are preserved.  Plans are NOT serialized — the
-        cache rebuilds lazily from the persisted program keys on the
-        first round each lane runs.  Supervision config (max_queue, guard,
-        watchdog cadence, retry policy) is restored from the checkpoint;
-        a mesh whose device count differs from the writing engine's is
-        refused with an actionable error."""
-        if step is None:
-            step = ckpt.latest_step(ckpt_dir)
-            if step is None:
-                raise FileNotFoundError(f"no checkpoints in {ckpt_dir!r}")
-        extra = ckpt.read_meta(ckpt_dir, step)["extra"]
-        slots = extra["slots"]
-        if "mesh_devices" in extra:
-            saved_dev = extra["mesh_devices"]
-            have_dev = None if mesh is None else int(mesh.devices.size)
-            if saved_dev != have_dev:
-                def word(n):
-                    return "single-chip" if n is None else f"{n}-device"
-                raise ValueError(
-                    f"checkpoint {ckpt_dir!r} step {step} was written by a "
-                    f"{word(saved_dev)} engine but restore() was given a "
-                    f"{word(have_dev)} mesh: lane batches would be "
-                    f"re-sharded inconsistently.  Restore with "
-                    + (f"a mesh of exactly {saved_dev} devices"
-                       if saved_dev else "mesh=None") + ".")
+        """Resume a checkpointed engine — on ANY mesh.
 
+        In-flight forecasts continue from their persisted round boundary
+        (no respin), queued requests stay queued, finished results are
+        preserved.  The checkpoint is mesh-elastic: lane batches are
+        persisted unsharded-logical and reshard through the NEW plan's
+        `state_spec`, so a checkpoint written single-chip restores onto 4
+        devices and vice versa.  Plans are NOT serialized — they
+        recompile through the plan cache (compile-once per mesh shape)
+        with the persisted (variant, k_steps) pin, keeping every
+        in-flight request's canonical round sequence intact across the
+        transition; docs/robustness.md has the matrix of which
+        transitions additionally preserve exact bits.  Supervision config
+        (max_queue, guard, watchdog cadence, retry policy) is restored
+        from the checkpoint.
+
+        With `step=None` the newest checkpoint is used; when it is
+        corrupt (`ckpt.CheckpointCorruptError`), restore falls back to
+        the next-older valid one instead of dying, and raises an
+        aggregated error only when every retained checkpoint is
+        unreadable."""
+        if step is not None:
+            return cls._restore_step(
+                ckpt_dir, step, mesh=mesh, interpret=interpret, ax_e=ax_e,
+                ax_y=ax_y, ax_x=ax_x, ckpt_keep=ckpt_keep,
+                fault_injector=fault_injector)
+        steps = sorted(ckpt.all_steps(ckpt_dir), reverse=True)
+        if not steps:
+            raise FileNotFoundError(f"no checkpoints in {ckpt_dir!r}")
+        failures = []
+        for s in steps:
+            try:
+                return cls._restore_step(
+                    ckpt_dir, s, mesh=mesh, interpret=interpret, ax_e=ax_e,
+                    ax_y=ax_y, ax_x=ax_x, ckpt_keep=ckpt_keep,
+                    fault_injector=fault_injector)
+            except ckpt.CheckpointCorruptError as e:
+                failures.append((s, e))
+        raise ckpt.CheckpointCorruptError(
+            f"every checkpoint in {ckpt_dir!r} is unreadable — "
+            + "; ".join(f"step {s}: {e}" for s, e in failures))
+
+    @classmethod
+    def _restore_step(cls, ckpt_dir: str, step: int, *, mesh, interpret,
+                      ax_e: str, ax_y: str, ax_x: str, ckpt_keep: int,
+                      fault_injector) -> "ForecastEngine":
         def prog_of(d):
             return _wprog.StencilProgram.from_json(d)
 
@@ -780,14 +1038,25 @@ class ForecastEngine:
             return _fields.zeros_state(prog.grid_shape, ensemble=ensemble,
                                        dtype=prog.dtype, names=prog.fields)
 
-        tmpl = {
-            "lanes": [template(prog_of(ln["program"]), slots)
-                      for ln in extra["lanes"]],
-            "queue": [template(prog_of(q["program"]), 1)
-                      for q in extra["queue"]],
-            "results": {str(r["rid"]): template(prog_of(r["program"]), 1)
-                        for r in extra["results"]},
-        }
+        meta = ckpt.read_meta(ckpt_dir, step)
+        try:
+            extra = meta["extra"]
+            slots = extra["slots"]
+            tmpl = {
+                "lanes": [template(prog_of(ln["program"]), slots)
+                          for ln in extra["lanes"]],
+                "queue": [template(prog_of(q["program"]), 1)
+                          for q in extra["queue"]],
+                "results": {str(r["rid"]): template(prog_of(r["program"]), 1)
+                            for r in extra["results"]},
+            }
+        except (KeyError, TypeError) as e:
+            raise ckpt.CheckpointCorruptError(
+                f"checkpoint {ckpt_dir!r} step {step}: the engine sidecar "
+                f"is missing or malformed at {e!r} — written by an "
+                f"incompatible engine version or truncated.  Restore from "
+                f"another step, or re-checkpoint with this engine."
+            ) from e
         tree, _ = ckpt.restore_tree(ckpt_dir, step, tmpl)
 
         cfg = extra.get("config", {})
@@ -809,6 +1078,12 @@ class ForecastEngine:
         for ln, batch in zip(extra["lanes"], tree["lanes"]):
             key = _wprog.plan_cache_key(prog_of(ln["program"]),
                                         ensemble=slots)
+            pin = ln.get("plan")
+            if pin is not None:
+                # Seed the round-strategy pin BEFORE the first compile so
+                # the recompiled plan replays the writer's [k,...,k,tail]
+                # sequences even on a different mesh shape.
+                eng._pinned[key] = dict(pin)
             if mesh is not None:
                 batch = _domain.shard_state(batch, mesh,
                                             eng._plan_for(key).state_spec)

@@ -19,7 +19,23 @@ exact scheduling point and assert the recovery bit-for-bit:
   ``reference``), forcing the chain to degrade.
 * ``device_loss``: raise `InjectedDeviceLoss` when a chosen round starts
   — a transient backend/runtime failure the engine must retry with
-  backoff.
+  backoff.  With `device=<id>` the loss is PERSISTENT per-device: it
+  fires on every round from `round` on **while that device is part of
+  the mesh the engine reports via `device_ids`** — the model of a chip
+  falling out of the fabric.  The raised exception carries
+  ``.lost_device`` so the engine's failover can tell which survivor set
+  to rebuild from.
+* ``wire_corrupt``: overwrite a few elements of one slot inside ONE
+  shard's slab with finite, in-bounds garbage at a round boundary — a
+  corrupted halo wire buffer.  It passes the NaN/Inf/magnitude validity
+  guard by construction; only the per-slot fingerprint reduction
+  (`program.slot_guard`) catches it, and only on slots that did not
+  legitimately advance that round (rolled-back or idle slots — the
+  engine's non-participant invariant).
+* ``straggler``: sleep `delay_s` seconds as the round starts — a hung
+  collective / slow device.  Nothing is raised; the engine's per-round
+  deadline watchdog (`round_deadline_s`) must notice the overrun and
+  treat the attempt as failed.
 
 Every fired fault is appended to ``injector.log`` (kind, round, slot) so
 tests and the robustness benchmark can assert what actually happened.
@@ -34,6 +50,7 @@ from __future__ import annotations
 
 import dataclasses
 import os
+import time
 from typing import Any, Dict, List, Optional, Sequence
 
 import jax
@@ -44,7 +61,8 @@ __all__ = ["FaultSpec", "FaultInjector", "InjectedFault",
            "InjectedCompileError", "InjectedDeviceLoss", "truncate_file",
            "bitflip_file", "corrupt_checkpoint"]
 
-KINDS = ("poison_nan", "poison_inf", "compile_fail", "device_loss")
+KINDS = ("poison_nan", "poison_inf", "compile_fail", "device_loss",
+         "wire_corrupt", "straggler")
 
 
 class InjectedFault(RuntimeError):
@@ -56,7 +74,13 @@ class InjectedCompileError(InjectedFault):
 
 
 class InjectedDeviceLoss(InjectedFault):
-    """Simulated device loss / transient runtime failure mid-round."""
+    """Simulated device loss / transient runtime failure mid-round.
+    `lost_device` is the failed device's id for a per-device persistent
+    loss (None for the transient, device-less flavor)."""
+
+    def __init__(self, msg: str, lost_device: Optional[int] = None):
+        super().__init__(msg)
+        self.lost_device = lost_device
 
 
 @dataclasses.dataclass
@@ -71,7 +95,15 @@ class FaultSpec:
     names which stage of the compile fallback chain a ``compile_fail``
     kills (``"native"``, ``"interpret"``, ``"reference"``, or ``"all"``).
     `once` (default) retires the spec after it fires — the transient-fault
-    model; set False for a persistent fault."""
+    model; set False for a persistent fault.
+
+    `device` (``device_loss`` only) makes the loss per-device and
+    persistent-while-present: it fires on every round >= `round` as long
+    as that device id is in the `device_ids` the engine passes to
+    `on_round` — so a failover onto surviving devices genuinely clears
+    it.  `delay_s` is the ``straggler`` sleep.  `shard` picks which
+    shard's slab a ``wire_corrupt`` lands in (the y-decomposed slab
+    index)."""
 
     kind: str
     round: int = 0
@@ -80,10 +112,16 @@ class FaultSpec:
     op: Optional[str] = None
     attempt: str = "native"
     once: bool = True
+    device: Optional[int] = None                # device_loss: device id
+    delay_s: float = 0.0                        # straggler: sleep seconds
+    shard: int = 0                              # wire_corrupt: slab index
 
     def __post_init__(self):
         if self.kind not in KINDS:
             raise ValueError(f"kind={self.kind!r} not one of {KINDS}")
+        if self.device is not None and self.kind != "device_loss":
+            raise ValueError(f"device= only applies to device_loss specs, "
+                             f"not {self.kind!r}")
 
 
 class FaultInjector:
@@ -124,25 +162,77 @@ class FaultInjector:
                 f"injected lowering failure: op={program.op!r} "
                 f"attempt={attempt!r}")
 
-    def on_round(self, op: str, round_index: int) -> None:
-        """Called as a lane round starts; raises `InjectedDeviceLoss` when
-        a ``device_loss`` spec matches this round."""
+    def on_round(self, op: str, round_index: int,
+                 device_ids: Optional[Sequence[int]] = None) -> None:
+        """Called as a lane round starts.  Raises `InjectedDeviceLoss`
+        when a ``device_loss`` spec matches this round (or, for a
+        per-device spec, while its device is in `device_ids` — the ids of
+        the mesh the engine is about to step on); sleeps for a matching
+        ``straggler`` spec."""
         for spec in list(self.specs):
-            if spec.kind != "device_loss" or spec.round != round_index:
+            if spec.kind == "straggler":
+                if spec.round != round_index:
+                    continue
+                if spec.op is not None and spec.op != op:
+                    continue
+                self._fire(spec, op=op, round=round_index,
+                           delay_s=spec.delay_s)
+                time.sleep(spec.delay_s)
+                continue
+            if spec.kind != "device_loss":
+                continue
+            if spec.device is not None:
+                # Per-device persistent loss: the chip is gone from
+                # `round` on; it only stops failing rounds once the
+                # engine stops scheduling onto it.
+                if round_index < spec.round:
+                    continue
+                if device_ids is None or spec.device not in device_ids:
+                    continue
+            elif spec.round != round_index:
                 continue
             if spec.op is not None and spec.op != op:
                 continue
-            self._fire(spec, op=op, round=round_index)
+            self._fire(spec, op=op, round=round_index, device=spec.device)
             raise InjectedDeviceLoss(
-                f"injected device loss: op={op!r} round={round_index}")
+                f"injected device loss: op={op!r} round={round_index}"
+                + (f" device={spec.device}" if spec.device is not None
+                   else ""),
+                lost_device=spec.device)
 
     def poison(self, batch, op: str, round_index: int,
-               active_slots: Sequence[int]):
+               active_slots: Sequence[int],
+               nonparticipants: Sequence[int] = (),
+               shards: Sequence[int] = (1, 1)):
         """Called at the round boundary (post-step, pre-guard); returns
         `batch` with matching poison specs applied to ONE active slot each
         — only that slot's leaves are written, so healthy slots keep their
-        exact bits."""
+        exact bits.
+
+        ``wire_corrupt`` specs also land here (the round boundary IS the
+        moment a bad wire buffer would have materialized as bad slab
+        rows): they prefer a slot from `nonparticipants` (rolled-back or
+        idle slots, whose bits the engine can PROVE must not change) and
+        damage only shard `spec.shard`'s rows of the y-decomposed slab
+        (`shards` = the plan's (py, px))."""
         for spec in list(self.specs):
+            if spec.kind == "wire_corrupt":
+                if spec.round != round_index:
+                    continue
+                if spec.op is not None and spec.op != op:
+                    continue
+                pool = list(nonparticipants) or list(active_slots)
+                if spec.slot is not None:
+                    slot = spec.slot
+                elif pool:
+                    slot = int(self.rng.choice(pool))
+                else:
+                    continue
+                batch = self._corrupt_shard(batch, slot, spec.field,
+                                            spec.shard, shards)
+                self._fire(spec, op=op, round=round_index, slot=slot,
+                           shard=spec.shard)
+                continue
             if spec.kind not in ("poison_nan", "poison_inf"):
                 continue
             if spec.round != round_index:
@@ -157,6 +247,31 @@ class FaultInjector:
             batch = self._poison_slot(batch, slot, spec.field, val)
             self._fire(spec, op=op, round=round_index, slot=slot)
         return batch
+
+    def _corrupt_shard(self, batch, slot: int, field: Optional[str],
+                       shard: int, shards: Sequence[int]):
+        """Finite, in-bounds damage to one slot's rows inside ONE shard's
+        slab: a seeded handful of elements of the slab's first rows gets
+        +1.0 — invisible to the NaN/Inf/magnitude validity guard, visible
+        to the fingerprint."""
+        py = max(1, int(shards[0]))
+        name = field if field is not None else sorted(batch.fields)[0]
+        leaf = batch.fields[name]
+        ny = int(leaf.shape[2])
+        ly = max(1, ny // py)
+        lo = min(int(shard), py - 1) * ly
+        rows = slice(lo, lo + max(1, min(2, ly)))
+        e = leaf[slot]                       # (nz, ny, nx)
+        band = e[:, rows, :]
+        n = max(1, int(band.size) // 16)
+        idx = self.rng.choice(band.size, size=n, replace=False)
+        flat = jnp.ravel(band).at[jnp.asarray(idx)].add(
+            jnp.asarray(1.0, leaf.dtype))
+        e = e.at[:, rows, :].set(jnp.reshape(flat, band.shape))
+        out = jax.tree_util.tree_map(lambda a: a, batch)
+        out.fields = dict(out.fields)
+        out.fields[name] = leaf.at[slot].set(e)
+        return out
 
     def _poison_slot(self, batch, slot: int, field: Optional[str],
                      val: float):

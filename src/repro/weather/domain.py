@@ -39,8 +39,11 @@ ride the "pod" axis of the multi-pod mesh — see docs/architecture.md
 
 from __future__ import annotations
 
+from typing import Iterable, List, Optional, Tuple
+
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.kernels.hdiff import ref as hdiff_ref
@@ -193,3 +196,55 @@ def _local_vadvc(u_stage, wcon, u_pos, utens, utens_stage, ax_x, nx_shards):
 def shard_state(state: WeatherState, mesh: Mesh, spec: P) -> WeatherState:
     sharding = NamedSharding(mesh, spec)
     return jax.tree.map(lambda a: jax.device_put(a, sharding), state)
+
+
+def gather_state(state: WeatherState) -> WeatherState:
+    """Pull a (possibly sharded) state fully to host as numpy arrays —
+    the unsharded-logical form every mesh can reshard from.  This is the
+    reshard pivot of the elastic failover/restore path: gather on the old
+    mesh, `shard_state` on the new one."""
+    return jax.tree.map(lambda a: np.asarray(jax.device_get(a)), state)
+
+
+def _mesh_from(devices, shape: Tuple[int, int], axes) -> Mesh:
+    kw = ({"axis_types": (jax.sharding.AxisType.Auto,) * len(axes)}
+          if hasattr(jax.sharding, "AxisType") else {})
+    n = shape[0] * shape[1]
+    return Mesh(np.asarray(devices[:n]).reshape(shape), tuple(axes), **kw)
+
+
+def failover_meshes(devices, grids: Iterable[Tuple[int, int, int]],
+                    axes=("data", "model"),
+                    like: Optional[Tuple[int, int]] = None) -> List[Mesh]:
+    """Candidate meshes over surviving `devices`, best first.
+
+    Every candidate's (py, px) divides EVERY grid in `grids` (ny over py,
+    nx over px) — one mesh must carry every lane.  Ordering: more devices
+    first; then shapes whose sharded-axis PATTERN matches `like` (the
+    dying mesh's (py, px)).  The pattern preference is a bitwise-identity
+    matter, not cosmetics: collapsing a sharded axis to 1 shard switches
+    that axis from halo-exchange to wrap-padding lowering, which changes
+    result bits for ops that are not sharding-transparent — whereas
+    *shrinking* a sharded axis (4→2 shards) provably keeps bits (see
+    tests/test_mesh_failover.py).  A caller walks the list and takes the
+    first mesh its plans compile on."""
+    devices = list(devices)
+    grids = list(grids)
+    cands: List[Tuple[int, int]] = []
+    for n in range(len(devices), 0, -1):
+        for py in range(n, 0, -1):
+            if n % py:
+                continue
+            px = n // py
+            if all(ny % py == 0 and nx % px == 0 for _, ny, nx in grids):
+                cands.append((py, px))
+
+    def score(pp):
+        py, px = pp
+        match = 0
+        if like is not None:
+            match = ((py > 1) == (like[0] > 1)) + ((px > 1) == (like[1] > 1))
+        return (-(py * px), -match, -py)
+
+    return [_mesh_from(devices, pp, axes)
+            for pp in sorted(cands, key=score)]

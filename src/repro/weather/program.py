@@ -44,6 +44,7 @@ from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.compat import shard_map as _shard_map
@@ -63,7 +64,7 @@ __all__ = ["StencilProgram", "DycoreProgram", "ExchangeSchedule",
            "get_stencil_op", "register_stencil_op",
            "registered_stencil_ops", "VARIANTS", "plan_cache_key",
            "ensemble_slot_view", "ensemble_slot_assign",
-           "ensemble_slot_select", "slot_validity"]
+           "ensemble_slot_select", "slot_validity", "slot_guard"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -234,6 +235,80 @@ def slot_validity(state: WeatherState, limit) -> jnp.ndarray:
         return finite & (mag <= limit)
     per = [per_leaf(leaf) for leaf in jax.tree_util.tree_leaves(state)]
     return jnp.all(jnp.stack(per), axis=0)
+
+
+# Odd 32-bit mixing constants (Knuth/FNV lineage) for the fingerprint.
+_FP_MIX = np.uint32(0x9E3779B1)
+_FP_LEAF = np.uint32(0x01000193)
+_FP_AXIS = (np.uint32(0x85EBCA6B), np.uint32(0xC2B2AE35),
+            np.uint32(0x27D4EB2F), np.uint32(0x165667B1))
+
+
+@jax.jit
+def slot_guard(state: WeatherState, limit):
+    """`slot_validity` plus a per-slot content FINGERPRINT, one fused
+    jitted pass: returns ``(ok, fp)`` with `ok` the ``(E,)`` validity
+    bool and `fp` an ``(E,)`` uint32 digest of every leaf's exact bits.
+
+    The fingerprint is the cross-device divergence guard the validity
+    reduction cannot be: finite, in-bounds corruption (a bad halo wire
+    buffer, a flipped mantissa bit on one shard) passes every NaN/Inf/
+    magnitude test, but it changes the digest.  The serving engine
+    records each slot's digest at round boundaries and demands that slots
+    which did NOT advance a round (rolled-back and idle slots) keep it
+    bit-for-bit — so per-shard divergence is caught at the boundary where
+    it occurs, not steps later when it blows up.
+
+    Construction: element bits (bitcast, never rounded) are mixed with a
+    position hash (per-axis `broadcasted_iota` — no reshape, so the
+    reduction stays shardable and the digest is a function of GLOBAL
+    positions, invariant to how the array is sharded) and XOR-folded over
+    every non-ensemble axis; leaves combine order-sensitively.  XOR makes
+    the fold order-independent, so per-shard partial folds under jit
+    compose to the same digest on ANY mesh — the property the elastic
+    failover relies on when it compares digests across a reshard."""
+    def leaf_ok(a):
+        axes = tuple(range(1, a.ndim))      # no reshape: stays shardable
+        finite = jnp.all(jnp.isfinite(a), axis=axes)
+        mag = jnp.max(jnp.where(jnp.isfinite(a), jnp.abs(a), 0.0),
+                      axis=axes)
+        return finite & (mag <= limit)
+
+    def leaf_fp(a):
+        u = {1: jnp.uint8, 2: jnp.uint16, 4: jnp.uint32}.get(
+            a.dtype.itemsize)
+        if u is not None:
+            bits = jax.lax.bitcast_convert_type(a, u).astype(jnp.uint32)
+        else:                               # 8-byte leaves: (..., 2) u32
+            bits = jax.lax.bitcast_convert_type(a, jnp.uint32)
+        pos = jnp.zeros((), jnp.uint32)
+        for d in range(1, bits.ndim):
+            iota = jax.lax.broadcasted_iota(jnp.uint32, bits.shape, d)
+            pos = pos + iota * _FP_AXIS[d % len(_FP_AXIS)]
+        v = (bits + pos) * _FP_MIX
+        v = v ^ (v >> 16)                   # element swaps don't cancel
+        # XOR-fold every non-ensemble axis by repeated halving (XLA has
+        # no built-in xor reduction on every backend; a log-n cascade of
+        # elementwise XORs lowers everywhere and computes the same fold).
+        for axis in range(v.ndim - 1, 0, -1):
+            while v.shape[axis] > 1:
+                n = v.shape[axis]
+                h = n // 2
+                r = (jax.lax.slice_in_dim(v, 0, h, axis=axis)
+                     ^ jax.lax.slice_in_dim(v, h, 2 * h, axis=axis))
+                if n % 2:
+                    r = jnp.concatenate(
+                        [r, jax.lax.slice_in_dim(v, 2 * h, n, axis=axis)],
+                        axis=axis)
+                v = r
+        return v.reshape(v.shape[0])
+
+    oks, fp = [], None
+    for leaf in jax.tree_util.tree_leaves(state):
+        oks.append(leaf_ok(leaf))
+        f = leaf_fp(leaf)
+        fp = f if fp is None else (fp * _FP_LEAF) ^ f
+    return jnp.all(jnp.stack(oks), axis=0), fp
 
 
 @dataclasses.dataclass(frozen=True)

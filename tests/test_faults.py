@@ -3,14 +3,14 @@
 Every failure mode the serving stack claims to survive is rehearsed here
 deterministically: NaN/Inf slot poisoning (quarantine), injected compile
 failures (fallback chain), injected device loss (retry with backoff, lane
-failure on persistence), checkpoint file corruption (manifest
-verification), bounded-queue backpressure, per-request deadlines, and
-mismatched-mesh restore.  CI's chaos job runs this module under
-``-W error::DeprecationWarning``.
+failure on persistence — mesh FAILOVER lives in test_mesh_failover.py),
+checkpoint file corruption (manifest verification), crash-window swap
+atomicity, restore fallback past a corrupt newest checkpoint,
+bounded-queue backpressure, and per-request deadlines.  CI's chaos job
+runs this module under ``-W error::DeprecationWarning``.
 """
 
 import time
-import types
 
 import jax
 import numpy as np
@@ -346,19 +346,168 @@ def test_legacy_checkpoint_without_manifest_still_loads(tmp_path):
 
 
 # ---------------------------------------------------------------------------
+# Atomic swap: the crash window must never eat BOTH checkpoints
+# ---------------------------------------------------------------------------
+
+
+def test_swap_crash_window_keeps_previous_checkpoint(tmp_path, monkeypatch):
+    """Kill the writer between 'rename old aside' and 'rename tmp in'
+    (the worst point of the swap): the previous checkpoint must survive —
+    reinstated by the recovery sweep on the next listing — instead of
+    being rmtree'd before its replacement landed."""
+    import os
+    d = str(tmp_path)
+    ckpt.save_tree(d, 0, _tree(), extra={"v": 1})
+    real_rename = os.rename
+
+    def dying_rename(src, dst):
+        if src.endswith(".tmp"):
+            raise OSError("simulated crash mid-swap")
+        return real_rename(src, dst)
+
+    monkeypatch.setattr(ckpt.os, "rename", dying_rename)
+    two = {k: v + 100.0 for k, v in _tree().items()}
+    with pytest.raises(OSError, match="mid-swap"):
+        ckpt.save_tree(d, 0, two, extra={"v": 2})
+    monkeypatch.undo()
+    # On disk now: step_0.old (complete, v1) + step_0.tmp; no step_0.
+    # all_steps' recovery sweep reinstates the .old.
+    assert ckpt.all_steps(d) == [0]
+    tree, extra = ckpt.restore_tree(d, 0, _tree())
+    assert extra == {"v": 1}
+    np.testing.assert_array_equal(np.asarray(tree["a"]), _tree()["a"])
+
+
+def test_all_steps_ignores_stray_dirs_and_drops_spent_old(tmp_path):
+    """Strict step parsing: `step_*.tmp` (mid-save crash), `step_abc`
+    (foreign junk), and incomplete `step_*` dirs neither crash the int()
+    parse nor show up as restorable steps; a `.old` left by a swap that
+    died pre-delete (complete final present) is garbage-collected."""
+    import os, shutil
+    d = str(tmp_path)
+    ckpt.save_tree(d, 3, _tree())
+    os.makedirs(os.path.join(d, "step_00000007.tmp"))
+    os.makedirs(os.path.join(d, "step_abc"))
+    os.makedirs(os.path.join(d, "step_00000009"))   # no meta.json: torn
+    with open(os.path.join(d, "notes.txt"), "w") as f:
+        f.write("not a checkpoint")
+    final = os.path.join(d, "step_00000003")
+    shutil.copytree(final, final + ".old")          # swap died pre-delete
+    assert ckpt.all_steps(d) == [3]
+    assert ckpt.latest_step(d) == 3
+    assert not os.path.exists(final + ".old")       # spent .old swept
+    assert os.path.isdir(os.path.join(d, "step_00000007.tmp"))  # untouched
+
+
+# ---------------------------------------------------------------------------
+# Format drift: actionable errors, not KeyError
+# ---------------------------------------------------------------------------
+
+
+def test_read_meta_on_garbled_json_is_actionable(tmp_path):
+    import os
+    d = str(tmp_path)
+    ckpt.save_tree(d, 0, _tree())
+    path = os.path.join(d, "step_00000000", "meta.json")
+    with open(path, "w") as f:
+        f.write('{"step": 0, "manifes')          # torn mid-write
+    with pytest.raises(CheckpointCorruptError, match="unreadable"):
+        ckpt.read_meta(d, 0)
+    with open(path, "w") as f:
+        f.write('[1, 2, 3]')                     # foreign file
+    with pytest.raises(CheckpointCorruptError, match="not a JSON object"):
+        ckpt.read_meta(d, 0)
+    with pytest.raises(FileNotFoundError):
+        ckpt.read_meta(d, 99)
+
+
+def test_manifest_entry_missing_fields_is_actionable(tmp_path):
+    """A manifest written by a drifted/corrupted writer (entry lacking
+    crc32/nbytes) must raise CheckpointCorruptError naming the entry and
+    the missing fields — not KeyError deep in verification."""
+    import json, os
+    d = str(tmp_path)
+    ckpt.save_tree(d, 0, _tree())
+    path = os.path.join(d, "step_00000000", "meta.json")
+    with open(path) as f:
+        meta = json.load(f)
+    del meta["manifest"]["a"]["crc32"]
+    with open(path, "w") as f:
+        json.dump(meta, f)
+    with pytest.raises(CheckpointCorruptError,
+                       match="'a'.*missing required fields"):
+        ckpt.restore_tree(d, 0, _tree())
+
+
+# ---------------------------------------------------------------------------
 # Restore safety
 # ---------------------------------------------------------------------------
 
 
-def test_restore_mismatched_device_count_is_actionable(tmp_path):
+def test_restore_is_mesh_elastic_and_pins_round_strategy(tmp_path):
+    """The engine no longer refuses a mesh whose device count differs from
+    the writer's: restore is elastic (cross-count subprocess sweeps live
+    in test_mesh_failover.py).  Single-chip round-trip here checks the
+    sidecar carries the pinned (variant, k_steps) and that restore seeds
+    it, plus that `mesh_devices: null` checkpoints restore anywhere."""
     d = str(tmp_path)
     eng = ForecastEngine(slots=1, ckpt_dir=d)
-    eng.submit(ForecastRequest(program=PROG, state=_state(98), steps=2))
+    s = _state(98)
+    rid = eng.submit(ForecastRequest(program=PROG, state=s, steps=3))
     eng.pump()
     step = eng.checkpoint()
-    fake_mesh = types.SimpleNamespace(devices=np.empty(4))
-    with pytest.raises(ValueError, match="single-chip engine.*4-device"):
-        ForecastEngine.restore(d, step, mesh=fake_mesh)
+    meta = ckpt.read_meta(d, step)
+    assert meta["extra"]["mesh_devices"] is None
+    pin = meta["extra"]["lanes"][0]["plan"]
+    assert pin is not None and {"variant", "k_steps"} <= set(pin)
+    eng2 = ForecastEngine.restore(d, step)
+    assert eng2._pinned[next(iter(eng2._lanes))] == pin
+    r = eng2.drain()[rid]
+    assert r.status == "ok"
+    _assert_bits(r, s)
+
+
+def test_restore_latest_falls_back_past_corrupt_newest(tmp_path):
+    """restore(step=None) must not die because the NEWEST checkpoint is
+    rotten: it falls back to the next-older valid one, and raises one
+    aggregated CheckpointCorruptError only when every step is bad."""
+    d = str(tmp_path)
+    eng = ForecastEngine(slots=1, ckpt_dir=d)
+    s = _state(101)
+    rid = eng.submit(ForecastRequest(program=PROG, state=s, steps=4))
+    eng.pump()
+    step_a = eng.checkpoint()
+    eng.pump()
+    step_b = eng.checkpoint()
+    assert step_b > step_a
+    faults.corrupt_checkpoint(d, step_b, "bitflip", seed=5)
+    eng2 = ForecastEngine.restore(d)          # silently skips step_b
+    r = eng2.drain()[rid]
+    assert r.status == "ok"
+    _assert_bits(r, s)
+    faults.corrupt_checkpoint(d, step_a, "truncate")
+    with pytest.raises(CheckpointCorruptError, match="every checkpoint"):
+        ForecastEngine.restore(d)
+
+
+def test_restore_incompatible_engine_sidecar_is_actionable(tmp_path):
+    """A meta.json whose engine sidecar is missing fields (incompatible
+    writer / truncated extra) raises CheckpointCorruptError naming the
+    problem — which also lets restore-from-latest fall back past it."""
+    import json, os
+    d = str(tmp_path)
+    eng = ForecastEngine(slots=1, ckpt_dir=d)
+    eng.submit(ForecastRequest(program=PROG, state=_state(102), steps=2))
+    eng.pump()
+    step = eng.checkpoint()
+    meta_path = os.path.join(d, f"step_{step:08d}", "meta.json")
+    with open(meta_path) as f:
+        meta = json.load(f)
+    del meta["extra"]["slots"]
+    with open(meta_path, "w") as f:
+        json.dump(meta, f)
+    with pytest.raises(CheckpointCorruptError, match="sidecar"):
+        ForecastEngine.restore(d, step)
 
 
 def test_restore_preserves_supervision_config(tmp_path):
