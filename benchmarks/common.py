@@ -58,11 +58,22 @@ def bench_path(filename: str) -> str:
 
 
 def write_json(filename: str, payload: Dict) -> str:
-    """Dump `payload` (+ backend/smoke metadata) to BENCH_DIR/filename."""
+    """Dump `payload` (+ backend/smoke/fidelity metadata) to
+    BENCH_DIR/filename.
+
+    The `fidelity` block makes ROADMAP's interpreter caveat
+    machine-readable: which jax backend measured the walltimes, whether
+    Pallas ran interpreted, which hardware spec (by content fingerprint)
+    the modeled numbers target, and whether the walltimes can be trusted
+    as that machine's.  bench-smoke refuses an artifact whose fingerprint
+    does not match the shipped spec."""
+    from repro.core import hwspec
+
     path = bench_path(filename)
     payload = dict(payload)
     payload.setdefault("backend", jax.default_backend())
     payload.setdefault("smoke", smoke_mode())
+    payload.setdefault("fidelity", hwspec.execution_fidelity())
     with open(path, "w") as fh:
         json.dump(payload, fh, indent=2, sort_keys=True)
     print(f"# wrote {path}")

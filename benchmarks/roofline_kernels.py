@@ -1,9 +1,13 @@
-"""Paper Fig. 1 — roofline placement of vadvc / hdiff / copy.
+"""Paper Fig. 1 — roofline placement of vadvc / hdiff, per hardware spec.
 
-Computes each kernel's arithmetic intensity and its position under the
-POWER9 roofline (the paper's measured baseline points) and the TPU v5e
-roofline (our target platform), from the analytic op specs; the wall-clock
-column is the measured jnp reference on this CPU (labeled 'cpu-jnp').
+Computes each kernel's arithmetic intensity and its position under every
+shipped spec's roofline (POWER9 — the paper's measured baseline, whose
+Fig. 1 points now live in the spec's `reference_points` — NERO, and the
+TPU v5e target), from the analytic op specs; the wall-clock column is the
+measured jnp reference on this process's backend (labeled 'cpu-jnp').
+
+`roofline_block()` is the embeddable form: `benchmarks/run.py` folds it
+into `BENCH_dycore.json` as `roofline_by_hardware`.
 """
 
 from __future__ import annotations
@@ -13,16 +17,44 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import emit, time_fn
-from repro.core import hierarchy as hw
-from repro.core import perfmodel, tiling
+from repro.core import hwspec, perfmodel, tiling
 from repro.core.autotune import tune
 from repro.kernels.hdiff import ref as href
 from repro.kernels.vadvc import ref as vref
 
 GRID = (64, 256, 256)    # the paper's 256x256x64 domain
 
-# Paper Fig. 1 measured POWER9 numbers (GFLOP/s, 64 threads)
-PAPER_POWER9 = {"vadvc": 29.1, "hdiff": 58.5}
+
+def roofline_block(grid=GRID, dtype: str = "float32") -> dict:
+    """Per-kernel, per-spec roofline points: the roof at the kernel's
+    arithmetic intensity, the modeled achieved GFLOPS under the spec's
+    sustained-utilization class, the achieved fraction, machine balance,
+    and the spec's recorded paper reference — JSON-embeddable."""
+    block: dict = {"grid_shape": list(grid), "dtype": dtype, "specs": {},
+                   "kernels": {}}
+    names = hwspec.available_specs()
+    for n in names:
+        spec = hwspec.load_spec(n)
+        block["specs"][n] = dict(spec.describe(),
+                                 machine_balance=spec.hierarchy()
+                                 .machine_balance(dtype))
+    for op in (tiling.HDIFF, tiling.VADVC):
+        ai = op.arithmetic_intensity(dtype)
+        ests = perfmodel.estimate_by_hardware(op, grid, dtype, specs=names)
+        row: dict = {}
+        for n, est in ests.items():
+            spec = hwspec.load_spec(n)
+            peak = spec.peak_flops_for(dtype)
+            roof = min(peak, ai * spec.main.bandwidth_bytes_per_s)
+            ref = spec.reference_points.get(op.name, {})
+            row[n] = {"arithmetic_intensity": ai,
+                      "roof_gflops": roof / 1e9,
+                      "model_gflops": est.gflops,
+                      "roofline_fraction": est.gflops * 1e9 / roof,
+                      "bottleneck": est.bottleneck,
+                      "paper_gflops": ref.get("gflops")}
+        block["kernels"][op.name] = row
+    return block
 
 
 def run():
@@ -37,22 +69,21 @@ def run():
     hd_t = time_fn(jax.jit(href.hdiff), src)
     va_t = time_fn(jax.jit(vref.vadvc), us, wcon, up, ut, uts)
 
-    for name, op, t_us in (("hdiff", tiling.HDIFF, hd_t),
-                           ("vadvc", tiling.VADVC, va_t)):
-        ai32 = op.arithmetic_intensity("float32")
-        tuned = tune(op, GRID, "float32")
-        est = tuned.est
-        frac = perfmodel.roofline_fraction(est)
-        p9_roof = min(hw.POWER9_PEAK_FLOPS,
-                      ai32 * hw.POWER9_DRAM_BW) / 1e9
-        v5e_roof = min(hw.PEAK_FP32_FLOPS, ai32 * hw.HBM_BW) / 1e9
-        emit(f"fig1/{name}", t_us,
-             f"AI={ai32:.2f}flop/B p9_roof={p9_roof:.0f}GF "
-             f"paper_p9={PAPER_POWER9[name]}GF v5e_roof={v5e_roof:.0f}GF "
-             f"model_v5e={est.gflops:.0f}GF frac={frac:.2f}")
-    emit("fig1/machine_balance", 0.0,
-         f"v5e_bf16={hw.tpu_v5e().machine_balance(jnp.bfloat16):.0f}flop/B "
-         f"p9={hw.POWER9_PEAK_FLOPS / hw.POWER9_DRAM_BW:.1f}flop/B")
+    block = roofline_block()
+    for name, t_us in (("hdiff", hd_t), ("vadvc", va_t)):
+        row = block["kernels"][name]
+        parts = []
+        for sname, r in row.items():
+            parts.append(f"{sname}_roof={r['roof_gflops']:.0f}GF "
+                         f"{sname}_model={r['model_gflops']:.0f}GF")
+            if r["paper_gflops"] is not None:
+                parts.append(f"{sname}_paper={r['paper_gflops']}GF")
+        ai = row[next(iter(row))]["arithmetic_intensity"]
+        emit(f"fig1/{name}", t_us, f"AI={ai:.2f}flop/B " + " ".join(parts))
+    balances = " ".join(
+        f"{n}={s['machine_balance']:.1f}flop/B"
+        for n, s in block["specs"].items())
+    emit("fig1/machine_balance", 0.0, balances)
 
 
 if __name__ == "__main__":

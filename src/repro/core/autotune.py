@@ -11,9 +11,15 @@ hill-climbing mode for huge grids.
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, List, Optional, Sequence, Tuple
+import hashlib
+import json
+import os
+import tempfile
+import time
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 from repro.core import hierarchy as hw
+from repro.core import hwspec
 from repro.core import perfmodel
 from repro.core import tiling as _tiling
 from repro.core.tiling import OpSpec, TilePlan, candidate_tiles
@@ -75,16 +81,21 @@ def tune(op: OpSpec,
          hier: Optional[hw.Hierarchy] = None,
          chips: int = 1,
          measure: Optional[Callable[[TilePlan], float]] = None,
-         vmem_weight: float = 0.0) -> TunedResult:
+         vmem_weight: float = 0.0,
+         spec: Optional[hwspec.HardwareSpec] = None) -> TunedResult:
     """Pick the tile plan.
 
-    `measure`, when provided, is a wall-clock callable (seconds) used instead
-    of the analytic model — this is the "auto-tuned" mode of paper Fig. 6;
-    the analytic default is the "model-guided" mode.  `vmem_weight` lets the
-    caller trade resources for speed (0 => pure performance, like the paper's
-    red-circled Pareto picks).
+    `measure`, when provided, is a wall-clock callable (seconds; return
+    `math.inf` for candidates the kernel cannot execute) used instead of the
+    analytic model — this is the "auto-tuned" mode of paper Fig. 6; the
+    analytic default is the "model-guided" mode.  `spec` selects the machine
+    being modeled (candidate pruning uses its hierarchy; scoring its
+    sustained-utilization classes).  `vmem_weight` lets the caller trade
+    resources for speed (0 => pure performance, like the paper's red-circled
+    Pareto picks).
     """
-    hier = hier or hw.tpu_v5e()
+    if hier is None:
+        hier = spec.hierarchy() if spec is not None else hw.tpu_v5e()
     cands = candidate_tiles(op, grid_shape, dtype, hier)
     if not cands:
         raise ValueError(
@@ -93,7 +104,7 @@ def tune(op: OpSpec,
     scored: List[Tuple[float, int, int]] = []
     ests: List[perfmodel.PerfEstimate] = []
     for i, plan in enumerate(cands):
-        est = perfmodel.estimate(plan, hier, chips=chips)
+        est = perfmodel.estimate(plan, hier, chips=chips, spec=spec)
         t = measure(plan) if measure is not None else est.time_s
         scored.append((t, plan.vmem_bytes, i))
         ests.append(est)
@@ -125,10 +136,11 @@ _DYCORE_FLOPS_PER_POINT = _tiling.DYCORE_FUSED.flops_per_point
 def plan_k_steps(grid_shape: Sequence[int], dtype, mesh_shape,
                  *, n_fields: int = 4, halo: int = 2, max_k: int = 8,
                  hier: Optional[hw.Hierarchy] = None,
-                 latency_s: float = COLLECTIVE_LATENCY_S,
+                 latency_s: Optional[float] = None,
                  utilization: float = 0.85,
                  flops_per_point: Optional[float] = None,
-                 exchange_model: Optional[Callable] = None) -> int:
+                 exchange_model: Optional[Callable] = None,
+                 spec: Optional[hwspec.HardwareSpec] = None) -> int:
     """Pick the communication-avoiding depth k for a distributed stencil op.
 
     Modeled per-TIMESTEP cost of running the k-step round:
@@ -152,7 +164,11 @@ def plan_k_steps(grid_shape: Sequence[int], dtype, mesh_shape,
     """
     from repro.core import memmodel   # local import: memmodel is heavy
 
-    hier = hier or hw.tpu_v5e()
+    if hier is None:
+        hier = spec.hierarchy() if spec is not None else hw.tpu_v5e()
+    if latency_s is None:
+        latency_s = (spec.collective.latency_s if spec is not None
+                     else COLLECTIVE_LATENCY_S)
     nz, ny, nx = (int(g) for g in grid_shape)
     py, px = (int(s) for s in mesh_shape)
     ly, lx = ny // py, nx // px
@@ -185,11 +201,12 @@ def plan_k_steps(grid_shape: Sequence[int], dtype, mesh_shape,
 def resolve_k_steps(grid_shape: Sequence[int], dtype, mesh_shape,
                     *, n_fields: int = 4, halo: int = 2, max_k: int = 8,
                     hier: Optional[hw.Hierarchy] = None,
-                    latency_s: float = COLLECTIVE_LATENCY_S,
+                    latency_s: Optional[float] = None,
                     utilization: float = 0.85,
                     flops_per_point: Optional[float] = None,
                     exchange_model: Optional[Callable] = None,
-                    vmem_check: Optional[Callable] = None) -> int:
+                    vmem_check: Optional[Callable] = None,
+                    spec: Optional[hwspec.HardwareSpec] = None) -> int:
     """`plan_k_steps` clamped to what the VMEM budget actually fits.
 
     The exchange model's argmin can ask for a k whose working slab
@@ -204,7 +221,7 @@ def resolve_k_steps(grid_shape: Sequence[int], dtype, mesh_shape,
     k = plan_k_steps(grid_shape, dtype, mesh_shape, n_fields=n_fields,
                      halo=halo, max_k=max_k, hier=hier, latency_s=latency_s,
                      utilization=utilization, flops_per_point=flops_per_point,
-                     exchange_model=exchange_model)
+                     exchange_model=exchange_model, spec=spec)
     if vmem_check is None:
         # Local import: the kernel package imports this module at load time.
         from repro.kernels.dycore_fused import ops as fused_ops
@@ -223,3 +240,88 @@ def resolve_k_steps(grid_shape: Sequence[int], dtype, mesh_shape,
         except ValueError:
             k -= 1
     return k
+
+
+# ---------------------------------------------------------------------------
+# Measured (wall-clock) tuning support — the paper's "auto-tuned" mode.
+#
+# The analytic model above is the "model-guided" mode; `tune(measure=...)`
+# is the empirical one.  Because a wall-clock measurement is only meaningful
+# on the machine it ran on, measured picks are persisted to an on-disk cache
+# keyed on (plan cache key, hardware-spec fingerprint, jax backend): a plan
+# tuned once is reused by every later process on the same machine, and a
+# cache entry can never be replayed against a different spec or backend.
+# `weather/program.py::compile(tune="measure")` is the consumer.
+# ---------------------------------------------------------------------------
+
+# Process-wide counters, reset-able by tests and reported by bench-smoke to
+# prove the persistent cache round-trips across processes.
+TUNE_CACHE_STATS: Dict[str, int] = {"hits": 0, "misses": 0, "stores": 0}
+
+_TUNE_CACHE_ENV = "REPRO_TUNE_CACHE"
+
+
+def measure_walltime(fn: Callable[[], Any], repeats: int = 3) -> float:
+    """Median wall-clock seconds of `fn()` after one untimed warm-up call
+    (the warm-up absorbs jit compilation).  `fn` must block until the work
+    is done (e.g. call `block_until_ready`).  The planner looks this up as
+    `autotune.measure_walltime` at call time, so tests can monkeypatch it
+    to spy on (or fake) the measurement."""
+    fn()   # warm-up / compile
+    times = []
+    for _ in range(max(1, repeats)):
+        t0 = time.perf_counter()
+        fn()
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2]
+
+
+def tune_cache_dir() -> str:
+    """Cache directory: `$REPRO_TUNE_CACHE` or `~/.cache/repro/tune`."""
+    env = os.environ.get(_TUNE_CACHE_ENV)
+    if env:
+        return env
+    return os.path.join(os.path.expanduser("~"), ".cache", "repro", "tune")
+
+
+def tune_cache_key(program_key: Any, spec: hwspec.HardwareSpec,
+                   backend: str) -> str:
+    """Content key for one (program, machine, backend) tuning decision.
+    `program_key` is the planner's `plan_cache_key` (a frozen dataclass with
+    a deterministic repr); the spec contributes its content fingerprint so
+    editing a spec JSON invalidates every measurement made under it."""
+    payload = f"{program_key!r}|spec={spec.fingerprint}|backend={backend}"
+    return hashlib.sha256(payload.encode()).hexdigest()[:24]
+
+
+def tune_cache_load(key: str) -> Optional[Dict[str, Any]]:
+    """Load a persisted tuning decision; counts a hit or a miss."""
+    path = os.path.join(tune_cache_dir(), f"{key}.json")
+    try:
+        with open(path) as fh:
+            entry = json.load(fh)
+    except (OSError, json.JSONDecodeError):
+        TUNE_CACHE_STATS["misses"] += 1
+        return None
+    TUNE_CACHE_STATS["hits"] += 1
+    return entry
+
+
+def tune_cache_store(key: str, entry: Dict[str, Any]) -> None:
+    """Persist a tuning decision atomically (tmp + rename), so concurrent
+    processes racing on the same key both leave a valid file."""
+    cache_dir = tune_cache_dir()
+    os.makedirs(cache_dir, exist_ok=True)
+    fd, tmp = tempfile.mkstemp(dir=cache_dir, suffix=".tmp")
+    try:
+        with os.fdopen(fd, "w") as fh:
+            json.dump(entry, fh, sort_keys=True)
+        os.replace(tmp, os.path.join(cache_dir, f"{key}.json"))
+    except BaseException:
+        try:
+            os.unlink(tmp)
+        except OSError:
+            pass
+        raise
+    TUNE_CACHE_STATS["stores"] += 1

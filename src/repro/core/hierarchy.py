@@ -1,114 +1,78 @@
-"""TPU memory-hierarchy model — the FPGA URAM/BRAM/HBM analogue.
+"""TPU memory-hierarchy model — now a thin shim over `core.hwspec`.
 
 NERO (the paper) builds an application-specific scratchpad hierarchy out of the
 FPGA's heterogeneous memories (HBM -> URAM -> BRAM -> FF).  On TPU the same
 levels exist but are fixed silicon: HBM -> VMEM (software-managed scratchpad)
--> VREG.  This module is the single source of truth for capacities,
-bandwidths, and energy-per-byte used by the tile planner, the perf model, the
-autotuner, and the roofline analysis.
-
-All numbers are per-chip TPU v5e (the assignment's hardware constants), with
-energy coefficients from public literature (Horowitz ISSCC'14 scaled to 7nm,
-JEDEC HBM2 specs); they are *model* constants, labeled as such in benchmarks.
+-> VREG.  The numbers used to live here as literals; they are now loaded from
+the versioned `src/repro/specs/tpu_v5e.json` hardware spec, and this module
+keeps every historical name pointing at the same values so the tile planner,
+perf model, autotuner, and roofline analysis (and any external caller) are
+unaffected.  New code should take a `hwspec.HardwareSpec` instead — see
+`core/hwspec.py` for POWER9 and NERO specs and the cross-machine model.
 """
 
 from __future__ import annotations
 
-import dataclasses
+import warnings
 from typing import Dict
 
-import jax.numpy as jnp
+from repro.core import hwspec
+from repro.core.hwspec import (  # noqa: F401  (re-exported compatibility API)
+    Hierarchy,
+    MemoryLevel,
+    dtype_bytes,
+)
+
+_V5E = hwspec.load_spec("tpu_v5e")
 
 # ---------------------------------------------------------------------------
-# Per-chip hardware constants (TPU v5e — assignment-provided where given).
+# Per-chip hardware constants (TPU v5e), derived from the spec file.
 # ---------------------------------------------------------------------------
 
-PEAK_BF16_FLOPS = 197e12        # FLOP/s per chip (assignment constant)
-PEAK_FP32_FLOPS = PEAK_BF16_FLOPS / 4.0   # MXU fp32 passthrough estimate
-HBM_BYTES = 16 * 2**30          # 16 GiB HBM per chip
-HBM_BW = 819e9                  # B/s per chip (assignment constant)
-ICI_BW_PER_LINK = 50e9          # B/s per ICI link (assignment constant)
-ICI_LINKS = 4                   # v5e 2D torus: 4 links/chip
-VMEM_BYTES = 128 * 2**20        # 128 MiB VMEM per core
-VMEM_USABLE = 64 * 2**20        # budget we let the planner claim (pipeline
-                                # double-buffering + compiler headroom)
-VMEM_BW = 8 * HBM_BW            # VMEM is ~an order of magnitude faster; model 8x
-VREG_BYTES = 512 * 1024         # vector registers (order of magnitude)
-MXU_TILE = (128, 128)           # systolic array native tile
-VPU_LANES = (8, 128)            # sublane x lane layout granularity
+PEAK_BF16_FLOPS = _V5E.peak_flops["bfloat16"]
+PEAK_FP32_FLOPS = _V5E.peak_flops["float32"]
+HBM_BYTES = _V5E.main.capacity_bytes
+HBM_BW = _V5E.main.bandwidth_bytes_per_s
+ICI_BW_PER_LINK = _V5E.collective.bandwidth_bytes_per_s
+ICI_LINKS = _V5E.collective.links
+VMEM_BYTES = _V5E.near_physical_bytes   # physical VMEM per core
+VMEM_USABLE = _V5E.near.capacity_bytes  # budget the planner may claim
+VMEM_BW = _V5E.near.bandwidth_bytes_per_s
+VREG_BYTES = _V5E.reg.capacity_bytes
+MXU_TILE = _V5E.layout["mxu_tile"]
+VPU_LANES = _V5E.layout["vpu_lanes"]
 
 # Energy model (pJ/byte moved, pJ/flop) — used by benchmarks/energy.py.
-# HBM2 ~3.9 pJ/bit ≈ 31 pJ/B; on-chip SRAM ~0.1-0.2 pJ/bit; ICI ~10 pJ/B.
 ENERGY_PJ_PER_BYTE: Dict[str, float] = {
-    "hbm": 31.0,
-    "vmem": 1.5,
-    "vreg": 0.08,
-    "ici": 10.0,
-    "host": 62.0,   # PCIe/host DMA, the OCAPI analogue
+    "hbm": _V5E.main.energy_pj_per_byte,
+    "vmem": _V5E.near.energy_pj_per_byte,
+    "vreg": _V5E.reg.energy_pj_per_byte,
+    "ici": _V5E.collective.energy_pj_per_byte,
+    "host": _V5E.host_energy_pj_per_byte,   # PCIe/host DMA, the OCAPI analogue
 }
-ENERGY_PJ_PER_FLOP_BF16 = 0.15
-CHIP_IDLE_WATTS = 60.0
-CHIP_PEAK_WATTS = 170.0
-
-
-def dtype_bytes(dtype) -> int:
-    return jnp.dtype(dtype).itemsize
-
-
-@dataclasses.dataclass(frozen=True)
-class MemoryLevel:
-    """One level of the near-memory hierarchy."""
-
-    name: str
-    capacity_bytes: int
-    bandwidth_bytes_per_s: float
-    energy_pj_per_byte: float
-
-    def seconds_for(self, nbytes: int) -> float:
-        return nbytes / self.bandwidth_bytes_per_s
-
-    def energy_joules_for(self, nbytes: int) -> float:
-        return nbytes * self.energy_pj_per_byte * 1e-12
-
-
-@dataclasses.dataclass(frozen=True)
-class Hierarchy:
-    """The full per-chip hierarchy, NERO-style: far memory feeds near memory
-    feeds registers; the planner places tiles at the deepest level that fits."""
-
-    hbm: MemoryLevel
-    vmem: MemoryLevel
-    vreg: MemoryLevel
-    peak_flops_bf16: float = PEAK_BF16_FLOPS
-    peak_flops_fp32: float = PEAK_FP32_FLOPS
-    ici_bw: float = ICI_BW_PER_LINK
-
-    def level_for(self, nbytes: int) -> MemoryLevel:
-        """Deepest (fastest) level whose capacity holds `nbytes` (the paper's
-        greedy placement: URAM/BRAM if it fits, else HBM)."""
-        if nbytes <= self.vreg.capacity_bytes:
-            return self.vreg
-        if nbytes <= self.vmem.capacity_bytes:
-            return self.vmem
-        return self.hbm
-
-    def machine_balance(self, dtype=jnp.bfloat16) -> float:
-        """FLOP:byte ratio at which compute and HBM time are equal — the
-        roofline ridge point (paper Fig. 1)."""
-        peak = (self.peak_flops_bf16
-                if jnp.dtype(dtype).itemsize <= 2 else self.peak_flops_fp32)
-        return peak / self.hbm.bandwidth_bytes_per_s
+ENERGY_PJ_PER_FLOP_BF16 = _V5E.energy_pj_per_flop
+CHIP_IDLE_WATTS = _V5E.idle_watts
+CHIP_PEAK_WATTS = _V5E.peak_watts
 
 
 def tpu_v5e() -> Hierarchy:
-    return Hierarchy(
-        hbm=MemoryLevel("hbm", HBM_BYTES, HBM_BW, ENERGY_PJ_PER_BYTE["hbm"]),
-        vmem=MemoryLevel("vmem", VMEM_USABLE, VMEM_BW, ENERGY_PJ_PER_BYTE["vmem"]),
-        vreg=MemoryLevel("vreg", VREG_BYTES, 16 * VMEM_BW, ENERGY_PJ_PER_BYTE["vreg"]),
-    )
+    return _V5E.hierarchy()
 
 
-# The paper's POWER9 baseline, for the reproduction of Fig. 1 in
-# benchmarks/roofline_kernels.py (peak numbers from the paper's roofline plot).
-POWER9_PEAK_FLOPS = 1.0e12       # ~1 TFLOP/s fp32, 16 cores
-POWER9_DRAM_BW = 110e9           # ~110 GB/s host DRAM (measured in paper's Fig 1)
+# The paper's POWER9 baseline used to live here as two stray literals; it is
+# now the full `power9` hardware spec.  The old names still resolve (module
+# `__getattr__`) but warn — use `hwspec.load_spec("power9")` instead.
+_DEPRECATED = {
+    "POWER9_PEAK_FLOPS": lambda: hwspec.load_spec("power9").peak_flops["float32"],
+    "POWER9_DRAM_BW": lambda: hwspec.load_spec("power9").main.bandwidth_bytes_per_s,
+}
+
+
+def __getattr__(name: str):
+    if name in _DEPRECATED:
+        warnings.warn(
+            f"repro.core.hierarchy.{name} is deprecated; load the 'power9' "
+            f"hardware spec via repro.core.hwspec.load_spec('power9') instead",
+            DeprecationWarning, stacklevel=2)
+        return _DEPRECATED[name]()
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

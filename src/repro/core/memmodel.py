@@ -54,7 +54,7 @@ def _shard_bytes(shapes_tree, shard_tree) -> int:
 
 def estimate(cfg: ModelConfig, shape: ShapeConfig, mesh, p_shapes, p_shard,
              cache_shapes=None, cache_shard=None, *, microbatches: int = 1,
-             xent_chunk: int = 512) -> Dict[str, int]:
+             xent_chunk: int = 512, spec=None) -> Dict[str, int]:
     model_par = mesh.shape.get("model", 1)
     b_axes = shd.batch_sharding(mesh, shape.global_batch)
     dp = 1
@@ -94,7 +94,13 @@ def estimate(cfg: ModelConfig, shape: ShapeConfig, mesh, p_shapes, p_shard,
             out["logits"] = b_loc * vocab_loc * 4
 
     out["total"] = sum(out.values())
-    out["fits_16g"] = bool(out["total"] <= 16 * 2**30)
+    # Fit check against the target machine's main memory; the key keeps its
+    # historical name (the default spec's HBM is 16 GiB) — dry-run JSON and
+    # launch gating consume it.
+    if spec is None:
+        from repro.core import hwspec
+        spec = hwspec.default_spec()
+    out["fits_16g"] = bool(out["total"] <= spec.main.capacity_bytes)
     return out
 
 

@@ -5,17 +5,24 @@ for a TilePlan we derive the three roofline terms (compute / memory /
 collective), predicted time = max of the overlappable terms (dataflow
 pipelining overlaps load & compute, the paper's §3 design), and energy from
 per-level pJ/byte coefficients.
+
+The machine is an input: every entry point takes a `spec=` — a
+`hwspec.HardwareSpec` — and derives peaks, bandwidths, energy coefficients,
+and the per-kernel-class sustained utilizations from it.  The default spec is
+the TPU v5e the kernels are written for (numerically identical to the
+pre-spec literals); passing `power9` or `nero_ad9h7` models the paper's two
+machines.  When a spec's kernel class declares a MEASURED wall power (the
+paper power-metered each kernel), energy is that power times modeled time
+instead of the bottom-up traffic sum.
 """
 
 from __future__ import annotations
 
 import dataclasses
-import math
-from typing import Optional
-
-import jax.numpy as jnp
+from typing import Dict, Optional, Sequence
 
 from repro.core import hierarchy as hw
+from repro.core import hwspec
 from repro.core.tiling import TilePlan
 
 
@@ -30,6 +37,8 @@ class PerfEstimate:
     gflops: float            # useful GFLOP/s at predicted time
     energy_j: float
     bottleneck: str
+    hardware: Optional[str] = None      # spec name the model targeted
+    kernel_class: Optional[str] = None  # "streaming" | "solver"
 
     @property
     def gflops_per_watt(self) -> float:
@@ -39,15 +48,29 @@ class PerfEstimate:
         return self.gflops / max(watts, 1e-9)
 
 
+def gflops_per_watt(est: PerfEstimate) -> float:
+    """Module-level spelling of `PerfEstimate.gflops_per_watt` (0.0 for a
+    zero-time estimate rather than a division error)."""
+    return est.gflops_per_watt
+
+
 def estimate(plan: TilePlan,
              hier: Optional[hw.Hierarchy] = None,
              chips: int = 1,
              collective_bytes: float = 0.0,
-             utilization: float = 0.85) -> PerfEstimate:
+             utilization: Optional[float] = None,
+             spec: Optional[hwspec.HardwareSpec] = None) -> PerfEstimate:
     """Roofline-style time: terms overlap under the dataflow pipeline, so the
-    pipeline throughput is set by the slowest stage; `utilization` derates
-    peak numbers (HBM controllers, pipeline bubbles)."""
-    hier = hier or hw.tpu_v5e()
+    pipeline throughput is set by the slowest stage.  Peaks are derated by the
+    spec's per-kernel-class sustained utilizations (HBM controllers, pipeline
+    bubbles, the solver class's sequential-axis stalls); an explicit
+    `utilization` overrides both."""
+    spec = spec or hwspec.default_spec()
+    hier = hier or spec.hierarchy()
+    cls_name = hwspec.kernel_class_name(plan.op)
+    cls = spec.kernel_classes[cls_name]
+    bw_util = utilization if utilization is not None else cls.bw_utilization
+    fl_util = utilization if utilization is not None else cls.compute_utilization
     b = hw.dtype_bytes(plan.dtype)
     peak = hier.peak_flops_bf16 if b <= 2 else hier.peak_flops_fp32
 
@@ -55,45 +78,78 @@ def estimate(plan: TilePlan,
     hbm_bytes = plan.hbm_bytes_total
     vmem_bytes = hbm_bytes * 2.0   # staged in + consumed out of VMEM
 
-    compute_s = flops / (chips * peak * utilization)
-    memory_s = hbm_bytes / (chips * hier.hbm.bandwidth_bytes_per_s * utilization)
+    compute_s = flops / (chips * peak * fl_util)
+    memory_s = hbm_bytes / (chips * hier.hbm.bandwidth_bytes_per_s * bw_util)
     vmem_s = vmem_bytes / (chips * hier.vmem.bandwidth_bytes_per_s)
     coll_s = collective_bytes / (chips * hier.ici_bw) if collective_bytes else 0.0
 
     # Pipeline fill: one tile's worth of latency before steady state.
     fill_s = (plan.hbm_bytes_per_tile /
-              (hier.hbm.bandwidth_bytes_per_s * utilization))
+              (hier.hbm.bandwidth_bytes_per_s * bw_util))
     time_s = max(compute_s, memory_s, vmem_s, coll_s) + fill_s
 
     terms = {"compute": compute_s, "memory": memory_s,
              "vmem": vmem_s, "collective": coll_s}
     bottleneck = max(terms, key=terms.get)
 
-    energy = (hbm_bytes * hier.hbm.energy_pj_per_byte
-              + vmem_bytes * hier.vmem.energy_pj_per_byte
-              + collective_bytes * hw.ENERGY_PJ_PER_BYTE["ici"]
-              + flops * hw.ENERGY_PJ_PER_FLOP_BF16) * 1e-12
-    energy += hw.CHIP_IDLE_WATTS * time_s * chips   # static power floor
+    if cls.watts is not None:
+        # The spec recorded this class's measured sustained wall power
+        # (paper Table 3 / Fig. 8); trust it over the traffic model.
+        energy = cls.watts * time_s * chips
+    else:
+        energy = (hbm_bytes * hier.hbm.energy_pj_per_byte
+                  + vmem_bytes * hier.vmem.energy_pj_per_byte
+                  + collective_bytes * spec.collective.energy_pj_per_byte
+                  + flops * spec.energy_pj_per_flop) * 1e-12
+        energy += spec.idle_watts * time_s * chips   # static power floor
 
     gflops = flops / time_s / 1e9 if time_s > 0 else 0.0
     return PerfEstimate(plan=plan, compute_s=compute_s, memory_s=memory_s,
                         collective_s=coll_s, vmem_s=vmem_s, time_s=time_s,
-                        gflops=gflops, energy_j=energy, bottleneck=bottleneck)
+                        gflops=gflops, energy_j=energy, bottleneck=bottleneck,
+                        hardware=spec.name, kernel_class=cls_name)
 
 
 def roofline_fraction(est: PerfEstimate,
                       hier: Optional[hw.Hierarchy] = None,
-                      chips: int = 1) -> float:
+                      chips: int = 1,
+                      spec: Optional[hwspec.HardwareSpec] = None) -> float:
     """Achieved fraction of the roofline bound for this op's arithmetic
     intensity (1.0 = sitting on the roof)."""
-    hier = hier or hw.tpu_v5e()
+    if hier is None:
+        hier = (spec or (hwspec.load_spec(est.hardware) if est.hardware
+                         else hwspec.default_spec())).hierarchy()
     b = hw.dtype_bytes(est.plan.dtype)
     peak = hier.peak_flops_bf16 if b <= 2 else hier.peak_flops_fp32
     ai = est.plan.op.arithmetic_intensity(est.plan.dtype)
     roof = min(peak, ai * hier.hbm.bandwidth_bytes_per_s) * chips
     if est.plan.op.flops_per_point == 0.0:
         # bandwidth kernels (copy): fraction of peak HBM bandwidth instead.
+        if est.time_s == 0:
+            return 0.0
         achieved_bw = est.plan.hbm_bytes_total / est.time_s
         return achieved_bw / (hier.hbm.bandwidth_bytes_per_s * chips)
+    if est.time_s == 0:
+        return 0.0
     achieved = est.plan.flops_total / est.time_s
     return achieved / roof
+
+
+def estimate_by_hardware(op, grid_shape: Sequence[int], dtype,
+                         specs: Optional[Sequence[str]] = None,
+                         chips: int = 1,
+                         collective_bytes: float = 0.0
+                         ) -> Dict[str, PerfEstimate]:
+    """The paper's cross-machine table, one op at a time: re-tune the tile
+    plan FOR each spec's hierarchy (each machine gets its own best window,
+    as NERO and POWER9 do in the paper) and model it under that spec.
+    Returns `{spec_name: PerfEstimate}` for every shipped spec by default."""
+    from repro.core import autotune   # local import: autotune imports us
+
+    out: Dict[str, PerfEstimate] = {}
+    for name in (specs or hwspec.available_specs()):
+        spec = hwspec.load_spec(name)
+        tuned = autotune.tune(op, grid_shape, dtype, spec=spec, chips=chips)
+        out[name] = estimate(tuned.plan, chips=chips,
+                             collective_bytes=collective_bytes, spec=spec)
+    return out

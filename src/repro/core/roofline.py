@@ -89,6 +89,10 @@ class RooflineTerms:
     model_flops_total: float
     useful_flops_ratio: float       # MODEL_FLOPS / (HLO flops x chips)
     chips: int
+    # Peak FLOP/s of the machine the terms were computed against (the spec's,
+    # not a global constant), so `roofline_fraction` stays consistent with
+    # `analyze(spec=...)` even for non-default machines.
+    peak_flops: float = hw.PEAK_BF16_FLOPS
 
     @property
     def step_time_s(self) -> float:
@@ -101,23 +105,31 @@ class RooflineTerms:
         if self.step_time_s == 0:
             return 0.0
         achieved = self.model_flops_total / self.step_time_s
-        return achieved / (self.chips * hw.PEAK_BF16_FLOPS)
+        return achieved / (self.chips * self.peak_flops)
 
 
 def analyze(cost: Dict[str, float], coll: Dict[str, int], chips: int,
-            model_flops_total: float, dtype_bytes: int = 2
-            ) -> RooflineTerms:
+            model_flops_total: float, dtype_bytes: int = 2,
+            spec=None) -> RooflineTerms:
     """Memory term prefers the TPU-fusion-emulated byte count
     ("bytes fused", core/hlo_cost.py) when present; the raw operand+output
     count ("bytes accessed") reflects XLA:CPU's much finer fusion
-    granularity and over-states TPU HBM traffic several-fold."""
+    granularity and over-states TPU HBM traffic several-fold.  `spec`
+    (a `hwspec.HardwareSpec`) selects the machine whose peaks the terms are
+    measured against; default is the TPU v5e the artifact compiled for."""
     flops = float(cost.get("flops", 0.0))
     byts = float(cost.get("bytes fused") or cost.get("bytes accessed", 0.0))
     wire = wire_bytes(coll)
-    peak = (hw.PEAK_BF16_FLOPS if dtype_bytes <= 2 else hw.PEAK_FP32_FLOPS)
+    if spec is None:
+        peak = (hw.PEAK_BF16_FLOPS if dtype_bytes <= 2 else hw.PEAK_FP32_FLOPS)
+        hbm_bw, link_bw = hw.HBM_BW, hw.ICI_BW_PER_LINK
+    else:
+        peak = spec.peak_flops["bfloat16" if dtype_bytes <= 2 else "float32"]
+        hbm_bw = spec.main.bandwidth_bytes_per_s
+        link_bw = spec.collective.bandwidth_bytes_per_s
     compute_s = flops / peak
-    memory_s = byts / hw.HBM_BW
-    collective_s = wire / hw.ICI_BW_PER_LINK
+    memory_s = byts / hbm_bw
+    collective_s = wire / link_bw
     terms = {"compute": compute_s, "memory": memory_s,
              "collective": collective_s}
     dominant = max(terms, key=terms.get)
@@ -127,7 +139,7 @@ def analyze(cost: Dict[str, float], coll: Dict[str, int], chips: int,
         collective_bytes_per_device=wire, compute_s=compute_s,
         memory_s=memory_s, collective_s=collective_s, dominant=dominant,
         model_flops_total=model_flops_total, useful_flops_ratio=ratio,
-        chips=chips)
+        chips=chips, peak_flops=peak)
 
 
 def model_flops(param_count: int, active_param_count: int, tokens: int,

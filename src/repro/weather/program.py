@@ -40,6 +40,7 @@ builds a program and compiles it.
 from __future__ import annotations
 
 import dataclasses
+import math
 from typing import Any, Dict, Optional, Tuple
 
 import jax
@@ -48,10 +49,10 @@ import numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.compat import shard_map as _shard_map
-from repro.core import autotune, memmodel, perfmodel
+from repro.core import autotune, hwspec, memmodel, perfmodel, tiling
 from repro.kernels.dycore_fused import ops as fused_ops
 from repro.weather import stencil_ops as _sops
-from repro.weather.fields import PROGNOSTIC, WeatherState
+from repro.weather.fields import PROGNOSTIC, WeatherState, zeros_state
 from repro.weather.stencil_ops import (StencilOpDef, get_stencil_op,
                                        register_stencil_op,
                                        registered_stencil_ops)
@@ -81,7 +82,10 @@ class StencilProgram:
     `dtype` is the state/compute precision policy; `exchange_dtype` the
     wire precision of the packed halo exchange (e.g. `"bfloat16"`).
     `halo` defaults to the op's declared stencil reach and only exists so
-    a mismatched expectation fails loudly."""
+    a mismatched expectation fails loudly.  `hardware` names the
+    `hwspec` spec the plan's MODELED numbers target (`"tpu_v5e"`,
+    `"power9"`, `"nero_ad9h7"`; None = the session default spec) — it
+    changes the model, never the lowering."""
 
     grid_shape: Tuple[int, int, int]            # (nz, ny, nx)
     ensemble: int = 1
@@ -95,6 +99,7 @@ class StencilProgram:
     k_steps: Any = "auto"                       # int or "auto"
     exchange_dtype: Optional[str] = None
     op: str = "dycore"
+    hardware: Optional[str] = None              # hwspec spec name, or default
 
     def __post_init__(self):
         object.__setattr__(self, "grid_shape",
@@ -149,6 +154,11 @@ class StencilProgram:
         if self.variant == "kstep" and self.k_steps == 1:
             raise ValueError("variant='kstep' needs k_steps >= 2 (or "
                              "'auto'); k_steps=1 IS the whole-state step")
+        if self.hardware is not None:
+            try:
+                hwspec.load_spec(self.hardware)
+            except KeyError as e:
+                raise ValueError(str(e)) from None
 
     @property
     def n_fields(self) -> int:
@@ -397,6 +407,14 @@ class ExecutionPlan:
         return get_stencil_op(self.program.op)
 
     @property
+    def hardware(self) -> str:
+        """Spec name the plan's modeled numbers target (never None)."""
+        return self.program.hardware or hwspec.default_spec_name()
+
+    def hardware_spec(self) -> hwspec.HardwareSpec:
+        return hwspec.load_spec(self.hardware)
+
+    @property
     def distributed(self) -> bool:
         return self.mesh is not None
 
@@ -480,6 +498,7 @@ class ExecutionPlan:
                 "variant": prog.variant,
                 "k_steps": prog.k_steps,
                 "exchange_dtype": prog.exchange_dtype,
+                "hardware": prog.hardware,
             },
             "variant": self.variant,
             "k_steps": self.k_steps,
@@ -521,20 +540,73 @@ class ExecutionPlan:
             rep["exchange_model"] = opdef.exchange_model(self)
         else:
             rep["exchange_model"] = None
-        # Modeled TPU performance of the resolved tile plan — the per-op
-        # GFLOPS / GFLOPS-per-watt axis of the paper's two-kernel table.
+        # Modeled performance of the resolved tile plan on the program's
+        # target hardware spec — the per-op GFLOPS / GFLOPS-per-watt axis
+        # of the paper's two-kernel table.
         if self.tile_plan is not None:
             est = self._cache.get("perf_est")
             if est is None:
-                est = perfmodel.estimate(self.tile_plan)
+                est = perfmodel.estimate(self.tile_plan,
+                                         spec=self.hardware_spec())
                 self._cache["perf_est"] = est
             rep["model"] = {"time_us": est.time_s * 1e6,
                             "gflops": est.gflops,
                             "gflops_per_watt": est.gflops_per_watt,
-                            "bottleneck": est.bottleneck}
+                            "bottleneck": est.bottleneck,
+                            "hardware": est.hardware,
+                            "kernel_class": est.kernel_class,
+                            "spec_fingerprint":
+                                self.hardware_spec().fingerprint}
         else:
             rep["model"] = None
+        rep["model_by_hardware"] = self.model_by_hardware()
         return rep
+
+    def model_by_hardware(self, grid_shape: Optional[Tuple[int, int, int]]
+                          = None) -> Dict[str, Any]:
+        """The paper's cross-machine two-kernel table, modeled: for hdiff
+        and vadvc (the paper's kernels) and every shipped hardware spec,
+        re-tune the tile window FOR that machine's hierarchy and model
+        time / GFLOPS / GFLOPS-per-watt under its spec, plus the modeled
+        speedup over the POWER9 baseline.  `grid_shape` defaults to the
+        program's grid (benchmarks evaluate it at the paper's domain);
+        cached per grid — it is a handful of analytic autotune sweeps."""
+        grid = tuple(int(g) for g in (grid_shape or self.program.grid_shape))
+        cached = self._cache.get(("model_by_hardware", grid))
+        if cached is not None:
+            return cached
+        spec_names = hwspec.available_specs()
+        out: Dict[str, Any] = {
+            "grid_shape": list(grid),
+            "dtype": self.program.dtype,
+            "baseline": "power9",
+            "specs": {n: hwspec.load_spec(n).describe() for n in spec_names},
+            "kernels": {},
+        }
+        for kname in ("hdiff", "vadvc"):
+            try:
+                ests = perfmodel.estimate_by_hardware(
+                    autotune.get_op(kname), grid, self.program.dtype,
+                    specs=spec_names)
+            except ValueError:
+                # No legal tile at this grid for this kernel (tiny smoke
+                # grids): the table row is simply absent, never a crash.
+                continue
+            t_p9 = ests["power9"].time_s if "power9" in ests else 0.0
+            row: Dict[str, Any] = {}
+            for name, est in ests.items():
+                row[name] = {
+                    "time_us": est.time_s * 1e6,
+                    "gflops": est.gflops,
+                    "gflops_per_watt": est.gflops_per_watt,
+                    "bottleneck": est.bottleneck,
+                    "kernel_class": est.kernel_class,
+                    "speedup_vs_power9": (t_p9 / est.time_s
+                                          if est.time_s > 0 else 0.0),
+                }
+            out["kernels"][kname] = row
+        self._cache[("model_by_hardware", grid)] = out
+        return out
 
     # -- internals ----------------------------------------------------------
     def _check_state(self, state: WeatherState) -> None:
@@ -603,7 +675,9 @@ class ExecutionPlan:
 def compile(program: StencilProgram, mesh: Optional[Mesh] = None, *,
             ax_e: Optional[str] = "pod", ax_y: str = "data",
             ax_x: str = "model", interpret: Optional[bool] = None,
-            prefetch_w: Optional[bool] = None) -> ExecutionPlan:
+            prefetch_w: Optional[bool] = None,
+            tune: Optional[str] = None,
+            _tile_ty: Optional[int] = None) -> ExecutionPlan:
     """Resolve `program`'s whole execution strategy once; return the plan.
 
     Works over any REGISTERED stencil op: the exchange schedule, the
@@ -618,10 +692,23 @@ def compile(program: StencilProgram, mesh: Optional[Mesh] = None, *,
     chip-local kernel + interior crop.  Overrides: `interpret` (default:
     auto — native Pallas on TPU, interpreter elsewhere) and `prefetch_w`
     (the dycore k-step kernel's double-buffered `w` DMA pipeline; default:
-    on outside interpret mode)."""
+    on outside interpret mode).
+
+    `tune` picks the tuning mode: None / `"model"` resolve the tile from
+    the analytic model (the paper's "model-guided" mode); `"measure"`
+    re-tunes the y-window EMPIRICALLY — each candidate plan is compiled
+    and wall-clock timed on THIS process's jax backend (the paper's
+    "auto-tuned" mode, `autotune.tune(measure=...)`) and the winner is
+    persisted to an on-disk cache keyed on (program, hardware-spec
+    fingerprint, backend), so a plan is measured once and every later
+    process reuses the pick.  `_tile_ty` is the internal pin the measured
+    path re-enters with."""
     if not isinstance(program, StencilProgram):
         raise TypeError(f"compile wants a StencilProgram, got "
                         f"{type(program).__name__}")
+    if tune not in (None, "model", "measure"):
+        raise ValueError(f"tune={tune!r}: expected None, 'model', or "
+                         f"'measure'")
     opdef = get_stencil_op(program.op)
     nz, ny, nx = program.grid_shape
     nf = program.n_fields
@@ -714,6 +801,12 @@ def compile(program: StencilProgram, mesh: Optional[Mesh] = None, *,
     # --- tile plan: the op's own resolver over its registered spaces ---
     tile_plan = opdef.resolve_tile(variant, compute_grid, program.dtype,
                                    nf, program.ensemble, k)
+    if _tile_ty is not None and tile_plan is not None:
+        # The measured-tuning pin: same plan, y-window overridden by the
+        # empirical winner (always a candidate of the same tile space).
+        tile_plan = dataclasses.replace(
+            tile_plan, tile=(tile_plan.tile[0], int(_tile_ty),
+                             tile_plan.tile[2]))
     ty = tile_plan.tile[1] if tile_plan is not None else None
 
     # --- structural costs per round (trace-verifiable, see trace_stats) ---
@@ -728,7 +821,7 @@ def compile(program: StencilProgram, mesh: Optional[Mesh] = None, *,
 
     resolved_prefetch = (not interpret) if prefetch_w is None else prefetch_w
 
-    return ExecutionPlan(
+    plan = ExecutionPlan(
         program=program, variant=variant, k_steps=k, tile_ty=ty,
         tile_plan=tile_plan, local_grid=(nz, ly, lx),
         compute_grid=compute_grid, rides=rides, interpret=interpret,
@@ -736,6 +829,104 @@ def compile(program: StencilProgram, mesh: Optional[Mesh] = None, *,
         pallas_calls_per_round=pallas_calls,
         collectives_per_round=collectives, mesh=mesh,
         mesh_axes=(ax_e, ax_y, ax_x))
+    if tune == "measure" and _tile_ty is None:
+        plan = _measured_retune(plan, program, mesh, ax_e=ax_e, ax_y=ax_y,
+                                ax_x=ax_x, interpret=interpret,
+                                prefetch_w=prefetch_w)
+    return plan
+
+
+def _measured_retune(plan: ExecutionPlan, program: StencilProgram,
+                     mesh: Optional[Mesh], *, ax_e, ax_y, ax_x,
+                     interpret, prefetch_w) -> ExecutionPlan:
+    """The `tune="measure"` path: empirically pick the y-window.
+
+    The candidate set is the analytic tuner's own (the op's tile space at
+    the plan's compute grid), scored by `autotune.tune(measure=...)` with
+    a wall-clock measure callable: a candidate that keeps the kernel's
+    streamed axes whole (same z/x window as the resolved plan — the
+    y-window is the lowering's one pinnable knob) is compiled with its
+    `ty` pinned and its round timed on this process's backend; any other
+    candidate scores `inf`.  The winning ty is persisted keyed on
+    (program cache key + shards, spec fingerprint, backend) — a second
+    process compiles the winner directly, measuring nothing."""
+    if plan.tile_plan is None:
+        return plan   # oracle variant: no tile to tune
+    spec = plan.hardware_spec()
+    backend = jax.default_backend()
+    shards = plan.shards
+    cache_key = autotune.tune_cache_key(
+        (plan_cache_key(program), shards), spec, backend)
+    entry = autotune.tune_cache_load(cache_key)
+    if entry is None:
+        entry = _measure_tile_candidates(plan, program, mesh, ax_e=ax_e,
+                                         ax_y=ax_y, ax_x=ax_x,
+                                         interpret=interpret,
+                                         prefetch_w=prefetch_w)
+        entry.update({"backend": backend, "spec": spec.name,
+                      "spec_fingerprint": spec.fingerprint,
+                      "k_steps": plan.k_steps})
+        autotune.tune_cache_store(cache_key, entry)
+    ty = entry.get("tile_ty")
+    if ty is None or int(ty) == plan.tile_ty:
+        return plan
+    return compile(program, mesh=mesh, ax_e=ax_e, ax_y=ax_y, ax_x=ax_x,
+                   interpret=interpret, prefetch_w=prefetch_w,
+                   _tile_ty=int(ty))
+
+
+def _measure_tile_candidates(plan: ExecutionPlan, program: StencilProgram,
+                             mesh: Optional[Mesh], *, ax_e, ax_y, ax_x,
+                             interpret, prefetch_w,
+                             max_measured: int = 8) -> Dict[str, Any]:
+    """Wall-clock-score the tile candidates; returns the cache entry."""
+    base = plan.tile_plan
+    state = zeros_state(program.grid_shape, program.ensemble,
+                        program.dtype, names=program.fields)
+    timed: Dict[int, float] = {}
+    # Distinct measurable ty values, analytically ordered; cap how many we
+    # actually time (each costs a compile + a few steps).
+    cands = tiling.candidate_tiles(base.op, base.grid_shape, program.dtype,
+                                   plan.hardware_spec().hierarchy())
+    ty_pool = sorted({p.tile[1] for p in cands
+                      if p.tile[0] == base.tile[0]
+                      and p.tile[2] == base.tile[2]})
+    if len(ty_pool) > max_measured:
+        stride = len(ty_pool) / max_measured
+        ty_pool = sorted({ty_pool[int(i * stride)]
+                          for i in range(max_measured)})
+    allowed = set(ty_pool)
+
+    def measure(cand: tiling.TilePlan) -> float:
+        ty = cand.tile[1]
+        if (cand.tile[0] != base.tile[0] or cand.tile[2] != base.tile[2]
+                or ty not in allowed):
+            return math.inf
+        if ty not in timed:
+            try:
+                cp = compile(program, mesh=mesh, ax_e=ax_e, ax_y=ax_y,
+                             ax_x=ax_x, interpret=interpret,
+                             prefetch_w=prefetch_w, _tile_ty=ty)
+
+                def run_once():
+                    jax.block_until_ready(cp.step(state))
+                timed[ty] = autotune.measure_walltime(run_once)
+            except Exception:   # noqa: BLE001 — kernel rejects this window
+                timed[ty] = math.inf
+        return timed[ty]
+
+    try:
+        tuned = autotune.tune(base.op, base.grid_shape, program.dtype,
+                              spec=plan.hardware_spec(), measure=measure)
+        best_ty = int(tuned.plan.tile[1])
+        best_s = timed.get(best_ty)
+    except ValueError:
+        best_ty, best_s = None, None
+    if best_s is None or not math.isfinite(best_s):
+        best_ty, best_s = None, None      # nothing ran: keep analytic pick
+    return {"tile_ty": plan.tile_ty if best_ty is None else best_ty,
+            "measured_s": best_s,
+            "measured": {str(k): v for k, v in sorted(timed.items())}}
 
 
 # The historical dycore entry point: same planner, op defaults to "dycore".

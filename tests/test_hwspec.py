@@ -1,0 +1,296 @@
+"""Hardware-spec subsystem: spec loading, validation, model threading,
+deprecation shims, and the measured-autotune persistent cache.
+
+The specs under src/repro/specs/ are the single source of truth for every
+machine the perf models can describe; these tests pin (a) the schema
+validator's error reporting, (b) the content fingerprint, (c) backward
+compatibility of the hierarchy shim and the v5e-default perfmodel path,
+(d) the paper's cross-machine table out of `model_by_hardware`, and
+(e) the two-process measured-tuning cache round trip with a spy on
+`autotune.measure_walltime` (no re-measurement on a cache hit)."""
+
+import json
+import os
+import subprocess
+import sys
+import warnings
+
+import pytest
+
+from repro.core import autotune, hwspec, perfmodel, tiling
+from repro.weather.program import StencilProgram, compile as compile_program
+
+
+# ---------------------------------------------------------------- loading
+
+def test_available_specs_and_load():
+    names = hwspec.available_specs()
+    assert set(names) >= {"tpu_v5e", "power9", "nero_ad9h7"}
+    for n in names:
+        spec = hwspec.load_spec(n)
+        assert spec.name == n
+        assert len(spec.fingerprint) == 12
+        # load is cached: same object back
+        assert hwspec.load_spec(n) is spec
+
+
+def test_fingerprint_is_content_hash(tmp_path):
+    src = os.path.join(hwspec.spec_dir(), "power9.json")
+    with open(src) as fh:
+        d = json.load(fh)
+    with open(tmp_path / "power9.json", "w") as fh:
+        json.dump(d, fh)
+    copy = hwspec.load_spec("power9", directory=str(tmp_path))
+    assert copy.fingerprint == hwspec.load_spec("power9").fingerprint
+    d["idle_watts"] = 61.0
+    with open(tmp_path / "tweaked.json", "w") as fh:
+        json.dump(dict(d, name="tweaked"), fh)
+    tweaked = hwspec.load_spec("tweaked", directory=str(tmp_path))
+    assert tweaked.fingerprint != copy.fingerprint
+
+
+def test_spec_name_must_match_filename(tmp_path):
+    with open(tmp_path / "mismatch.json", "w") as fh:
+        json.dump({"name": "other"}, fh)
+    with pytest.raises(hwspec.SpecValidationError):
+        hwspec.load_spec("mismatch", directory=str(tmp_path))
+
+
+def test_default_spec_env(monkeypatch):
+    assert hwspec.default_spec_name() == "tpu_v5e"
+    monkeypatch.setenv("REPRO_HWSPEC", "power9")
+    assert hwspec.default_spec_name() == "power9"
+    assert hwspec.default_spec().jax_backend == "cpu"
+
+
+# ------------------------------------------------------------- validation
+
+def _valid_dict():
+    with open(os.path.join(hwspec.spec_dir(), "tpu_v5e.json")) as fh:
+        return json.load(fh)
+
+
+def _level(d, role):
+    return next(e for e in d["memory_levels"] if e["role"] == role)
+
+
+@pytest.mark.parametrize("breakage,field", [
+    (lambda d: d.pop("peak_flops"), "peak_flops"),
+    (lambda d: d["memory_levels"].remove(_level(d, "main")),
+     "memory_levels"),
+    (lambda d: _level(d, "main").pop("bandwidth_bytes_per_s"),
+     "bandwidth_bytes_per_s"),
+    (lambda d: _level(d, "near").__setitem__("capacity_bytes", -1),
+     "capacity_bytes"),
+    (lambda d: d["kernel_classes"]["streaming"].__setitem__(
+        "bw_utilization", 1.5), "kernel_classes.streaming.bw_utilization"),
+    (lambda d: d["collective"].pop("latency_s"), "collective.latency_s"),
+    (lambda d: d.__setitem__("schema_version", 99), "schema_version"),
+    (lambda d: d.__setitem__("idle_watts", 1e6), "idle_watts"),
+])
+def test_validation_names_bad_field(breakage, field):
+    d = _valid_dict()
+    breakage(d)
+    with pytest.raises(hwspec.SpecValidationError) as exc:
+        hwspec.spec_from_dict(d, where="test")
+    assert field in str(exc.value)
+
+
+def test_unknown_kernel_class_name_rejected():
+    with pytest.raises(KeyError):
+        hwspec.kernel_class_name("warp")
+
+
+# --------------------------------------------------- hierarchy shim compat
+
+def test_hierarchy_constants_derive_from_v5e_spec():
+    from repro.core import hierarchy as hw
+    spec = hwspec.load_spec("tpu_v5e")
+    assert hw.PEAK_BF16_FLOPS == spec.peak_flops["bfloat16"]
+    assert hw.HBM_BW == spec.main.bandwidth_bytes_per_s
+    assert hw.VMEM_USABLE == spec.near.capacity_bytes
+    assert hw.VMEM_BYTES == spec.near_physical_bytes
+    assert hw.CHIP_PEAK_WATTS == spec.peak_watts
+    h = hw.tpu_v5e()
+    assert h.hbm.capacity_bytes == spec.main.capacity_bytes
+
+
+def test_power9_deprecation_shims_warn():
+    from repro.core import hierarchy as hw
+    p9 = hwspec.load_spec("power9")
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        flops = hw.POWER9_PEAK_FLOPS
+        bw = hw.POWER9_DRAM_BW
+    assert flops == p9.peak_flops["float32"]
+    assert bw == p9.main.bandwidth_bytes_per_s
+    deps = [w for w in rec if issubclass(w.category, DeprecationWarning)]
+    assert len(deps) == 2
+    assert "power9" in str(deps[0].message)
+    with pytest.raises(AttributeError):
+        hw.POWER9_NONSENSE
+
+
+# --------------------------------------------------------- model threading
+
+def test_estimate_default_spec_matches_legacy():
+    plan = autotune.tune(tiling.HDIFF, (64, 256, 256), "float32").plan
+    legacy = perfmodel.estimate(plan)
+    v5e = perfmodel.estimate(plan, spec=hwspec.load_spec("tpu_v5e"))
+    assert legacy.time_s == v5e.time_s
+    assert legacy.gflops == v5e.gflops
+    assert legacy.energy_j == v5e.energy_j
+
+
+def _zeroed(est):
+    import dataclasses
+    return dataclasses.replace(est, time_s=0.0)
+
+
+def test_gflops_per_watt_zero_time():
+    est = perfmodel.estimate(
+        autotune.tune(tiling.HDIFF, (8, 128, 128), "float32").plan)
+    assert perfmodel.gflops_per_watt(est) > 0.0
+    assert perfmodel.gflops_per_watt(_zeroed(est)) == 0.0
+
+
+def test_roofline_zero_flop_copy_is_bandwidth_bound():
+    plan = autotune.tune(tiling.COPY, (8, 128, 128), "float32").plan
+    est = perfmodel.estimate(plan)
+    assert plan.op.flops_per_point == 0.0
+    assert est.gflops == 0.0
+    assert est.bottleneck == "memory"
+    assert est.time_s > 0.0
+    # copy kernels score as fraction of peak HBM bandwidth, in (0, 1]
+    frac = perfmodel.roofline_fraction(est)
+    assert 0.0 < frac <= 1.0
+    assert perfmodel.roofline_fraction(_zeroed(est)) == 0.0
+
+
+def test_roofline_zero_time_flop_kernel():
+    est = perfmodel.estimate(
+        autotune.tune(tiling.HDIFF, (8, 128, 128), "float32").plan)
+    assert perfmodel.roofline_fraction(est) > 0.0
+    assert perfmodel.roofline_fraction(_zeroed(est)) == 0.0
+
+
+def test_kernel_class_assignment():
+    assert hwspec.kernel_class_name(tiling.HDIFF) == "streaming"
+    assert hwspec.kernel_class_name(tiling.VADVC) == "solver"
+    p9 = hwspec.load_spec("power9")
+    tuned = autotune.tune(tiling.VADVC, (64, 256, 256), "float32", spec=p9)
+    est = perfmodel.estimate(tuned.plan, spec=p9)
+    assert est.hardware == "power9"
+    assert est.kernel_class == "solver"
+    # solver class carries a measured wall-power calibration
+    watts = est.energy_j / est.time_s
+    assert watts == pytest.approx(p9.kernel_class("solver").watts)
+
+
+def test_program_hardware_field_validated():
+    with pytest.raises(ValueError):
+        StencilProgram(grid_shape=(4, 16, 16), hardware="cray1")
+    prog = StencilProgram(grid_shape=(4, 16, 16), hardware="power9")
+    plan = compile_program(prog, interpret=True)
+    rep = plan.report()
+    assert rep["program"]["hardware"] == "power9"
+    assert rep["model"]["hardware"] == "power9"
+    assert rep["model"]["spec_fingerprint"] == \
+        hwspec.load_spec("power9").fingerprint
+
+
+def test_model_by_hardware_reproduces_paper_table():
+    plan = compile_program(StencilProgram(grid_shape=(4, 16, 16)),
+                           interpret=True)
+    mbh = plan.model_by_hardware((64, 256, 256))
+    assert set(mbh["specs"]) == set(hwspec.available_specs())
+    assert mbh["baseline"] == "power9"
+    for kernel in ("hdiff", "vadvc"):
+        rows = mbh["kernels"][kernel]
+        t_p9 = rows["power9"]["time_us"]
+        assert rows["power9"]["speedup_vs_power9"] == pytest.approx(1.0)
+        for name, row in rows.items():
+            # speedup is arithmetic over the same table's times
+            assert row["speedup_vs_power9"] == pytest.approx(
+                t_p9 / row["time_us"], rel=1e-6)
+    # the paper's headline numbers (Table: NERO vs POWER9)
+    hd = mbh["kernels"]["hdiff"]["nero_ad9h7"]
+    va = mbh["kernels"]["vadvc"]["nero_ad9h7"]
+    assert hd["speedup_vs_power9"] == pytest.approx(12.7, rel=0.15)
+    assert hd["gflops_per_watt"] == pytest.approx(21.01, rel=0.15)
+    assert va["speedup_vs_power9"] == pytest.approx(5.3, rel=0.15)
+    assert va["gflops_per_watt"] == pytest.approx(1.61, rel=0.15)
+    assert mbh["kernels"]["hdiff"]["power9"]["gflops"] == \
+        pytest.approx(58.5, rel=0.05)
+    assert mbh["kernels"]["vadvc"]["power9"]["gflops"] == \
+        pytest.approx(29.1, rel=0.05)
+
+
+def test_execution_fidelity_block():
+    fid = hwspec.execution_fidelity()
+    assert fid["spec"] == hwspec.default_spec_name()
+    assert fid["spec_fingerprint"] == hwspec.default_spec().fingerprint
+    assert isinstance(fid["interpret"], bool)
+    assert isinstance(fid["walltime_trustworthy"], bool)
+    import jax
+    if jax.default_backend() != "tpu":
+        assert fid["interpret"] and not fid["walltime_trustworthy"]
+
+
+# ------------------------------------------------- measured-autotune cache
+
+_TUNE_SNIPPET = r"""
+import json
+from repro.core import autotune
+calls = {"n": 0}
+_real = autotune.measure_walltime
+def _spy(fn, repeats=3):
+    calls["n"] += 1
+    return _real(fn, repeats=1)
+autotune.measure_walltime = _spy
+from repro.weather import program as P
+plan = P.compile(P.StencilProgram(grid_shape=(4, 16, 16)), tune="measure")
+print("TUNE=" + json.dumps({"tile_ty": plan.tile_ty,
+                            "measure_calls": calls["n"],
+                            "stats": autotune.TUNE_CACHE_STATS}))
+"""
+
+
+def _tune_subprocess(cache_dir):
+    env = dict(os.environ)
+    env["REPRO_TUNE_CACHE"] = str(cache_dir)
+    env.setdefault("PYTHONPATH", "src")
+    r = subprocess.run([sys.executable, "-c", _TUNE_SNIPPET], env=env,
+                       capture_output=True, text=True, timeout=600)
+    for line in r.stdout.splitlines():
+        if line.startswith("TUNE="):
+            return json.loads(line[len("TUNE="):])
+    raise AssertionError(f"tune subprocess failed: {r.stderr[-2000:]}")
+
+
+def test_measured_tune_persistent_cache_spy(tmp_path):
+    first = _tune_subprocess(tmp_path)
+    assert first["measure_calls"] > 0
+    assert first["stats"] == {"hits": 0, "misses": 1, "stores": 1}
+    second = _tune_subprocess(tmp_path)
+    assert second["measure_calls"] == 0          # no re-measurement
+    assert second["stats"] == {"hits": 1, "misses": 0, "stores": 0}
+    assert second["tile_ty"] == first["tile_ty"]
+    files = list(tmp_path.iterdir())
+    assert len(files) == 1 and files[0].suffix == ".json"
+
+
+def test_tune_cache_key_depends_on_spec_and_backend():
+    v5e = hwspec.load_spec("tpu_v5e")
+    p9 = hwspec.load_spec("power9")
+    k1 = autotune.tune_cache_key("prog", v5e, "cpu")
+    assert k1 == autotune.tune_cache_key("prog", v5e, "cpu")
+    assert k1 != autotune.tune_cache_key("prog", p9, "cpu")
+    assert k1 != autotune.tune_cache_key("prog", v5e, "tpu")
+    assert k1 != autotune.tune_cache_key("prog2", v5e, "cpu")
+
+
+def test_tune_invalid_mode_rejected():
+    with pytest.raises(ValueError):
+        compile_program(StencilProgram(grid_shape=(4, 16, 16)),
+                        interpret=True, tune="magic")
