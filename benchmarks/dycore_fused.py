@@ -56,6 +56,8 @@ from benchmarks.roofline_kernels import roofline_block
 from repro.core import hierarchy as hw
 from repro.core import memmodel, perfmodel, tiling, trace_stats
 from repro.weather import fields
+from repro.weather import stencil_ops
+from repro.weather.pipeline import PipelineProgram
 from repro.weather.program import (DycoreProgram, StencilProgram,
                                    compile_dycore)
 
@@ -236,6 +238,8 @@ def _run():
     model_grid = MODEL_GRID
     per_kernel = {}
     for key, op in (("hdiff", "hdiff"), ("vadvc", "vadvc"),
+                    ("vadvc_update", "vadvc_update"),
+                    ("hadv_upwind", "hadv_upwind"),
                     ("fused", "dycore")):
         plan = compile_dycore(StencilProgram(
             grid_shape=grid, ensemble=ENSEMBLE, op=op,
@@ -261,6 +265,69 @@ def _run():
              f"model_gflops={mrep['model']['gflops']:.0f} "
              f"model_gflops_per_watt={mrep['model']['gflops_per_watt']:.2f}"
              f"{interp_note}")
+
+    # --- flagship CHAINED pipeline (ISSUE 10): the three stages as ONE
+    # plan — one fused exchange pair per direction, launches in order on
+    # resident operands.  Measured walltime vs the three solo rows above;
+    # modeled rows at the paper's domain carry the chained-vs-sequential
+    # HBM stream (intermediates stay out of HBM) and the packed-wire model
+    # (2 exchange rounds regardless of chain length vs one round set PER
+    # STAGE sequentially — the chain ships deeper footprints, so its win
+    # is ROUND COUNT/latency, not bytes; both sides are reported).
+    pipe_stages = ("hadv_upwind", "vadvc_update", "hdiff")
+    pipe_plan = compile_dycore(PipelineProgram(
+        grid_shape=grid, ensemble=ENSEMBLE, coeff=0.05,
+        variant="whole_state", k_steps=1, stages=pipe_stages))
+    t_pipe = time_fn(pipe_plan.step, st, iters=iters, warmup=warmup)
+    t_solo_sum = sum(per_kernel[k_]["walltime_us"] for k_ in pipe_stages)
+    rep = pipe_plan.report()
+    mrep = compile_dycore(PipelineProgram(
+        grid_shape=model_grid, ensemble=ENSEMBLE, coeff=0.05,
+        variant="whole_state", k_steps=1, stages=pipe_stages)).report()
+    mt = mrep["traffic"]
+
+    def _wire(opdef):
+        return memmodel.packed_exchange_model(
+            model_grid, "float32", rides=opdef.memmodel_rides(n_fields),
+            k=1, shards=(2, 2), compute_halo=(opdef.halo, opdef.halo))
+
+    w_chain = _wire(stencil_ops.get_stencil_op(rep["op"]))
+    w_stage = {op: _wire(stencil_ops.get_stencil_op(op))
+               for op in pipe_stages}
+    wire = {
+        "chained_bytes": w_chain["bytes_kstep"],
+        "sequential_bytes": sum(w["bytes_kstep"]
+                                for w in w_stage.values()),
+        "chained_rounds": w_chain["rounds_kstep"],
+        "sequential_rounds": sum(w["rounds_kstep"]
+                                 for w in w_stage.values()),
+        "by_stage_bytes": {op: w["bytes_kstep"]
+                           for op, w in w_stage.items()},
+    }
+    per_kernel["pipeline"] = {
+        "op": rep["op"],
+        "stages": list(pipe_stages),
+        "walltime_us": t_pipe,
+        "walltime_sequential_us": t_solo_sum,
+        "modeled_gflops": mrep["model"]["gflops"],
+        "modeled_gflops_per_watt": mrep["model"]["gflops_per_watt"],
+        "modeled_time_us": mrep["model"]["time_us"],
+        "flops_per_point": rep["footprint"]["flops_per_point"],
+        "pallas_calls_per_round": rep["pallas_calls_per_round"],
+        "hbm_chained_per_round": mt["chained_per_round"],
+        "hbm_sequential_per_round": mt["sequential_per_round"],
+        "hbm_chained_reduction_x": mt["chained_reduction_x"],
+        "hbm_sequential_by_stage": mt["sequential_by_stage"],
+        "wire": wire,
+        "plan": rep,
+        "model_plan": mrep,
+    }
+    emit("dycore_fused/per_kernel_pipeline", t_pipe,
+         f"grid={grid} stages={'->'.join(pipe_stages)} "
+         f"vs_sequential={t_solo_sum / max(t_pipe, 1e-9):.2f}x "
+         f"hbm_reduction={mt['chained_reduction_x']:.2f}x "
+         f"wire_rounds={wire['chained_rounds']}v{wire['sequential_rounds']}"
+         f"{interp_note}")
 
     # Modeled HBM traffic at the paper's domain: ONE model-grid plan per
     # dtype; its report() embeds the memmodel accounting at the plan's own

@@ -92,6 +92,21 @@ def main():
     st = plan.run(st, 3)   # 1 k-step round + a ragged 1-step tail round
     ok = bool(jnp.isfinite(st.fields["t"]).all())
     print(f"plan.run(3 steps): finite={ok}")
+
+    # Chain registered ops into ONE plan: the planner back-propagates the
+    # stages' reach into a single fused exchange and runs the launches in
+    # order on resident operands — bit-identical to the solo programs.
+    from repro.weather.pipeline import PipelineProgram
+    pplan = compile(PipelineProgram(
+        grid_shape=small, coeff=0.05,
+        stages=("hadv_upwind", "vadvc_update", "hdiff")))
+    prep = pplan.report()
+    print(f"compile(pipeline): stages=3 "
+          f"launches/round={prep['pallas_calls_per_round']} "
+          f"merged fields ride="
+          f"{prep['footprint']['rides'][0]['depth_y']} "
+          f"hbm_reduction={prep['traffic']['chained_reduction_x']:.2f}x")
+    st = pplan.step(st)
     print("quickstart OK")
 
 

@@ -39,7 +39,9 @@ OP_SPECS = {
     spec.name: spec
     for spec in (_tiling.HDIFF, _tiling.VADVC, _tiling.COPY,
                  _tiling.LRU_SCAN, _tiling.DYCORE_FUSED,
-                 _tiling.DYCORE_WHOLE_STATE, _tiling.DYCORE_KSTEP)
+                 _tiling.DYCORE_WHOLE_STATE, _tiling.DYCORE_KSTEP,
+                 _tiling.HADV_UPWIND, _tiling.VADVC_UPDATE,
+                 _tiling.ASSELIN)
 }
 
 

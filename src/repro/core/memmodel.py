@@ -350,6 +350,43 @@ def kstep_exchange_model(grid_shape, dtype, *, n_fields: int = 4,
     return m
 
 
+def pipeline_step_traffic(chain_spec, stage_specs, grid_shape, dtype, *,
+                          tile=None, k_steps: int = 1) -> Dict[str, float]:
+    """Chained-vs-sequential HBM accounting of a fused stage chain
+    (`weather/pipeline.py`): the chained bound streams the chain's operand
+    UNION once per round (`chain_spec`, synthesized by
+    `tiling.pipeline_spec` — intermediates stay resident between stages),
+    the sequential bound is the sum of each stage run as its own solo
+    program (`stage_specs`: `(OpSpec, n_fields)` pairs — every stage
+    re-reads its inputs from and re-writes its outputs to main memory).
+    The gap is exactly the inter-stage state round-trip the pipeline
+    planner eliminates by ordering launches so stage i's outputs are
+    stage i+1's resident inputs.
+
+    Returns the chain's `stencil_op_traffic` dict extended with
+    `sequential_per_round`, `sequential_by_stage`, and
+    `chained_reduction_x` (sequential / chained; > 1 whenever the chain
+    has more than one stage touching shared operands)."""
+    n_chain = max(int(nf) for _, nf in stage_specs)
+    out = stencil_op_traffic(chain_spec, grid_shape, dtype,
+                             n_fields=n_chain, tile=tile, k_steps=k_steps)
+    by_stage: Dict[str, int] = {}
+    seq = 0
+    for i, (spec, nf) in enumerate(stage_specs):
+        t = stencil_op_traffic(spec, grid_shape, dtype, n_fields=int(nf),
+                               tile=tile, k_steps=k_steps)
+        label = spec.name
+        if label in by_stage:
+            label = f"{label}#{i}"
+        by_stage[label] = t["stream_per_round"]
+        seq += t["stream_per_round"]
+    out["chained_per_round"] = out["stream_per_round"]
+    out["sequential_per_round"] = int(seq)
+    out["sequential_by_stage"] = by_stage
+    out["chained_reduction_x"] = seq / max(out["stream_per_round"], 1)
+    return out
+
+
 def stencil_op_traffic(spec, grid_shape, dtype, *, n_fields: int = 1,
                        tile=None, k_steps: int = 1) -> Dict[str, float]:
     """Modeled HBM traffic of one step of a registered stencil op, derived

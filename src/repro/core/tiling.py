@@ -105,6 +105,52 @@ DYCORE_FUSED = OpSpec(
     scratch_fields=6)
 
 
+# hadv_upwind: first-order donor-cell horizontal advection.  The stencil
+# reaches ONE point backward in y and x only (the rides in the registry are
+# asymmetric); the tile model keeps the symmetric one-sided halo convention.
+HADV_UPWIND = OpSpec(
+    name="hadv_upwind", fields_in=1, fields_out=1, halo=(0, 1, 1),
+    seq_axes=(), parallel_axes=(0, 1, 2), flops_per_point=5.0)
+
+# vadvc_update: the paper's ablation composition — the vadvc Thomas solve
+# fused with the point-wise leapfrog update (no hdiff).  Same 7 input
+# streams and z-sequential geometry as vadvc, but two outputs (new field +
+# stage tendency) and the +2 update flops.
+VADVC_UPDATE = OpSpec(
+    name="vadvc_update", fields_in=7, fields_out=2, halo=(0, 0, 1),
+    seq_axes=(0,), parallel_axes=(1, 2), flops_per_point=40.0,
+    scratch_fields=3)
+
+# asselin: point-wise leapfrog time filter from stored tendencies —
+# f' = f + coeff * (tens - stage_tens).  Three input streams, one output,
+# zero halo (the registry's zero-exchange op).
+ASSELIN = OpSpec(
+    name="asselin", fields_in=3, fields_out=1, halo=(0, 0, 0),
+    seq_axes=(), parallel_axes=(0, 1, 2), flops_per_point=3.0)
+
+
+def pipeline_spec(name: str, stage_specs: Sequence[OpSpec], *,
+                  fields_in: float, fields_out: int,
+                  halo: Tuple[int, int, int]) -> OpSpec:
+    """Synthesize the tile space of a fused stage chain (`weather/
+    pipeline.py`): ONE pass streams the union of the stages' operands
+    (`fields_in`/`fields_out`, computed by the pipeline planner from its
+    operand bindings) while intermediates stay resident, so flops are the
+    SUM over stages but the byte streams are not.  Sequential axes union
+    (one z-sequential stage pins the whole chain's z), scratch takes the
+    max simultaneous working set, and `halo` is the chain's accumulated
+    one-sided reach."""
+    if not stage_specs:
+        raise ValueError("pipeline needs at least one stage spec")
+    seq = tuple(sorted({a for s in stage_specs for a in s.seq_axes}))
+    par = tuple(sorted(set(range(3)) - set(seq)))
+    return OpSpec(
+        name=name, fields_in=float(fields_in), fields_out=int(fields_out),
+        halo=tuple(int(h) for h in halo), seq_axes=seq, parallel_axes=par,
+        flops_per_point=float(sum(s.flops_per_point for s in stage_specs)),
+        scratch_fields=max(s.scratch_fields for s in stage_specs))
+
+
 def snap_to_divisor(t: int, n: int, lo: int = 2) -> int:
     """Largest divisor of `n` that is `<= t` and `>= lo`; falls back to `n`
     itself when no divisor lands in `[lo, t]`.

@@ -1,0 +1,1 @@
+"""NERO kernel package: hadv_upwind (horizontal advection, upwind flux)."""

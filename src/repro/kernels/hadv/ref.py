@@ -1,0 +1,36 @@
+"""Pure-jnp oracle for first-order upwind horizontal advection.
+
+The COSMO dycore advects every prognostic field horizontally each large
+step; the donor-cell (upwind) flux form with unit positive velocities is
+the textbook building block:
+
+    f' = f - cfl * ((f - f[y-1]) + (f - f[x-1]))
+
+Layout: (z, y, x).  The stencil only reaches *backward* (the wind blows
+from low y / low x), so the halo is asymmetric: one point on the low side
+of each horizontal axis, zero on the high side — which is exactly why the
+op earns its own `OperandRide` shape in the registry instead of reusing
+hdiff's symmetric one.  The 1-wide low-side boundary ring passes through
+unchanged (interior-only loops, like hdiff's ring).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+DEFAULT_CFL = 0.1   # dt * u / dx for the unit-velocity donor cell
+
+
+def hadv_upwind(src: jnp.ndarray, cfl: float = DEFAULT_CFL) -> jnp.ndarray:
+    """Upwind advection step.  src: (nz, ny, nx) with ny, nx >= 2.
+
+    Returns same shape; row 0 and column 0 equal src (low-side ring)."""
+    src = jnp.asarray(src)
+    f = src.astype(jnp.float32) if src.dtype == jnp.bfloat16 else src
+
+    c = f[:, 1:, 1:]
+    ym = f[:, :-1, 1:]
+    xm = f[:, 1:, :-1]
+    interior = c - cfl * ((c - ym) + (c - xm))
+    out = f.at[:, 1:, 1:].set(interior)
+    return out.astype(src.dtype)

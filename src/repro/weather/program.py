@@ -176,6 +176,11 @@ class StencilProgram:
     @classmethod
     def from_json(cls, d: Dict[str, Any]) -> "StencilProgram":
         d = dict(d)
+        if "stages" in d and cls is StencilProgram:
+            # A serialized PipelineProgram: dispatch to the subclass (late
+            # import — pipeline.py builds on this module).
+            from repro.weather.pipeline import PipelineProgram
+            return PipelineProgram.from_json(d)
         d["grid_shape"] = tuple(d["grid_shape"])
         d["fields"] = tuple(d["fields"])
         return cls(**d)
@@ -499,6 +504,12 @@ class ExecutionPlan:
                 "k_steps": prog.k_steps,
                 "exchange_dtype": prog.exchange_dtype,
                 "hardware": prog.hardware,
+                # A PipelineProgram's chain: report()["program"] must
+                # round-trip through StencilProgram.from_json like
+                # to_json() does (serving checkpoints persist it).
+                **({"stages": [st.describe()
+                               for st in getattr(prog, "stages")]}
+                   if getattr(prog, "stages", None) else {}),
             },
             "variant": self.variant,
             "k_steps": self.k_steps,
@@ -744,12 +755,17 @@ def compile(program: StencilProgram, mesh: Optional[Mesh] = None, *,
                     program.grid_shape, program.dtype,
                     rides=opdef.memmodel_rides(nf), k=kk, shards=(py, px),
                     compute_halo=(kk * halo, kk * halo))
+            if opdef.kstep_vmem_check is not None:
+                # The op declares its OWN in-kernel k-step legality.
+                vmem_check = opdef.kstep_vmem_check(program, (py, px))
+            elif opdef.inkernel_kstep:
+                vmem_check = None     # the fused dycore's default check
+            else:
+                vmem_check = lambda kk: None
             k = autotune.resolve_k_steps(
                 program.grid_shape, program.dtype, (py, px), n_fields=nf,
                 halo=halo, flops_per_point=opdef.flops_per_point,
-                exchange_model=exchange_model,
-                vmem_check=None if opdef.inkernel_kstep
-                else (lambda kk: None))
+                exchange_model=exchange_model, vmem_check=vmem_check)
 
     # --- execution variant ---
     variant = program.variant

@@ -22,15 +22,29 @@ schedule, collective/launch counts, traffic and k-step models are all
 derived from the footprint — no op-specific branches in the planner.
 Registered out of the box:
 
-  "dycore"  — the fused compound step (vadvc + point-wise + hdiff), with
-              the in-kernel k-step round;
-  "hdiff"   — compound horizontal diffusion alone (fields only, (2,2)/(2,2)
-              footprint; k-step rounds run k launches on a k·2-deep halo);
-  "vadvc"   — vertical advection alone (updates the stage tendencies; the
-              only exchanged operand is wcon's RIGHT staggering column,
-              a `(0, 1)` x-ride that lowers to ONE ppermute).
+  "dycore"       — the fused compound step (vadvc + point-wise + hdiff),
+                   with the in-kernel k-step round;
+  "hdiff"        — compound horizontal diffusion alone (fields only,
+                   (2,2)/(2,2) footprint; the k-step round is ONE
+                   `hdiff_kstep_pallas` launch on a k·2-deep halo);
+  "vadvc"        — vertical advection alone (updates the stage tendencies;
+                   the only exchanged operand is wcon's RIGHT staggering
+                   column, a `(0, 1)` x-ride that lowers to ONE ppermute);
+  "vadvc_update" — the paper's ablation composition: vadvc fused with the
+                   point-wise leapfrog update (writes fields AND
+                   stage_tens; no hdiff);
+  "hadv_upwind"  — first-order upwind horizontal advection; its donor-cell
+                   stencil reaches BACKWARD only, so its rides are
+                   asymmetric ((1,0) in y and x);
+  "asselin"      — point-wise leapfrog time filter from the stored
+                   tendencies: zero rides, zero collectives (exercises the
+                   empty-direction elision path end to end).
 
 `register_stencil_op` admits new operators without touching the planner.
+Ops that additionally provide `apply_stage` can ride inside a
+`weather/pipeline.py::PipelineProgram`: the hook returns the op's
+FULL-SLAB stage function (no exchange, no crop — the pipeline planner owns
+both), which is how a chain keeps intermediates resident between stages.
 """
 
 from __future__ import annotations
@@ -46,9 +60,12 @@ from repro.kernels.dycore_fused import ops as fused_ops
 from repro.kernels.dycore_fused.fused import (fused_dycore_kstep_pallas,
                                               fused_dycore_pallas,
                                               fused_dycore_whole_state_pallas)
+from repro.kernels.hadv import ops as hadv_ops
+from repro.kernels.hadv import ref as hadv_ref
+from repro.kernels.hadv.hadv import hadv_pallas
 from repro.kernels.hdiff import ops as hdiff_ops
 from repro.kernels.hdiff import ref as hdiff_ref
-from repro.kernels.hdiff.hdiff import hdiff_pallas
+from repro.kernels.hdiff.hdiff import hdiff_kstep_pallas, hdiff_pallas
 from repro.kernels.vadvc import ops as vadvc_ops
 from repro.kernels.vadvc import ref as vadvc_ref
 from repro.kernels.vadvc.vadvc import vadvc_pallas
@@ -111,7 +128,18 @@ class StencilOpDef:
       or None to derive generically from the rides (a collective per mesh
       direction and side anything rides);
     * `traffic(plan)` / `exchange_model(plan)` -> the report()'s modeled
-      HBM / wire-byte blocks.
+      HBM / wire-byte blocks;
+    * `apply_stage(prog, names, interpret, use_ref)` -> the op's FULL-SLAB
+      stage function `(fields, wconp, tens, stage_tens) -> (new_fields,
+      new_stage_tens)` for pipeline chaining (`weather/pipeline.py`): all
+      dict values are padded slabs, `names` the stage's bound fields, and
+      the op must neither exchange nor crop — the pipeline planner owns
+      the fused exchange and the final interior crop.  None => the op
+      cannot ride in a pipeline;
+    * `kstep_vmem_check(program, shards)` -> per-k legality callable for
+      `autotune.resolve_k_steps` — ops with their OWN in-kernel k-step
+      round (not the fused dycore's) declare how a candidate k's working
+      slab is checked.
     """
 
     name: str
@@ -139,6 +167,10 @@ class StencilOpDef:
     traffic: Optional[Callable] = dataclasses.field(
         default=None, compare=False, repr=False)
     exchange_model: Optional[Callable] = dataclasses.field(
+        default=None, compare=False, repr=False)
+    apply_stage: Optional[Callable] = dataclasses.field(
+        default=None, compare=False, repr=False)
+    kstep_vmem_check: Optional[Callable] = dataclasses.field(
         default=None, compare=False, repr=False)
 
     # -- footprint-derived accounting ---------------------------------------
@@ -459,16 +491,40 @@ def _hdiff_resolve_tile(variant, compute_grid, dtype, n_fields, ensemble,
     return hdiff_ops.resolve_tile(compute_grid, dtype)
 
 
+def _hdiff_kstep_ty(Y: int, ty: int, k: int) -> int:
+    """The in-kernel k-step window: the divisor of the slab height `Y`
+    closest to the tuned `ty` with at least `max(2, 2k)` rows — each
+    in-slab step shrinks the window's valid interior by 2 rows per side,
+    so smaller windows would self-corrupt before the round ends.  `Y` is
+    always a legal fallback (the deep-ride compile check keeps
+    `Y = ly + 4k > 2k`)."""
+    lo = max(2, 2 * k)
+    cands = [d for d in range(lo, Y + 1) if Y % d == 0]
+    return min(cands, key=lambda d: (abs(d - ty), d))
+
+
+def _hdiff_kstep_vmem_check(program, shards):
+    """Per-k legality for `autotune.resolve_k_steps`: the k-step round
+    must find a legal tuned window on the k·2-padded local slab."""
+    nz, ny, nx = program.grid_shape
+    py, px = shards
+
+    def check(kk):
+        hdiff_ops.resolve_tile(
+            (nz, ny // py + 4 * kk, nx // px + 4 * kk), program.dtype)
+    return check
+
+
 def _hdiff_shard_local(plan):
     """Chip-local hdiff round, ALL variants: ONE packed exchange per
     direction at the k-scaled footprint depth, then the local compute —
     oracle / one launch per field / one launch for the whole state (the
     fully-z-parallel stencil folds (ensemble, field, z) into the kernel's
-    batch axis) / k sequential whole-state launches on the k·2-deep halo
-    (validity shrinks HALO per local step; the crop keeps the k-step-valid
-    interior) — and the interior crop.  With 1 shard the exchange
-    degenerates to periodic wrap-padding, so this same lowering IS the
-    single-chip step."""
+    batch axis) / ONE `hdiff_kstep_pallas` launch that iterates the k
+    local steps with the slab held in VMEM (validity shrinks HALO per
+    in-slab step; the crop keeps the k-step-valid interior) — and the
+    interior crop.  With 1 shard the exchange degenerates to periodic
+    wrap-padding, so this same lowering IS the single-chip step."""
     prog = plan.program
     names = prog.fields
     coeff, variant, interp = prog.coeff, plan.variant, plan.interpret
@@ -500,9 +556,18 @@ def _hdiff_shard_local(plan):
         elif variant == "per_field":
             fs = jnp.concatenate([one_launch(fs[:, i:i + 1])
                                   for i in range(nf)], axis=1)
-        else:   # whole_state (k == 1) or kstep (k launches, one exchange)
-            for _ in range(k):
-                fs = one_launch(fs)
+        elif k == 1:   # whole_state
+            fs = one_launch(fs)
+        else:
+            # kstep: the WHOLE round in ONE launch (ROADMAP item 2) — the
+            # kernel iterates the k local steps with each window's slab
+            # held in VMEM, matching the dycore's one-launch-per-round
+            # contract.  Bit-equal to k sequential launches: every step
+            # round-trips through the storage dtype in-kernel.
+            out = hdiff_kstep_pallas(fs.reshape(-1, Y, X), coeff=coeff,
+                                     ty=_hdiff_kstep_ty(Y, ty, k),
+                                     k_steps=k, interpret=interp)
+            fs = out.reshape(fs.shape)
         out = fs[..., hy_lo:hy_lo + ly, hx_lo:hx_lo + lx]
         new_fields = {n: out[:, i] for i, n in enumerate(names)}
         return new_fields, dict(stage_tens)
@@ -519,6 +584,30 @@ def _hdiff_traffic(plan, model_ty):
     return memmodel.stencil_op_traffic(
         autotune.get_op("hdiff"), prog.grid_shape, prog.dtype,
         n_fields=prog.n_fields, tile=tile, k_steps=plan.k_steps)
+
+
+def _hdiff_apply_stage(prog, names, interpret, use_ref):
+    """Full-slab hdiff stage for pipeline chaining: the bound fields fold
+    into the kernel's batch axis; the window is re-tuned on the ACTUAL
+    slab (merged pipeline rides make it wider than the solo compute grid
+    — harmless, the kernel is bitwise tile-invariant)."""
+    coeff = prog.coeff
+
+    def fn(fields, wconp, tens, stage_tens):
+        fs = jnp.stack([fields[n] for n in names], axis=1)
+        e, nb, nz, Y, X = fs.shape
+        if use_ref:
+            out = hdiff_ref.hdiff(fs.reshape(-1, Y, X), coeff=coeff)
+        else:
+            ty = hdiff_ops.plan_tile((e * nb * nz, Y, X), fs.dtype)
+            out = hdiff_pallas(fs.reshape(-1, Y, X), coeff=coeff, ty=ty,
+                               interpret=interpret)
+        out = out.reshape(fs.shape)
+        new_fields = dict(fields)
+        for i, n in enumerate(names):
+            new_fields[n] = out[:, i]
+        return new_fields, dict(stage_tens)
+    return fn
 
 
 # ---------------------------------------------------------------------------
@@ -540,6 +629,29 @@ def _vadvc_resolve_tile(variant, compute_grid, dtype, n_fields, ensemble,
         return None
     return vadvc_ops.resolve_tile(
         _vadvc_fold_grid(variant, compute_grid, n_fields, ensemble), dtype)
+
+
+def _vadvc_launch_whole_state(fs, wconp, ts, ss, tile, interp):
+    """ONE vadvc launch over stacked (e, nf, nz, ly, lx) operands —
+    (ensemble, field) folded into the kernel's y axis, the shared wcon
+    (already carrying its +1 staggering column) replicated across the
+    field fold.  Returns the stage-tendency stack.  Shared by the solo
+    whole-state lowering and the `vadvc`/`vadvc_update` pipeline stages;
+    `tile` extents are re-snapped to the actual fold (the Thomas sweep is
+    bitwise tile-invariant, so snapping never changes results)."""
+    e, nf, nz, ly, lx = fs.shape
+    _, tj, ti = tile
+    ti = tiling.snap_to_divisor(ti, lx, lo=1)
+    tj = tiling.snap_to_divisor(tj, e * nf * ly, lo=1)
+
+    def foldf(a):            # (e, nf, nz, ly, lx') -> (nz, e*nf*ly, lx')
+        return a.transpose(2, 0, 1, 3, 4).reshape(nz, e * nf * ly,
+                                                  a.shape[-1])
+
+    wrep = jnp.broadcast_to(wconp[:, None], (e, nf) + wconp.shape[1:])
+    out = vadvc_pallas(foldf(fs), foldf(wrep), foldf(fs), foldf(ts),
+                       foldf(ss), tj=tj, ti=ti, interpret=interp)
+    return out.reshape(nz, e, nf, ly, lx).transpose(1, 2, 0, 3, 4)
 
 
 def _vadvc_shard_local(plan):
@@ -595,24 +707,36 @@ def _vadvc_shard_local(plan):
 
         # whole_state: ONE launch — (ensemble, field) folded into y, the
         # shared wcon replicated across the field fold.
-        nf = len(names)
-        tj_l = tiling.snap_to_divisor(tj, e * nf * ly, lo=1)
         stk = lambda d: _dycore.stack_state(d, names)  # (e,nf,nz,ly,lx)
-
-        def foldf(a):            # (e, nf, nz, ly, lx') -> (nz, e*nf*ly, lx')
-            return a.transpose(2, 0, 1, 3, 4).reshape(nz, e * nf * ly,
-                                                      a.shape[-1])
-
-        wrep = jnp.broadcast_to(wconp[:, None],
-                                (e, nf) + wconp.shape[1:])
-        out = vadvc_pallas(foldf(stk(fields)), foldf(wrep),
-                           foldf(stk(fields)), foldf(stk(tens)),
-                           foldf(stk(stage_tens)), tj=tj_l, ti=ti,
-                           interpret=interp)
-        out = out.reshape(nz, e, nf, ly, lx).transpose(1, 2, 0, 3, 4)
+        out = _vadvc_launch_whole_state(stk(fields), wconp, stk(tens),
+                                        stk(stage_tens), tile, interp)
         new_stage = {n: out[:, i] for i, n in enumerate(names)}
         return dict(fields), new_stage
     return local
+
+
+def _vadvc_apply_stage(prog, names, interpret, use_ref):
+    """Full-slab vadvc stage: updates the bound stage tendencies only
+    (fields pass through).  `wconp` is the pipeline's wcon slab — one
+    column wider on the high-x side than the field slabs, exactly the
+    solo lowering's staggering contract."""
+    def fn(fields, wconp, tens, stage_tens):
+        new_stage = dict(stage_tens)
+        if use_ref:
+            for n in names:
+                new_stage[n] = jax.vmap(vadvc_ref.vadvc)(
+                    fields[n], wconp, fields[n], tens[n], stage_tens[n])
+            return dict(fields), new_stage
+        stk = lambda d: jnp.stack([d[n] for n in names], axis=1)
+        fs = stk(fields)
+        e, nb, nz, Y, X = fs.shape
+        tile = vadvc_ops.resolve_tile((nz, e * nb * Y, X), fs.dtype).tile
+        out = _vadvc_launch_whole_state(fs, wconp, stk(tens),
+                                        stk(stage_tens), tile, interpret)
+        for i, n in enumerate(names):
+            new_stage[n] = out[:, i]
+        return dict(fields), new_stage
+    return fn
 
 
 def _vadvc_traffic(plan, model_ty):
@@ -656,18 +780,20 @@ _HDIFF_OP = register_stencil_op(StencilOpDef(
     variants=("unfused", "per_field", "whole_state", "kstep"),
     tile_spaces=(("per_field", "hdiff"), ("whole_state", "hdiff"),
                  ("kstep", "hdiff")),
-    inkernel_kstep=False,
+    inkernel_kstep=True,
     pads_single_chip=True,
     packed_variants=("unfused", "per_field", "whole_state", "kstep"),
     resolve_tile=_hdiff_resolve_tile,
     build_shard_local=_hdiff_shard_local,
     pallas_calls=lambda variant, nf, k: {"unfused": 0, "per_field": nf,
-                                         "whole_state": 1, "kstep": k}[
+                                         "whole_state": 1, "kstep": 1}[
                                              variant],
     traffic=_hdiff_traffic,
+    kstep_vmem_check=_hdiff_kstep_vmem_check,
 ))
 _HDIFF_OP = dataclasses.replace(
-    _HDIFF_OP, exchange_model=_generic_exchange_model(_HDIFF_OP))
+    _HDIFF_OP, exchange_model=_generic_exchange_model(_HDIFF_OP),
+    apply_stage=_hdiff_apply_stage)
 register_stencil_op(_HDIFF_OP)
 
 _VADVC_OP = register_stencil_op(StencilOpDef(
@@ -690,5 +816,303 @@ _VADVC_OP = register_stencil_op(StencilOpDef(
     traffic=_vadvc_traffic,
 ))
 _VADVC_OP = dataclasses.replace(
-    _VADVC_OP, exchange_model=_generic_exchange_model(_VADVC_OP))
+    _VADVC_OP, exchange_model=_generic_exchange_model(_VADVC_OP),
+    apply_stage=_vadvc_apply_stage)
 register_stencil_op(_VADVC_OP)
+
+
+# ---------------------------------------------------------------------------
+# "vadvc_update" — the paper's ablation composition: vadvc + point-wise
+# leapfrog update (no hdiff)
+# ---------------------------------------------------------------------------
+
+
+def _vadvc_update_resolve_tile(variant, compute_grid, dtype, n_fields,
+                               ensemble, k):
+    if variant == "unfused":
+        return None
+    tj, ti = vadvc_ops.plan_tile(
+        _vadvc_fold_grid("whole_state", compute_grid, n_fields, ensemble),
+        dtype)
+    return tiling.TilePlan(op=autotune.get_op("vadvc_update"),
+                           grid_shape=tuple(int(g) for g in compute_grid),
+                           tile=(int(compute_grid[0]), tj, ti),
+                           dtype=str(jnp.dtype(dtype)))
+
+
+def _vadvc_update_shard_local(plan):
+    """Chip-local vadvc_update round: the vadvc lowering (ONE wcon
+    right-column ppermute, full-slab-valid stage tendencies) followed by
+    the resident point-wise update `f += dt * stage` — the composition
+    never round-trips the stage tendency through HBM between the solve
+    and the update."""
+    prog = plan.program
+    names, dt = prog.fields, prog.dt
+    variant, interp = plan.variant, plan.interpret
+    _, _, ax_x = plan.mesh_axes
+    py, px = plan.shards
+    (_, _ydepth, (wx_lo, wx_hi)), = plan.rides
+    wire = prog.exchange_dtype
+    tile = plan.tile_plan.tile if plan.tile_plan is not None else None
+
+    def local(fields, wcon, tens, stage_tens):
+        (wconp,) = _domain._exchange_packed([(wcon, (wx_lo, wx_hi))], ax_x,
+                                            px, dim=-1, wire_dtype=wire)
+        if variant == "unfused":
+            new_fields, new_stage = {}, {}
+            for n in names:
+                stage = jax.vmap(vadvc_ref.vadvc)(
+                    fields[n], wconp, fields[n], tens[n], stage_tens[n])
+                new_fields[n] = fields[n] + dt * stage
+                new_stage[n] = stage
+            return new_fields, new_stage
+        stk = lambda d: _dycore.stack_state(d, names)
+        fs = stk(fields)
+        ss = _vadvc_launch_whole_state(fs, wconp, stk(tens),
+                                       stk(stage_tens), tile, interp)
+        fs = fs + dt * ss
+        new_fields = {n: fs[:, i] for i, n in enumerate(names)}
+        new_stage = {n: ss[:, i] for i, n in enumerate(names)}
+        return new_fields, new_stage
+    return local
+
+
+def _vadvc_update_apply_stage(prog, names, interpret, use_ref):
+    """Full-slab vadvc_update stage: solve + resident point-wise update of
+    the bound fields; writes fields AND stage tendencies."""
+    dt = prog.dt
+
+    def fn(fields, wconp, tens, stage_tens):
+        new_fields, new_stage = dict(fields), dict(stage_tens)
+        if use_ref:
+            for n in names:
+                stage = jax.vmap(vadvc_ref.vadvc)(
+                    fields[n], wconp, fields[n], tens[n], stage_tens[n])
+                new_fields[n] = fields[n] + dt * stage
+                new_stage[n] = stage
+            return new_fields, new_stage
+        stk = lambda d: jnp.stack([d[n] for n in names], axis=1)
+        fs = stk(fields)
+        e, nb, nz, Y, X = fs.shape
+        tile = vadvc_ops.resolve_tile((nz, e * nb * Y, X), fs.dtype).tile
+        ss = _vadvc_launch_whole_state(fs, wconp, stk(tens),
+                                       stk(stage_tens), tile, interpret)
+        fs = fs + dt * ss
+        for i, n in enumerate(names):
+            new_fields[n] = fs[:, i]
+            new_stage[n] = ss[:, i]
+        return new_fields, new_stage
+    return fn
+
+
+def _vadvc_update_traffic(plan, model_ty):
+    prog = plan.program
+    nz, ny, nx = prog.grid_shape
+    if plan.tile_plan is not None:
+        _, tj, ti = plan.tile_plan.tile
+    else:
+        tj, ti = model_ty, nx
+    tile = (nz, tiling.snap_to_divisor(tj, ny, lo=1),
+            tiling.snap_to_divisor(ti, nx, lo=1))
+    return memmodel.stencil_op_traffic(
+        autotune.get_op("vadvc_update"), prog.grid_shape, prog.dtype,
+        n_fields=prog.n_fields, tile=tile, k_steps=plan.k_steps)
+
+
+_VADVC_UPDATE_OP = register_stencil_op(StencilOpDef(
+    name="vadvc_update",
+    title="vertical advection + fused point-wise update (no hdiff)",
+    reads=("fields", "wcon", "tens", "stage_tens"),
+    writes=("fields", "stage_tens"),
+    halo=0,
+    flops_per_point=tiling.VADVC_UPDATE.flops_per_point,
+    rides=(OperandRide("wcon", x_fixed=(0, 1)),),
+    variants=("unfused", "whole_state"),
+    tile_spaces=(("whole_state", "vadvc_update"),),
+    inkernel_kstep=False,
+    pads_single_chip=True,
+    packed_variants=("unfused", "whole_state"),
+    resolve_tile=_vadvc_update_resolve_tile,
+    build_shard_local=_vadvc_update_shard_local,
+    pallas_calls=lambda variant, nf, k: {"unfused": 0,
+                                         "whole_state": 1}[variant],
+    traffic=_vadvc_update_traffic,
+))
+_VADVC_UPDATE_OP = dataclasses.replace(
+    _VADVC_UPDATE_OP,
+    exchange_model=_generic_exchange_model(_VADVC_UPDATE_OP),
+    apply_stage=_vadvc_update_apply_stage)
+register_stencil_op(_VADVC_UPDATE_OP)
+
+
+# ---------------------------------------------------------------------------
+# "hadv_upwind" — first-order upwind horizontal advection (backward-only
+# reach: the registry's asymmetric-ride op)
+# ---------------------------------------------------------------------------
+
+
+def _hadv_resolve_tile(variant, compute_grid, dtype, n_fields, ensemble, k):
+    if variant == "unfused":
+        return None
+    return hadv_ops.resolve_tile(compute_grid, dtype)
+
+
+def _hadv_shard_local(plan):
+    """Chip-local hadv round: ONE packed exchange per direction at the
+    asymmetric (1, 0) depth — the donor cell only looks backward, so the
+    high sides ship NOTHING and `domain._exchange_packed` elides those
+    halves of the wire buffer.  With 1 shard the exchange degenerates to
+    periodic wrap-padding (the op is periodic, like hdiff programs)."""
+    prog = plan.program
+    names = prog.fields
+    cfl, variant, interp = prog.coeff, plan.variant, plan.interpret
+    ty = plan.tile_ty
+    _, ax_y, ax_x = plan.mesh_axes
+    py, px = plan.shards
+    (_, (hy_lo, hy_hi), (hx_lo, hx_hi)), = plan.rides
+    wire = prog.exchange_dtype
+
+    def local(fields, wcon, tens, stage_tens):
+        fs = _dycore.stack_state(fields, names)   # (e, nf, nz, ly, lx)
+        e, nf, nz, ly, lx = fs.shape
+        (fs,) = _domain._exchange_packed([(fs, (hy_lo, hy_hi))], ax_y, py,
+                                         dim=-2, wire_dtype=wire)
+        (fs,) = _domain._exchange_packed([(fs, (hx_lo, hx_hi))], ax_x, px,
+                                         dim=-1, wire_dtype=wire)
+        Y, X = fs.shape[-2:]
+        if variant == "unfused":
+            fs = hadv_ref.hadv_upwind(fs.reshape(-1, Y, X),
+                                      cfl=cfl).reshape(fs.shape)
+        else:
+            # The compute grid the planner tuned on is symmetrically
+            # padded; the actual slab only grows on the low sides — snap
+            # the window to it (the kernel is bitwise tile-invariant).
+            ty_l = tiling.snap_to_divisor(ty, Y, lo=1)
+            fs = hadv_pallas(fs.reshape(-1, Y, X), cfl=cfl, ty=ty_l,
+                             interpret=interp).reshape(fs.shape)
+        out = fs[..., hy_lo:hy_lo + ly, hx_lo:hx_lo + lx]
+        new_fields = {n: out[:, i] for i, n in enumerate(names)}
+        return new_fields, dict(stage_tens)
+    return local
+
+
+def _hadv_apply_stage(prog, names, interpret, use_ref):
+    """Full-slab upwind-advection stage for pipeline chaining."""
+    cfl = prog.coeff
+
+    def fn(fields, wconp, tens, stage_tens):
+        fs = jnp.stack([fields[n] for n in names], axis=1)
+        e, nb, nz, Y, X = fs.shape
+        if use_ref:
+            out = hadv_ref.hadv_upwind(fs.reshape(-1, Y, X), cfl=cfl)
+        else:
+            ty = hadv_ops.plan_tile((e * nb * nz, Y, X), fs.dtype)
+            out = hadv_pallas(fs.reshape(-1, Y, X), cfl=cfl, ty=ty,
+                              interpret=interpret)
+        out = out.reshape(fs.shape)
+        new_fields = dict(fields)
+        for i, n in enumerate(names):
+            new_fields[n] = out[:, i]
+        return new_fields, dict(stage_tens)
+    return fn
+
+
+def _hadv_traffic(plan, model_ty):
+    prog = plan.program
+    nz, ny, nx = prog.grid_shape
+    tile = (1, tiling.snap_to_divisor(model_ty, ny, lo=1), nx)
+    return memmodel.stencil_op_traffic(
+        autotune.get_op("hadv_upwind"), prog.grid_shape, prog.dtype,
+        n_fields=prog.n_fields, tile=tile, k_steps=plan.k_steps)
+
+
+_HADV_OP = register_stencil_op(StencilOpDef(
+    name="hadv_upwind",
+    title="upwind horizontal advection (donor cell, backward-only reach)",
+    reads=("fields",),
+    writes=("fields",),
+    halo=hadv_ops.HALO,
+    flops_per_point=tiling.HADV_UPWIND.flops_per_point,
+    rides=(OperandRide("fields", y=(hadv_ops.HALO, 0),
+                       x=(hadv_ops.HALO, 0), per_field=True),),
+    variants=("unfused", "whole_state"),
+    tile_spaces=(("whole_state", "hadv_upwind"),),
+    inkernel_kstep=False,
+    pads_single_chip=True,
+    packed_variants=("unfused", "whole_state"),
+    resolve_tile=_hadv_resolve_tile,
+    build_shard_local=_hadv_shard_local,
+    pallas_calls=lambda variant, nf, k: {"unfused": 0,
+                                         "whole_state": 1}[variant],
+    traffic=_hadv_traffic,
+))
+_HADV_OP = dataclasses.replace(
+    _HADV_OP, exchange_model=_generic_exchange_model(_HADV_OP),
+    apply_stage=_hadv_apply_stage)
+register_stencil_op(_HADV_OP)
+
+
+# ---------------------------------------------------------------------------
+# "asselin" — point-wise leapfrog time filter (zero rides, zero exchange)
+# ---------------------------------------------------------------------------
+
+
+def _asselin_shard_local(plan):
+    """Chip-local asselin round: pure point-wise jnp — no exchange at all
+    (the registry's zero-ride op; every direction is elided), no Pallas
+    launch (XLA fuses the three-operand FMA fine on its own)."""
+    prog = plan.program
+    names, coeff, dt = prog.fields, prog.coeff, prog.dt
+
+    def local(fields, wcon, tens, stage_tens):
+        new_fields = {n: fields[n] + coeff * dt * (tens[n] - stage_tens[n])
+                      for n in names}
+        return new_fields, dict(stage_tens)
+    return local
+
+
+def _asselin_apply_stage(prog, names, interpret, use_ref):
+    """Full-slab asselin stage: the same point-wise filter the solo
+    lowering runs (there is no kernel to dispatch either way)."""
+    coeff, dt = prog.coeff, prog.dt
+
+    def fn(fields, wconp, tens, stage_tens):
+        new_fields = dict(fields)
+        for n in names:
+            new_fields[n] = (fields[n]
+                             + coeff * dt * (tens[n] - stage_tens[n]))
+        return new_fields, dict(stage_tens)
+    return fn
+
+
+def _asselin_traffic(plan, model_ty):
+    prog = plan.program
+    nz, ny, nx = prog.grid_shape
+    tile = (1, tiling.snap_to_divisor(model_ty, ny, lo=1), nx)
+    return memmodel.stencil_op_traffic(
+        autotune.get_op("asselin"), prog.grid_shape, prog.dtype,
+        n_fields=prog.n_fields, tile=tile, k_steps=plan.k_steps)
+
+
+_ASSELIN_OP = register_stencil_op(StencilOpDef(
+    name="asselin",
+    title="leapfrog time filter from stored tendencies (point-wise)",
+    reads=("fields", "tens", "stage_tens"),
+    writes=("fields",),
+    halo=0,
+    flops_per_point=tiling.ASSELIN.flops_per_point,
+    rides=(),
+    variants=("unfused", "whole_state"),
+    tile_spaces=(),
+    inkernel_kstep=False,
+    pads_single_chip=False,
+    packed_variants=("unfused", "whole_state"),
+    resolve_tile=lambda variant, compute_grid, dtype, nf, e, k: None,
+    build_shard_local=_asselin_shard_local,
+    pallas_calls=lambda variant, nf, k: 0,
+    traffic=_asselin_traffic,
+))
+_ASSELIN_OP = dataclasses.replace(
+    _ASSELIN_OP, exchange_model=_generic_exchange_model(_ASSELIN_OP),
+    apply_stage=_asselin_apply_stage)
+register_stencil_op(_ASSELIN_OP)

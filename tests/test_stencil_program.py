@@ -163,13 +163,13 @@ def test_hdiff_plans_bit_match_reference():
 
 
 def test_hdiff_kstep_and_ragged_tail():
-    """hdiff k-step rounds (k launches on a k·2-deep wrap halo) equal k
-    sequential whole-state steps bit-for-bit, including the ragged tail
-    (5 steps on a k=2 plan = 2 rounds + a 1-step tail)."""
+    """hdiff k-step rounds (ONE in-kernel launch on a k·2-deep wrap halo)
+    equal k sequential whole-state steps bit-for-bit, including the ragged
+    tail (5 steps on a k=2 plan = 2 rounds + a 1-step tail)."""
     st = _state(seed=3)
     seq = _plan("hdiff", variant="whole_state")
     kplan = _plan("hdiff", variant="kstep", k_steps=2)
-    assert kplan.pallas_calls_per_round == 2         # one launch per local step
+    assert kplan.pallas_calls_per_round == 1         # in-kernel k-step round
     want = seq.run(st, 5)
     got = kplan.run(st, 5)
     for n in fields.PROGNOSTIC:
@@ -328,7 +328,7 @@ assert vrep["exchange_model"]["rounds_kstep"] == 1
 hrep = plans[("hdiff", "kstep")].report()
 assert hrep["collectives_per_round"] == 4
 assert hrep["exchange"]["rides"]["fields"]["depth_y"] == [4, 4]
-assert hrep["pallas_calls_per_round"] == 2     # k launches, ONE exchange
+assert hrep["pallas_calls_per_round"] == 1     # ONE launch, ONE exchange
 
 # per-op distributed results == single-chip oracles
 single = {op: compile(StencilProgram(grid_shape=grid, ensemble=2, op=op,
